@@ -1,0 +1,77 @@
+"""PSO × LM integration: the paper's optimizer tunes the training
+hyperparameters of an assigned-architecture LM (smoke scale on CPU).
+
+Each particle is (log10 lr, warmup fraction, weight decay); fitness is the
+negative loss of a short probe run on the synthetic pipeline. This is the
+black-box tuner from DESIGN.md §3 — at pod scale each probe is itself a
+distributed job and the swarm logic is unchanged.
+
+    PYTHONPATH=src python examples/tune_lm_hparams.py --arch stablelm-3b
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import PSOTuner, SearchDim
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import zoo
+
+
+def make_probe(arch: str, probe_steps: int = 8, batch: int = 4,
+               seq: int = 64):
+    cfg = get_arch(arch).smoke()
+    params0 = zoo.init_params(cfg, jax.random.key(0))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                  global_batch=batch, seed=7))
+    batches = [
+        {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        for i in range(probe_steps)
+    ]
+
+    def probe(hp) -> float:
+        step, opt_init = make_train_step(
+            cfg, base_lr=hp["lr"],
+            warmup=max(1, int(hp["warmup_frac"] * probe_steps)),
+            total_steps=probe_steps)
+        jstep = jax.jit(step)
+        params, opt = params0, opt_init(params0)
+        loss = None
+        for b in batches:
+            params, opt, m = jstep(params, opt, b)
+            loss = float(m["loss"])
+            if not jnp.isfinite(loss):
+                return -1e9               # diverged: worst fitness
+        return -loss                      # maximize −loss
+
+    return probe
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--particles", type=int, default=6)
+    ap.add_argument("--iters", type=int, default=4)
+    args = ap.parse_args()
+
+    dims = [
+        SearchDim("lr", 1e-5, 1e-2, log=True),
+        SearchDim("warmup_frac", 0.05, 0.5),
+        SearchDim("wd", 0.0, 0.1),
+    ]
+    tuner = PSOTuner(dims, particles=args.particles, seed=0)
+    probe = make_probe(args.arch)
+    result = tuner.run(probe, iters=args.iters,
+                       callback=lambda it, t: print(
+                           f"iter {it}: best probe loss "
+                           f"{-t.gbest_fit:.4f}"))
+    print(f"\nbest hyperparameters after {result.evaluations} probes:")
+    for k, v in result.best_params.items():
+        print(f"  {k} = {v:.5g}")
+    print(f"best probe loss = {-result.best_fitness:.4f}")
+
+
+if __name__ == "__main__":
+    main()

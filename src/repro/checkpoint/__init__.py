@@ -1,0 +1,3 @@
+from .checkpointer import latest_step, prune, restore, restore_latest, save
+
+__all__ = ["save", "restore", "restore_latest", "latest_step", "prune"]

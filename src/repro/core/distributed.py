@@ -1,0 +1,136 @@
+"""Multi-chip / multi-pod PSO: the paper's "future work: multi-GPU" built out
+to datacenter scale with shard_map.
+
+Design (DESIGN.md §3):
+  * Particles are sharded over the ("pod", "data") mesh axes. Each shard runs
+    the full per-particle pipeline (advance + fitness + pbest) locally using
+    the single-chip step variants — including the Pallas fused kernel when
+    enabled.
+  * The swarm-global best is the only cross-chip state. Synchronous mode
+    (``exchange_interval=1``) all-reduces a scalar ``(fit, argmax-owner)``
+    pair every iteration — the collective analogue of the paper's reduction
+    kernel, but already minimized to O(1) bytes (8 B) per chip per iteration.
+  * Island mode (``exchange_interval=K>1``) is the datacenter analogue of the
+    queue-lock idea: shards iterate *asynchronously* against a stale global
+    best and publish occasionally. One barrier per K iterations instead of
+    per iteration; stragglers only delay the rare exchange, not every step.
+  * gbest_pos (O(D) bytes) is broadcast from the winning shard only — via a
+    pmax-weighted select, so no gather of positions ever crosses the network
+    unless an improvement actually happened (the paper's §5.3 index trick at
+    cluster scale).
+
+Elasticity: ``init_sharded_swarm`` builds shard-local particles from global
+indices, so a checkpoint taken on 256 chips restores bit-identically on 64 or
+1024 (tests/test_distributed.py::test_elastic_reshard_equivalence).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .pso import PSOConfig, STEP_FNS, SwarmState, init_swarm
+
+Array = jnp.ndarray
+
+
+def swarm_pspec(particle_axes) -> SwarmState:
+    """PartitionSpecs for a SwarmState sharded over ``particle_axes``."""
+    pa = particle_axes
+    return SwarmState(
+        pos=P(pa, None), vel=P(pa, None), fit=P(pa),
+        pbest_pos=P(pa, None), pbest_fit=P(pa),
+        gbest_pos=P(None), gbest_fit=P(), iteration=P(), seed=P(),
+    )
+
+
+def init_sharded_swarm(cfg: PSOConfig, seed: int, mesh: Mesh,
+                       particle_axes=("data",)) -> SwarmState:
+    """Initialize a swarm laid out over ``mesh`` without materializing it
+    densely on one host: each shard constructs only its own slice via the
+    counter RNG (index_offset), then the arrays are device_put with the
+    swarm sharding."""
+    cfg = cfg.resolved()
+    axes = (particle_axes,) if isinstance(particle_axes, str) else tuple(particle_axes)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    if cfg.particle_cnt % n_shards:
+        raise ValueError(
+            f"particle_cnt={cfg.particle_cnt} not divisible by {n_shards} shards")
+
+    def per_shard():
+        # Runs under shard_map: build the local slice from global indices.
+        shard_id = jax.lax.axis_index(axes)
+        local_n = cfg.particle_cnt // n_shards
+        local = init_swarm(cfg, seed, n=local_n,
+                           index_offset=shard_id * local_n)
+        # Reconcile the global best across shards.
+        gfit, gpos = _pmax_best(local.gbest_fit, local.gbest_pos, axes)
+        return local._replace(gbest_fit=gfit, gbest_pos=gpos)
+
+    specs = swarm_pspec(axes if len(axes) > 1 else axes[0])
+    fn = jax.shard_map(per_shard, mesh=mesh, in_specs=(), out_specs=specs,
+                       check_vma=False)
+    return jax.jit(fn)()
+
+
+def _pmax_best(fit: Array, pos: Array, axes) -> Tuple[Array, Array]:
+    """All-reduce a (scalar fit, D-dim pos) pair to the global argmax.
+
+    Communicates the scalar twice (max + masked-sum for tie-broken ownership)
+    and the position once, only from the winner — O(D) total, not O(N·D).
+    """
+    gfit = jax.lax.pmax(fit, axes)
+    me = jax.lax.axis_index(axes)
+    # Tie-break: lowest shard index that achieves the max owns the broadcast.
+    winner = jax.lax.pmin(jnp.where(fit >= gfit, me, jnp.iinfo(jnp.int32).max),
+                          axes)
+    contrib = jnp.where(me == winner, pos, jnp.zeros_like(pos))
+    gpos = jax.lax.psum(contrib, axes)
+    return gfit, gpos
+
+
+def make_distributed_run(cfg: PSOConfig, mesh: Mesh, iters: int,
+                         variant: str = "queue",
+                         exchange_interval: int = 1,
+                         particle_axes=("data",),
+                         local_step_fn=None):
+    """Build a jitted ``run(state) -> state`` over the mesh.
+
+    exchange_interval=1  → synchronous PPSO (reduction-equivalent semantics).
+    exchange_interval=K  → island mode: K local iterations per global
+                           exchange (queue-lock analogue at scale).
+    ``local_step_fn(cfg, state) -> state`` overrides the shard-local step
+    (e.g. the Pallas fused kernel from repro.kernels.ops).
+    """
+    cfg = cfg.resolved()
+    axes = (particle_axes,) if isinstance(particle_axes, str) else tuple(particle_axes)
+    step = local_step_fn if local_step_fn is not None else STEP_FNS[variant]
+    if iters % exchange_interval:
+        raise ValueError("iters must be a multiple of exchange_interval")
+    rounds = iters // exchange_interval
+
+    def shard_body(state: SwarmState) -> SwarmState:
+        def one_round(_, s):
+            # K purely-local iterations against the (possibly stale) gbest.
+            s = jax.lax.fori_loop(0, exchange_interval,
+                                  lambda _, t: step(cfg, t), s)
+            # Occasional serialized publication — the "lock" collective.
+            gfit, gpos = _pmax_best(s.gbest_fit, s.gbest_pos, axes)
+            return s._replace(gbest_fit=gfit, gbest_pos=gpos)
+
+        return jax.lax.fori_loop(0, rounds, one_round, state)
+
+    specs = swarm_pspec(axes if len(axes) > 1 else axes[0])
+    fn = jax.shard_map(shard_body, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                       check_vma=False)
+    return jax.jit(fn)
+
+
+def gather_swarm(state: SwarmState) -> SwarmState:
+    """Fetch a fully-replicated host copy (for checkpointing / inspection)."""
+    return jax.tree.map(lambda x: jax.device_get(x), state)

@@ -1,0 +1,86 @@
+"""Benchmark fitness functions for PSO.
+
+The paper (§6.1, Eq. 3) uses the Cubic function and a *maximization*
+convention ("if fit_i > pbest_fit_i then update"): larger fitness is better.
+All functions here follow that convention; classical minimization benchmarks
+(sphere, rosenbrock, ...) are negated so that every landscape is maximized.
+
+Every function maps ``pos[..., D] -> fit[...]`` and is pure jnp so it can be
+used inside jit, grad (not needed for PSO, but free), shard_map and the
+Pallas reference oracle. ``FITNESS_FNS`` is the registry used by configs and
+the benchmark harness; ``FITNESS_IDS`` gives each function a stable integer
+id so the Pallas kernel can select it at trace time.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def cubic(pos: Array) -> Array:
+    """Paper Eq. 3: f = sum_i x_i^3 - 0.8 x_i^2 - 1000 x_i + 8000 (maximize)."""
+    x = pos
+    return jnp.sum(x * x * x - 0.8 * (x * x) - 1000.0 * x + 8000.0, axis=-1)
+
+
+def sphere(pos: Array) -> Array:
+    """Negated sphere: max at origin, f(0) = 0."""
+    return -jnp.sum(pos * pos, axis=-1)
+
+
+def rosenbrock(pos: Array) -> Array:
+    """Negated Rosenbrock (D >= 2; for D == 1 degenerates to -(1-x)^2)."""
+    x = pos
+    if x.shape[-1] == 1:
+        return -jnp.squeeze((1.0 - x) ** 2, axis=-1)
+    a, b = x[..., :-1], x[..., 1:]
+    return -jnp.sum(100.0 * (b - a * a) ** 2 + (1.0 - a) ** 2, axis=-1)
+
+
+def griewank(pos: Array) -> Array:
+    x = pos
+    d = x.shape[-1]
+    idx = jnp.arange(1, d + 1, dtype=x.dtype)
+    s = jnp.sum(x * x, axis=-1) / 4000.0
+    p = jnp.prod(jnp.cos(x / jnp.sqrt(idx)), axis=-1)
+    return -(s - p + 1.0)
+
+
+def rastrigin(pos: Array) -> Array:
+    x = pos
+    d = x.shape[-1]
+    return -(10.0 * d + jnp.sum(x * x - 10.0 * jnp.cos(2.0 * jnp.pi * x), axis=-1))
+
+
+def ackley(pos: Array) -> Array:
+    x = pos
+    d = x.shape[-1]
+    s1 = jnp.sqrt(jnp.sum(x * x, axis=-1) / d)
+    s2 = jnp.sum(jnp.cos(2.0 * jnp.pi * x), axis=-1) / d
+    return -(-20.0 * jnp.exp(-0.2 * s1) - jnp.exp(s2) + 20.0 + jnp.e)
+
+
+FITNESS_FNS: Dict[str, Callable[[Array], Array]] = {
+    "cubic": cubic,
+    "sphere": sphere,
+    "rosenbrock": rosenbrock,
+    "griewank": griewank,
+    "rastrigin": rastrigin,
+    "ackley": ackley,
+}
+
+# Stable integer ids for kernel-side selection (compile-time static).
+FITNESS_IDS: Dict[str, int] = {name: i for i, name in enumerate(FITNESS_FNS)}
+
+# Search-domain defaults per function (paper: cubic on [-100, 100]).
+DEFAULT_BOUNDS: Dict[str, tuple] = {
+    "cubic": (-100.0, 100.0),
+    "sphere": (-100.0, 100.0),
+    "rosenbrock": (-30.0, 30.0),
+    "griewank": (-600.0, 600.0),
+    "rastrigin": (-5.12, 5.12),
+    "ackley": (-32.0, 32.0),
+}

@@ -1,0 +1,248 @@
+"""Parallel PSO (PPSO) in JAX: state, config, and the three aggregation
+variants from the paper, expressed TPU-natively.
+
+Variants (paper §3.2, §4):
+  * ``step_reduction``  — state of the art the paper compares against: an
+    unconditional full argmax reduction over all particles every iteration.
+  * ``step_queue``      — the paper's queue algorithm, adapted: the swarm-wide
+    reduction is *predicated* on ``any(fit > gbest_fit)``. Because improvement
+    is rare (<0.1 % of iterations at steady state, §4.1), the expensive
+    argmax + D-dim position gather is skipped almost always; only a cheap
+    vectorized compare + ``any`` runs unconditionally.
+  * ``step_queue_lock`` — the fused variant. At the library level the fusion
+    (removing the second kernel) is realized by the Pallas kernel in
+    ``repro.kernels``; the jnp fallback here additionally fuses the pbest and
+    gbest conditionals into a single predicated block so that XLA emits one
+    conditional region instead of two.
+
+Semantics note: all parallel variants are *synchronous* PPSO — every particle
+sees the gbest of the previous iteration (the paper's Fig. 1 workflow). The
+sequential SPSO (Alg. 1), where gbest updates mid-iteration, lives in
+``repro.core.serial`` and is used as the CPU baseline and semantic oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import rng
+from .fitness import DEFAULT_BOUNDS, FITNESS_FNS
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class PSOConfig:
+    """Static PSO problem configuration (paper Table 1)."""
+
+    dim: int = 1
+    particle_cnt: int = 1024
+    w: float = 1.0          # inertia (paper §6.1: w = 1)
+    c1: float = 2.0         # cognitive coefficient
+    c2: float = 2.0         # social coefficient
+    fitness: str = "cubic"
+    min_pos: Optional[float] = None   # default: fitness-specific domain
+    max_pos: Optional[float] = None
+    max_v: Optional[float] = None     # default: half the position range
+    dtype: str = "float32"
+
+    def resolved(self) -> "PSOConfig":
+        lo, hi = DEFAULT_BOUNDS[self.fitness]
+        min_pos = lo if self.min_pos is None else self.min_pos
+        max_pos = hi if self.max_pos is None else self.max_pos
+        max_v = 0.5 * (max_pos - min_pos) if self.max_v is None else self.max_v
+        return dataclasses.replace(self, min_pos=min_pos, max_pos=max_pos, max_v=max_v)
+
+    @property
+    def fitness_fn(self) -> Callable[[Array], Array]:
+        return FITNESS_FNS[self.fitness]
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+class SwarmState(NamedTuple):
+    """Full swarm state — everything needed to checkpoint/resume/reshard."""
+
+    pos: Array        # [N, D]
+    vel: Array        # [N, D]
+    fit: Array        # [N]
+    pbest_pos: Array  # [N, D]
+    pbest_fit: Array  # [N]
+    gbest_pos: Array  # [D]
+    gbest_fit: Array  # []
+    iteration: Array  # [] int32 — RNG counter component
+    seed: Array       # [] uint32
+
+
+# RNG stream ids (keep in sync with kernels/pso_step.py).
+STREAM_INIT_POS = 0
+STREAM_INIT_VEL = 1
+STREAM_R1 = 2
+STREAM_R2 = 3
+
+
+def init_swarm(cfg: PSOConfig, seed: int, n: Optional[int] = None,
+               index_offset: int = 0) -> SwarmState:
+    """Initialize a swarm (paper Alg. 1 step 1).
+
+    ``n``/``index_offset`` support sharded construction: a shard owning
+    particles [off, off+n) builds exactly the same particles as the
+    corresponding slice of a monolithic swarm (elastic resharding invariant,
+    tested in tests/test_distributed.py).
+    """
+    cfg = cfg.resolved()
+    n = cfg.particle_cnt if n is None else n
+    d = cfg.dim
+    dt = cfg.jnp_dtype
+    idx = (jnp.arange(n * d, dtype=jnp.uint32).reshape(n, d)
+           + jnp.uint32(index_offset * d))
+    u_pos = rng.uniform(seed, 0, STREAM_INIT_POS, idx, dtype=dt)
+    u_vel = rng.uniform(seed, 0, STREAM_INIT_VEL, idx, dtype=dt)
+    span = cfg.max_pos - cfg.min_pos
+    pos = cfg.min_pos + span * u_pos
+    vel = -cfg.max_v + 2.0 * cfg.max_v * u_vel
+    fit = cfg.fitness_fn(pos)
+    best = jnp.argmax(fit)
+    return SwarmState(
+        pos=pos, vel=vel, fit=fit,
+        pbest_pos=pos, pbest_fit=fit,
+        gbest_pos=pos[best], gbest_fit=fit[best],
+        iteration=jnp.zeros((), jnp.int32),
+        seed=jnp.asarray(seed, jnp.uint32),
+    )
+
+
+def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0
+             ) -> Tuple[Array, Array, Array]:
+    """Steps 2–3 of Alg. 1: velocity/position update + fitness, vectorized.
+
+    Returns (pos, vel, fit) for iteration ``s.iteration + 1``.
+    """
+    n, d = s.pos.shape
+    dt = s.pos.dtype
+    it = s.iteration + 1
+    idx = (jnp.arange(n * d, dtype=jnp.uint32).reshape(n, d)
+           + jnp.uint32(index_offset * d))
+    r1 = rng.uniform(s.seed, it, STREAM_R1, idx, dtype=dt)
+    r2 = rng.uniform(s.seed, it, STREAM_R2, idx, dtype=dt)
+    vel = (cfg.w * s.vel
+           + cfg.c1 * r1 * (s.pbest_pos - s.pos)
+           + cfg.c2 * r2 * (s.gbest_pos[None, :] - s.pos))
+    vel = jnp.clip(vel, -cfg.max_v, cfg.max_v)
+    pos = jnp.clip(s.pos + vel, cfg.min_pos, cfg.max_pos)
+    fit = cfg.fitness_fn(pos)
+    return pos, vel, fit
+
+
+def _update_pbest(s: SwarmState, pos: Array, fit: Array) -> Tuple[Array, Array]:
+    improved = fit > s.pbest_fit
+    pbest_fit = jnp.where(improved, fit, s.pbest_fit)
+    pbest_pos = jnp.where(improved[:, None], pos, s.pbest_pos)
+    return pbest_pos, pbest_fit
+
+
+def step_reduction(cfg: PSOConfig, s: SwarmState) -> SwarmState:
+    """Baseline: unconditional full argmax reduction (paper §3.2)."""
+    pos, vel, fit = _advance(cfg, s)
+    pbest_pos, pbest_fit = _update_pbest(s, pos, fit)
+    best = jnp.argmax(pbest_fit)                      # O(N) reduction, always
+    cand_fit = pbest_fit[best]
+    cand_pos = pbest_pos[best]                        # O(D) gather, always
+    take = cand_fit > s.gbest_fit
+    gbest_fit = jnp.where(take, cand_fit, s.gbest_fit)
+    gbest_pos = jnp.where(take, cand_pos, s.gbest_pos)
+    return s._replace(pos=pos, vel=vel, fit=fit, pbest_pos=pbest_pos,
+                      pbest_fit=pbest_fit, gbest_pos=gbest_pos,
+                      gbest_fit=gbest_fit, iteration=s.iteration + 1)
+
+
+def step_queue(cfg: PSOConfig, s: SwarmState) -> SwarmState:
+    """Queue algorithm (paper §4.1), TPU adaptation.
+
+    The shared-memory queue + atomicAdd degenerates on a SIMD core into a
+    *mask*: ``improved = fit > gbest_fit`` is the queue membership, and the
+    argmax over improved lanes is thread-0's scan. The paper's win — skipping
+    memory traffic when the queue is empty — maps to predicating the argmax +
+    gather on the cheap scalar ``any(improved)``.
+    """
+    pos, vel, fit = _advance(cfg, s)
+    pbest_pos, pbest_fit = _update_pbest(s, pos, fit)
+    improved = fit > s.gbest_fit                      # cheap vector compare
+    any_improved = jnp.any(improved)                  # scalar "queue non-empty"
+
+    def publish(operand):
+        fit_, pos_, gf, gp = operand
+        best = jnp.argmax(jnp.where(improved, fit_, -jnp.inf))
+        return fit_[best], pos_[best]
+
+    def skip(operand):
+        _, _, gf, gp = operand
+        return gf, gp
+
+    gbest_fit, gbest_pos = jax.lax.cond(
+        any_improved, publish, skip, (fit, pos, s.gbest_fit, s.gbest_pos))
+    return s._replace(pos=pos, vel=vel, fit=fit, pbest_pos=pbest_pos,
+                      pbest_fit=pbest_fit, gbest_pos=gbest_pos,
+                      gbest_fit=gbest_fit, iteration=s.iteration + 1)
+
+
+def step_queue_lock(cfg: PSOConfig, s: SwarmState) -> SwarmState:
+    """Queue-lock (paper §4.2) jnp fallback: single fused predicated region.
+
+    The real fusion win (one pallas_call spanning all iterations with gbest
+    carried in SMEM — the TPU analogue of removing the 2nd kernel and the
+    spin-lock) is ``repro.kernels.ops.run_queue_lock_fused``; this function
+    keeps identical semantics for non-kernel paths and additionally folds the
+    pbest-position write under the same rare-improvement predicate.
+    """
+    pos, vel, fit = _advance(cfg, s)
+    p_improved = fit > s.pbest_fit
+    pbest_fit = jnp.where(p_improved, fit, s.pbest_fit)
+    any_p = jnp.any(p_improved)
+
+    def publish(operand):
+        pbp, gf, gp = operand
+        pbest_pos = jnp.where(p_improved[:, None], pos, pbp)   # rare O(N·D) write
+        best = jnp.argmax(pbest_fit)
+        take = pbest_fit[best] > gf
+        return (pbest_pos,
+                jnp.where(take, pbest_fit[best], gf),
+                jnp.where(take, pbest_pos[best], gp))
+
+    def skip(operand):
+        return operand
+
+    pbest_pos, gbest_fit, gbest_pos = jax.lax.cond(
+        any_p, publish, skip, (s.pbest_pos, s.gbest_fit, s.gbest_pos))
+    return s._replace(pos=pos, vel=vel, fit=fit, pbest_pos=pbest_pos,
+                      pbest_fit=pbest_fit, gbest_pos=gbest_pos,
+                      gbest_fit=gbest_fit, iteration=s.iteration + 1)
+
+
+STEP_FNS = {
+    "reduction": step_reduction,
+    "queue": step_queue,
+    "queue_lock": step_queue_lock,
+}
+
+
+@partial(jax.jit, static_argnames=("cfg", "iters", "variant"))
+def run(cfg: PSOConfig, state: SwarmState, iters: int,
+        variant: str = "queue") -> SwarmState:
+    """Run ``iters`` PSO iterations with the chosen aggregation variant."""
+    cfg = cfg.resolved()
+    step = STEP_FNS[variant]
+    return jax.lax.fori_loop(0, iters, lambda _, s: step(cfg, s), state)
+
+
+def solve(cfg: PSOConfig, seed: int = 0, iters: int = 1000,
+          variant: str = "queue") -> SwarmState:
+    """Convenience one-shot: init + run."""
+    cfg = cfg.resolved()
+    return run(cfg, init_swarm(cfg, seed), iters, variant)

@@ -1,0 +1,116 @@
+"""PSO as a black-box (hyperparameter) tuner — the first-class integration of
+the paper's technique with the LM training substrate (DESIGN.md §3).
+
+A particle is a point in a box-constrained search space (e.g. log-lr, warmup
+fraction, weight decay). Fitness is any callable ``params -> score`` (higher
+is better), typically "−validation loss after a short probe run" produced by
+``repro.launch.train.make_probe_fitness``. The swarm logic reuses the exact
+step variants from ``repro.core.pso``; evaluations are batched over the
+population so the underlying train substrate can vmap/pmap them when cheap,
+or loop when each evaluation is itself a distributed job.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .pso import PSOConfig
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchDim:
+    """One tunable hyperparameter."""
+    name: str
+    low: float
+    high: float
+    log: bool = False     # search in log10 space
+
+    def to_user(self, unit: Array) -> Array:
+        """unit in [0,1] -> user-space value."""
+        if self.log:
+            lo, hi = np.log10(self.low), np.log10(self.high)
+            return 10.0 ** (lo + unit * (hi - lo))
+        return self.low + unit * (self.high - self.low)
+
+
+@dataclasses.dataclass
+class TunerResult:
+    best_params: Dict[str, float]
+    best_fitness: float
+    history: List[Tuple[int, float]]          # (iteration, gbest_fit)
+    evaluations: int
+
+
+class PSOTuner:
+    """Synchronous-population PSO over a hyperparameter box.
+
+    Runs the swarm dynamics in unit space [0,1]^D (numpy: population sizes
+    here are tens, not millions — device execution buys nothing and keeps the
+    expensive fitness evaluations, which ARE device jobs, the only hot path).
+    Matches paper Alg. 1 with synchronous gbest and the queue-style
+    "skip aggregation when nothing improved" predicate.
+    """
+
+    def __init__(self, dims: Sequence[SearchDim], particles: int = 16,
+                 w: float = 0.7, c1: float = 1.5, c2: float = 1.5,
+                 seed: int = 0):
+        self.dims = list(dims)
+        self.n = particles
+        self.w, self.c1, self.c2 = w, c1, c2
+        self.rng = np.random.default_rng(seed)
+        d = len(self.dims)
+        self.pos = self.rng.uniform(size=(particles, d))
+        self.vel = self.rng.uniform(-0.25, 0.25, size=(particles, d))
+        self.pbest_pos = self.pos.copy()
+        self.pbest_fit = np.full(particles, -np.inf)
+        self.gbest_pos = self.pos[0].copy()
+        self.gbest_fit = -np.inf
+        self.evaluations = 0
+
+    def _decode(self, unit_row: Array) -> Dict[str, float]:
+        return {d.name: float(d.to_user(unit_row[i]))
+                for i, d in enumerate(self.dims)}
+
+    def ask(self) -> List[Dict[str, float]]:
+        """Current population in user space (for external batch evaluation)."""
+        return [self._decode(self.pos[i]) for i in range(self.n)]
+
+    def tell(self, fits: Sequence[float]) -> None:
+        """Report fitness for the population returned by the last ask()."""
+        fits = np.asarray(fits, dtype=np.float64)
+        self.evaluations += len(fits)
+        improved = fits > self.pbest_fit
+        self.pbest_fit = np.where(improved, fits, self.pbest_fit)
+        self.pbest_pos = np.where(improved[:, None], self.pos, self.pbest_pos)
+        if np.any(fits > self.gbest_fit):          # queue predicate
+            b = int(np.argmax(fits))
+            self.gbest_fit = float(fits[b])
+            self.gbest_pos = self.pos[b].copy()
+        # Advance the swarm.
+        d = len(self.dims)
+        r1 = self.rng.uniform(size=(self.n, d))
+        r2 = self.rng.uniform(size=(self.n, d))
+        self.vel = (self.w * self.vel
+                    + self.c1 * r1 * (self.pbest_pos - self.pos)
+                    + self.c2 * r2 * (self.gbest_pos[None] - self.pos))
+        np.clip(self.vel, -0.5, 0.5, out=self.vel)
+        self.pos = np.clip(self.pos + self.vel, 0.0, 1.0)
+
+    def run(self, fitness: Callable[[Dict[str, float]], float],
+            iters: int = 10,
+            callback: Optional[Callable[[int, "PSOTuner"], None]] = None
+            ) -> TunerResult:
+        history: List[Tuple[int, float]] = []
+        for it in range(iters):
+            fits = [fitness(p) for p in self.ask()]
+            self.tell(fits)
+            history.append((it, self.gbest_fit))
+            if callback:
+                callback(it, self)
+        return TunerResult(best_params=self._decode(self.gbest_pos),
+                           best_fitness=self.gbest_fit,
+                           history=history, evaluations=self.evaluations)

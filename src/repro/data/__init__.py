@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, MemmapCorpus, SyntheticLM, write_corpus
+
+__all__ = ["DataConfig", "MemmapCorpus", "SyntheticLM", "write_corpus"]

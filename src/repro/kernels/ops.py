@@ -1,0 +1,131 @@
+"""Jitted public wrappers around the Pallas cuPSO kernels.
+
+Handles layout packing ([N, D] particle-major library layout ↔ [Dpad, N]
+D-major kernel layout), block-size selection, the queue algorithm's tiny
+cross-block second stage, and SwarmState plumbing so kernels are drop-in
+replacements for the ``repro.core.pso`` step functions.
+
+``interpret`` defaults to True: this container is CPU-only and the kernels
+TARGET TPU; on a real TPU pass interpret=False (the pallas_calls carry
+TPU-valid BlockSpecs, dtypes and memory spaces).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pso import PSOConfig, SwarmState
+from .pso_step import fused_call, pad_dim, queue_step_call, LANE
+
+
+def pick_block_n(n: int, target: int = 512) -> int:
+    """Largest divisor of n that is ≤ target and lane-aligned if possible."""
+    best = n
+    for bn in range(min(n, target), 0, -1):
+        if n % bn == 0:
+            if bn % LANE == 0:
+                return bn
+            best = min(best, bn) if best == n else best
+    for bn in range(min(n, target), 0, -1):  # fall back: any divisor
+        if n % bn == 0:
+            return bn
+    return n
+
+
+def pack_dmajor(pos, d: int):
+    """[N, D] -> [Dpad, N] (zero-padded sublanes)."""
+    n = pos.shape[0]
+    dpad = pad_dim(d)
+    out = jnp.zeros((dpad, n), pos.dtype)
+    return out.at[:d, :].set(pos.T)
+
+
+def unpack_dmajor(arr, d: int):
+    """[Dpad, N] -> [N, D]."""
+    return arr[:d, :].T
+
+
+def _cfg_kwargs(cfg: PSOConfig):
+    cfg = cfg.resolved()
+    return dict(w=cfg.w, c1=cfg.c1, c2=cfg.c2, min_pos=cfg.min_pos,
+                max_pos=cfg.max_pos, max_v=cfg.max_v, fitness=cfg.fitness)
+
+
+def state_to_kernel(s: SwarmState, d: int):
+    """SwarmState -> packed kernel operands."""
+    scal = jnp.stack([s.seed.astype(jnp.int32),
+                      s.iteration.astype(jnp.int32)])
+    return (scal,
+            pack_dmajor(s.pos, d), pack_dmajor(s.vel, d),
+            pack_dmajor(s.pbest_pos, d), s.pbest_fit[None, :],
+            pack_dmajor(s.gbest_pos[None, :], d), s.gbest_fit[None])
+
+
+def kernel_to_state(s: SwarmState, d: int, pos, vel, pbp, pbf, gp, gf,
+                    iters: int) -> SwarmState:
+    return s._replace(
+        pos=unpack_dmajor(pos, d), vel=unpack_dmajor(vel, d),
+        fit=pbf[0],  # NOTE: kernels do not retain raw fit; pbest_fit ≥ fit
+        pbest_pos=unpack_dmajor(pbp, d), pbest_fit=pbf[0],
+        gbest_pos=gp[:d, 0], gbest_fit=gf[0],
+        iteration=s.iteration + iters)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "block_n", "interpret"))
+def queue_step(cfg: PSOConfig, s: SwarmState, block_n: Optional[int] = None,
+               interpret: bool = True) -> SwarmState:
+    """One PSO iteration via the queue kernel + jnp cross-block epilogue.
+
+    Semantics match ``repro.core.pso.step_queue`` (stale-gbest comparison).
+    """
+    cfg = cfg.resolved()
+    n, d = s.pos.shape
+    bn = block_n or pick_block_n(n)
+    scal, pos, vel, pbp, pbf, gp, gf = state_to_kernel(s, d)
+    call = queue_step_call(n, d, bn, s.pos.dtype, interpret=interpret,
+                           **_cfg_kwargs(cfg))
+    pos, vel, pbp, pbf, aux_fit, aux_idx = call(
+        scal, gp, gf, pos, vel, pbp, pbf)
+    # --- 2nd kernel (paper Fig. 1), shrunk to an O(nblocks) jnp epilogue.
+    wb = jnp.argmax(aux_fit)
+    cand_fit = aux_fit[wb]
+    take = cand_fit > s.gbest_fit
+    cand_pos = jax.lax.dynamic_index_in_dim(  # §5.3: gather pos by index once
+        pos, aux_idx[wb], axis=1, keepdims=True)
+    gp = jnp.where(take, cand_pos, gp)
+    gf = jnp.where(take, cand_fit[None], gf)
+    return kernel_to_state(s, d, pos, vel, pbp, pbf, gp, gf, 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "iters", "block_n", "interpret"))
+def run_queue_lock_fused(cfg: PSOConfig, s: SwarmState, iters: int,
+                         block_n: Optional[int] = None,
+                         interpret: bool = True) -> SwarmState:
+    """``iters`` iterations in ONE pallas_call (fused queue-lock, §4.2+).
+
+    On TPU this is the roofline-relevant path: state stays resident, the
+    global best is published in-kernel under sequential-grid serialization,
+    and there are zero kernel launches or HBM round-trips per iteration.
+    """
+    cfg = cfg.resolved()
+    n, d = s.pos.shape
+    bn = block_n or pick_block_n(n)
+    scal, pos, vel, pbp, pbf, gp, gf = state_to_kernel(s, d)
+    call = fused_call(n, d, iters, bn, s.pos.dtype, interpret=interpret,
+                      **_cfg_kwargs(cfg))
+    pos, vel, pbp, pbf, gp, gf = call(scal, pos, vel, pbp, pbf, gp, gf)
+    return kernel_to_state(s, d, pos, vel, pbp, pbf, gp, gf, iters)
+
+
+def make_fused_local_step(iters_per_call: int = 1, block_n=None,
+                          interpret: bool = True):
+    """Adapter: fused kernel as a ``local_step_fn`` for distributed swarms."""
+    def step(cfg: PSOConfig, s: SwarmState) -> SwarmState:
+        return run_queue_lock_fused(cfg, s, iters_per_call,
+                                    block_n=block_n, interpret=interpret)
+    return step

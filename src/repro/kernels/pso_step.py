@@ -1,0 +1,287 @@
+"""Pallas TPU kernels for cuPSO (DESIGN.md §2).
+
+Layout — SoA, D-major (the paper's §5.1 coalescing rule, translated):
+arrays are ``[Dpad, N]`` with the *particle* index on the 128-wide lane
+dimension and the problem dimension on sublanes (padded to a multiple of 8).
+A VPU lane plays the role of a CUDA thread: all lanes touch consecutive
+particles of the same dimension — Fig. 2 of the paper, verbatim, in TPU tile
+terms. For D=1 this packs 16× denser than a dim-on-lanes layout.
+
+Two kernels:
+
+``queue`` (single iteration, grid = particle blocks)
+    The paper's §4.1 two-kernel structure. Kernel 1 advances particles,
+    evaluates fitness, updates pbest, and publishes a per-block
+    ``(aux_fit, aux_idx)`` candidate — computed as a *masked* max over only
+    the lanes that improve on the stale gbest (the SIMD degeneration of the
+    shared-memory queue: membership mask == queue, one vectorized max ==
+    thread-0's scan). The "2nd kernel" (cross-block argmax + conditional
+    gbest update) is a tiny jnp epilogue in ``ops.py`` operating on
+    ``nblocks`` scalars. Only the particle *index* is published, never the
+    D-dim position (paper §5.3): the position is gathered once, after the
+    cross-block winner is known.
+
+``fused`` (queue-lock, grid = (iterations, particle blocks))
+    The paper's §4.2 fusion, strengthened: ONE ``pallas_call`` spans *all*
+    iterations. The global best lives in output buffers whose block index is
+    constant across the grid, so (a) on TPU they are fetched/flushed once,
+    not per step, and (b) sequential grid execution serializes every block's
+    conditional publication — the atomicCAS spin-lock costs literally
+    nothing. State arrays are input/output-aliased, so the swarm never
+    round-trips to HBM between iterations when the block count is 1.
+    Semantics: block b at iteration t sees the gbest already updated by
+    blocks 0..b-1 of iteration t (fresher than synchronous PPSO; mirrored
+    exactly by ``ref.run_fused_oracle``).
+
+Validated in ``interpret=True`` mode against ``ref.py`` (same counter RNG ⇒
+bit-exact trajectories) over shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import rng
+from repro.core.pso import STREAM_R1, STREAM_R2
+
+SUBLANE = 8
+LANE = 128
+_BIG_I32 = np.int32(2 ** 30)
+
+
+def pad_dim(d: int) -> int:
+    return max(SUBLANE, -(-d // SUBLANE) * SUBLANE)
+
+
+# --------------------------------------------------------------------------
+# In-kernel fitness (D-major layout): pos [Dpad, bn] -> fit [1, bn].
+# Padded sublanes are masked. Must match repro.core.fitness row-for-row.
+# --------------------------------------------------------------------------
+
+def _fitness_dmajor(name: str, pos, dmask, d_real: int):
+    zero = jnp.zeros_like(pos)
+    if name == "cubic":
+        v = pos * pos * pos - 0.8 * (pos * pos) - 1000.0 * pos + 8000.0
+        return jnp.sum(jnp.where(dmask, v, zero), axis=0, keepdims=True)
+    if name == "sphere":
+        return -jnp.sum(jnp.where(dmask, pos * pos, zero), axis=0, keepdims=True)
+    if name == "rastrigin":
+        v = pos * pos - 10.0 * jnp.cos(2.0 * jnp.pi * pos)
+        s = jnp.sum(jnp.where(dmask, v, zero), axis=0, keepdims=True)
+        return -(10.0 * d_real + s)
+    if name == "griewank":
+        dsub = lax.broadcasted_iota(jnp.float32, pos.shape, 0) + 1.0
+        s = jnp.sum(jnp.where(dmask, pos * pos, zero), axis=0, keepdims=True) / 4000.0
+        c = jnp.cos(pos / jnp.sqrt(dsub))
+        p = jnp.prod(jnp.where(dmask, c, jnp.ones_like(c)), axis=0, keepdims=True)
+        return -(s - p + 1.0)
+    if name == "ackley":
+        s1 = jnp.sqrt(jnp.sum(jnp.where(dmask, pos * pos, zero), axis=0,
+                              keepdims=True) / d_real)
+        c = jnp.cos(2.0 * jnp.pi * pos)
+        s2 = jnp.sum(jnp.where(dmask, c, zero), axis=0, keepdims=True) / d_real
+        return -(-20.0 * jnp.exp(-0.2 * s1) - jnp.exp(s2) + 20.0 + jnp.e)
+    raise NotImplementedError(f"kernel fitness {name!r}")
+
+
+KERNEL_FITNESS = ("cubic", "sphere", "rastrigin", "griewank", "ackley")
+
+
+def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
+                   w, c1, c2, min_pos, max_pos, max_v, d_real):
+    """Paper Alg. 1 steps 2–3 for one [Dpad, bn] tile.
+
+    Shared verbatim by the kernel bodies and the ``ref.py`` oracle so that
+    interpret-mode validation isolates the *pallas orchestration* (grid,
+    aliasing, blocking, predication); the math itself is validated against
+    the independent ``repro.core.pso`` implementation in tests.
+    Returns (pos, vel, dmask, lane).
+    """
+    dpad, bn = pos.shape
+    dsub = lax.broadcasted_iota(jnp.int32, (dpad, bn), 0)
+    lane = lax.broadcasted_iota(jnp.int32, (dpad, bn), 1)
+    dmask = dsub < d_real
+    # Global RNG index: particle * D + dim — identical to the library path.
+    gidx = ((block_base + lane) * d_real + dsub).astype(jnp.uint32)
+    r1 = rng.uniform(seed, it, STREAM_R1, gidx, dtype=pos.dtype)
+    r2 = rng.uniform(seed, it, STREAM_R2, gidx, dtype=pos.dtype)
+    gp = gp_col  # [Dpad, 1] -> broadcasts over lanes
+    vel = (w * vel + c1 * r1 * (pbp - pos) + c2 * r2 * (gp - pos))
+    vel = jnp.clip(vel, -max_v, max_v)
+    pos = jnp.clip(pos + vel, min_pos, max_pos)
+    zero = jnp.zeros_like(pos)
+    return jnp.where(dmask, pos, zero), jnp.where(dmask, vel, zero), dmask, lane
+
+
+# --------------------------------------------------------------------------
+# Kernel 1: queue algorithm — one iteration, grid over particle blocks.
+# --------------------------------------------------------------------------
+
+def _queue_kernel(scal_ref, gp_ref, gf_ref,
+                  pos_in, vel_in, pbp_in, pbf_in,          # aliased inputs
+                  pos_ref, vel_ref, pbp_ref, pbf_ref,
+                  aux_fit_ref, aux_idx_ref,
+                  *, w, c1, c2, min_pos, max_pos, max_v, d_real, fitness):
+    del pos_in, vel_in, pbp_in, pbf_in
+    b = pl.program_id(0)
+    bn = pos_ref.shape[1]
+    base = b * bn
+    pos, vel, dmask, lane = _advance_block(
+        scal_ref[0], scal_ref[1] + 1,
+        pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
+        base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
+        max_v=max_v, d_real=d_real)
+    fit = _fitness_dmajor(fitness, pos, dmask, d_real)      # [1, bn]
+    pbf = pbf_ref[...]
+    imp = fit > pbf                                          # Alg. 1 step 4
+    pbf_ref[...] = jnp.where(imp, fit, pbf)
+    pbp_ref[...] = jnp.where(imp, pos, pbp_ref[...])
+    pos_ref[...] = pos
+    vel_ref[...] = vel
+    # --- queue: candidates are lanes improving on the (stale) global best.
+    gf = gf_ref[0]
+    q_mask = fit > gf                                        # queue membership
+    neg = jnp.full_like(fit, -jnp.inf)
+    q_fit = jnp.where(q_mask, fit, neg)
+    bf = jnp.max(q_fit)                                      # thread-0's scan
+    lane_row = lax.broadcasted_iota(jnp.int32, fit.shape, 1)
+    bidx = jnp.min(jnp.where(q_fit >= bf, lane_row, _BIG_I32))
+    aux_fit_ref[0] = bf                                      # -inf if empty
+    aux_idx_ref[0] = base + bidx                             # §5.3: index only
+
+
+def queue_step_call(n: int, d: int, block_n: int, dtype, *,
+                    w, c1, c2, min_pos, max_pos, max_v, fitness,
+                    interpret=True):
+    """Build the pallas_call for one queue iteration.
+
+    Args (runtime): scal[2]i32, gbest_pos[Dpad,1], gbest_fit[1],
+                    pos/vel/pbest_pos [Dpad,N], pbest_fit [1,N]
+    Returns: (pos, vel, pbest_pos, pbest_fit, aux_fit[nb], aux_idx[nb])
+    """
+    assert n % block_n == 0, (n, block_n)
+    nb = n // block_n
+    dpad = pad_dim(d)
+    kern = functools.partial(
+        _queue_kernel, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
+        max_v=max_v, d_real=d, fitness=fitness)
+    mat = pl.BlockSpec((dpad, block_n), lambda b: (0, b))
+    row = pl.BlockSpec((1, block_n), lambda b: (0, b))
+    return pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # scal
+            pl.BlockSpec((dpad, 1), lambda b: (0, 0)),        # gbest_pos
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # gbest_fit
+            mat, mat, mat, row,                               # pos vel pbp pbf
+        ],
+        out_specs=[
+            mat, mat, mat, row,
+            pl.BlockSpec((1,), lambda b: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda b: (b,), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dpad, n), dtype),           # pos
+            jax.ShapeDtypeStruct((dpad, n), dtype),           # vel
+            jax.ShapeDtypeStruct((dpad, n), dtype),           # pbest_pos
+            jax.ShapeDtypeStruct((1, n), dtype),              # pbest_fit
+            jax.ShapeDtypeStruct((nb,), dtype),               # aux_fit
+            jax.ShapeDtypeStruct((nb,), jnp.int32),           # aux_idx
+        ],
+        input_output_aliases={3: 0, 4: 1, 5: 2, 6: 3},
+        interpret=interpret,
+        name="cupso_queue_step",
+    )
+
+
+# --------------------------------------------------------------------------
+# Kernel 2: fused queue-lock — grid (iterations, particle blocks).
+# --------------------------------------------------------------------------
+
+def _fused_kernel(scal_ref,
+                  pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,   # aliased
+                  pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
+                  *, w, c1, c2, min_pos, max_pos, max_v, d_real, fitness):
+    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    bn = pos_ref.shape[1]
+    base = b * bn
+    pos, vel, dmask, lane = _advance_block(
+        scal_ref[0], scal_ref[1] + t + 1,
+        pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
+        base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
+        max_v=max_v, d_real=d_real)
+    fit = _fitness_dmajor(fitness, pos, dmask, d_real)
+    pbf = pbf_ref[...]
+    imp = fit > pbf
+    pbf_ref[...] = jnp.where(imp, fit, pbf)
+    pbp_ref[...] = jnp.where(imp, pos, pbp_ref[...])
+    pos_ref[...] = pos
+    vel_ref[...] = vel
+    # --- queue-lock: serialized in-kernel publication (grid order = lock).
+    gf = gf_ref[0]
+    q_mask = fit > gf
+
+    @pl.when(jnp.any(q_mask))             # rare-improvement predicate (§4.1)
+    def _publish():
+        neg = jnp.full_like(fit, -jnp.inf)
+        q_fit = jnp.where(q_mask, fit, neg)
+        bf = jnp.max(q_fit)
+        lane_row = lax.broadcasted_iota(jnp.int32, fit.shape, 1)
+        bidx = jnp.min(jnp.where(q_fit >= bf, lane_row, _BIG_I32))
+        gf_ref[0] = bf
+        # §5.3 trick: gather the winner's position vector as a masked sum —
+        # one vectorized pass, only on (rare) improvement.
+        sel = (lane == bidx) & dmask
+        gp_ref[...] = jnp.sum(jnp.where(sel, pos, jnp.zeros_like(pos)),
+                              axis=1, keepdims=True)
+
+
+def fused_call(n: int, d: int, iters: int, block_n: int, dtype, *,
+               w, c1, c2, min_pos, max_pos, max_v, fitness,
+               interpret=True):
+    """Build the fused multi-iteration queue-lock pallas_call.
+
+    Args (runtime): scal[2]i32, pos/vel/pbest_pos [Dpad,N], pbest_fit [1,N],
+                    gbest_pos [Dpad,1], gbest_fit [1]
+    Returns the same six state arrays after ``iters`` iterations.
+    """
+    assert n % block_n == 0, (n, block_n)
+    nb = n // block_n
+    dpad = pad_dim(d)
+    kern = functools.partial(
+        _fused_kernel, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
+        max_v=max_v, d_real=d, fitness=fitness)
+    mat = pl.BlockSpec((dpad, block_n), lambda t, b: (0, b))
+    row = pl.BlockSpec((1, block_n), lambda t, b: (0, b))
+    gpc = pl.BlockSpec((dpad, 1), lambda t, b: (0, 0))
+    gfs = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        kern,
+        grid=(iters, nb),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),      # scal
+                  mat, mat, mat, row, gpc, gfs],
+        out_specs=[mat, mat, mat, row, gpc, gfs],
+        out_shape=[
+            jax.ShapeDtypeStruct((dpad, n), dtype),           # pos
+            jax.ShapeDtypeStruct((dpad, n), dtype),           # vel
+            jax.ShapeDtypeStruct((dpad, n), dtype),           # pbest_pos
+            jax.ShapeDtypeStruct((1, n), dtype),              # pbest_fit
+            jax.ShapeDtypeStruct((dpad, 1), dtype),           # gbest_pos
+            jax.ShapeDtypeStruct((1,), dtype),                # gbest_fit
+        ],
+        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4, 6: 5},
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY)),
+        interpret=interpret,
+        name="cupso_fused_queue_lock",
+    )

@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for the Pallas kernels (no pallas_call anywhere).
+
+These reproduce, eagerly and without any Pallas machinery, exactly what the
+kernels are *supposed* to compute — including the sequential-block
+publication order of the fused queue-lock kernel (block b of iteration t
+sees the gbest already updated by blocks 0..b-1 of iteration t). They share
+the tile math helpers with the kernel module so interpret-mode comparisons
+isolate the pallas orchestration; the math itself is independently checked
+against ``repro.core.pso`` in tests/test_kernels.py.
+
+All oracles work on the packed D-major layout (see ops.py for pack/unpack).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .pso_step import _advance_block, _fitness_dmajor, pad_dim
+
+_BIG = np.int32(2 ** 30)
+
+
+def _block_views(arrs, b, bn):
+    return [a[..., b * bn:(b + 1) * bn] for a in arrs]
+
+
+def queue_step_oracle(seed, iteration, pos, vel, pbp, pbf, gp, gf,
+                      block_n: int, *, w, c1, c2, min_pos, max_pos, max_v,
+                      d_real: int, fitness: str):
+    """One queue-algorithm iteration (kernel 1 + the jnp 2nd stage).
+
+    Inputs in D-major layout: pos/vel/pbp [Dpad, N], pbf [1, N],
+    gp [Dpad, 1], gf scalar. Returns the updated six arrays.
+    """
+    dpad, n = pos.shape
+    nb = n // block_n
+    pos, vel, pbp, pbf = map(jnp.asarray, (pos, vel, pbp, pbf))
+    aux_fit = []
+    aux_idx = []
+    new = {k: [] for k in ("pos", "vel", "pbp", "pbf")}
+    for b in range(nb):
+        p, v, bp, bf_ = _block_views((pos, vel, pbp, pbf), b, block_n)
+        p, v, dmask, lane = _advance_block(
+            seed, iteration + 1, p, v, bp, gp, b * block_n,
+            w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
+            max_v=max_v, d_real=d_real)
+        fit = _fitness_dmajor(fitness, p, dmask, d_real)
+        imp = fit > bf_
+        bf_ = jnp.where(imp, fit, bf_)
+        bp = jnp.where(imp, p, bp)
+        new["pos"].append(p); new["vel"].append(v)
+        new["pbp"].append(bp); new["pbf"].append(bf_)
+        q = jnp.where(fit > gf, fit, -jnp.inf)
+        best = jnp.max(q)
+        lane_row = jnp.broadcast_to(jnp.arange(block_n)[None, :], q.shape)
+        bidx = jnp.min(jnp.where(q >= best, lane_row, _BIG))
+        aux_fit.append(best)
+        aux_idx.append(b * block_n + bidx)
+    pos = jnp.concatenate(new["pos"], axis=-1)
+    vel = jnp.concatenate(new["vel"], axis=-1)
+    pbp = jnp.concatenate(new["pbp"], axis=-1)
+    pbf = jnp.concatenate(new["pbf"], axis=-1)
+    aux_fit = jnp.stack(aux_fit)
+    aux_idx = jnp.stack(aux_idx).astype(jnp.int32)
+    # 2nd stage (cross-block): conditional global-best update.
+    wb = int(jnp.argmax(aux_fit))
+    if float(aux_fit[wb]) > float(gf):
+        gf = aux_fit[wb]
+        gp = pos[:, int(aux_idx[wb]):int(aux_idx[wb]) + 1]
+    return pos, vel, pbp, pbf, gp, gf, aux_fit, aux_idx
+
+
+def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
+                     iters: int, block_n: int, *, w, c1, c2, min_pos,
+                     max_pos, max_v, d_real: int, fitness: str):
+    """The fused queue-lock kernel's exact semantics, eagerly.
+
+    Sequential (t, b) loop; gbest is updated in place so later blocks of the
+    same iteration see it — mirroring TPU sequential grid execution.
+    """
+    dpad, n = pos.shape
+    nb = n // block_n
+    pos, vel, pbp, pbf, gp = map(jnp.asarray, (pos, vel, pbp, pbf, gp))
+    gf = jnp.asarray(gf)
+    pos, vel, pbp, pbf = (np.array(pos), np.array(vel), np.array(pbp),
+                          np.array(pbf))
+    for t in range(iters):
+        for b in range(nb):
+            sl = slice(b * block_n, (b + 1) * block_n)
+            p, v, dmask, lane = _advance_block(
+                seed, base_iter + t + 1,
+                jnp.asarray(pos[:, sl]), jnp.asarray(vel[:, sl]),
+                jnp.asarray(pbp[:, sl]), gp, b * block_n,
+                w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
+                max_v=max_v, d_real=d_real)
+            fit = _fitness_dmajor(fitness, p, dmask, d_real)
+            bf_ = jnp.asarray(pbf[:, sl])
+            imp = fit > bf_
+            pbf[:, sl] = np.array(jnp.where(imp, fit, bf_))
+            pbp[:, sl] = np.array(jnp.where(imp, p, jnp.asarray(pbp[:, sl])))
+            pos[:, sl] = np.array(p)
+            vel[:, sl] = np.array(v)
+            q_mask = fit > gf
+            if bool(jnp.any(q_mask)):                 # rare publication
+                q = jnp.where(q_mask, fit, -jnp.inf)
+                bf = jnp.max(q)
+                lane_row = jnp.broadcast_to(
+                    jnp.arange(block_n)[None, :], q.shape)
+                bidx = int(jnp.min(jnp.where(q >= bf, lane_row, _BIG)))
+                gf = bf
+                sel = (lane == bidx) & dmask
+                gp = jnp.sum(jnp.where(sel, p, jnp.zeros_like(p)),
+                             axis=1, keepdims=True)
+    return (jnp.asarray(pos), jnp.asarray(vel), jnp.asarray(pbp),
+            jnp.asarray(pbf), gp, gf)

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on
+the production meshes and extract roofline terms (deliverables (e)+(g)).
+
+MUST be run as its own process (the two lines above fake 512 CPU devices
+before jax initializes — never set globally). Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh both --out reports/dryrun.json
+
+Each cell is cached into --out as it finishes, so reruns resume. A cell
+"passes" when .lower().compile() succeeds; memory_analysis() and
+cost_analysis() are recorded for EXPERIMENTS.md.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, get_arch, list_archs  # noqa: E402
+from repro.launch import sharding  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (make_prefill_step, make_serve_step,  # noqa: E402
+                                make_train_step)
+from repro.models import zoo  # noqa: E402
+from repro.roofline import analysis as ra  # noqa: E402
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True):
+    from repro.launch.mesh import data_axes
+    from repro.models.policy import activation_policy
+    cfg = get_arch(arch_name)
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with activation_policy(mesh, data_axes(mesh), "model"):
+        return _run_cell_inner(cfg, arch_name, shape_name, multi_pod, mesh,
+                               verbose)
+
+
+def _run_cell_inner(cfg, arch_name, shape_name, multi_pod, mesh, verbose):
+    cell = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+
+    params_shape = zoo.abstract_params(cfg)
+    pspecs_p = sharding.param_pspecs(cfg, params_shape, mesh)
+    pspecs = sharding.to_named(pspecs_p, mesh)
+    named = lambda tree: sharding.to_named(tree, mesh)
+
+    if cell.kind == "train":
+        train_step, opt_init = make_train_step(cfg)
+        opt_shape = jax.eval_shape(opt_init, params_shape)
+        ospecs = named(sharding.opt_pspecs(cfg, opt_shape, mesh, pspecs_p))
+        batch = zoo.input_specs(cfg, shape_name)
+        bspecs = named(sharding.batch_pspecs(cfg, shape_name, mesh))
+        lowered = jax.jit(
+            train_step,
+            in_shardings=(pspecs, ospecs, bspecs),
+            out_shardings=(pspecs, ospecs, None),
+        ).lower(params_shape, opt_shape, batch)
+        kind, tokens = "train", cell.seq_len * cell.global_batch
+    elif cell.kind == "prefill":
+        step = make_prefill_step(cfg)
+        batch = zoo.input_specs(cfg, shape_name)
+        bspecs = named(sharding.batch_pspecs(cfg, shape_name, mesh))
+        lowered = jax.jit(
+            step, in_shardings=(pspecs, bspecs), out_shardings=None,
+        ).lower(params_shape, batch)
+        kind, tokens = "prefill", cell.seq_len * cell.global_batch
+    else:  # decode
+        step = make_serve_step(cfg)
+        cache_shape = zoo.abstract_cache(cfg, shape_name)
+        cspecs = named(
+            sharding.cache_pspecs(cfg, cache_shape, shape_name, mesh))
+        ins = zoo.input_specs(cfg, shape_name)
+        bspec = named(sharding.batch_pspecs(cfg, shape_name, mesh))
+        lowered = jax.jit(
+            step,
+            in_shardings=(pspecs, cspecs, bspec["cache_len"],
+                          bspec["token"]),
+            out_shardings=(None, cspecs),
+        ).lower(params_shape, cache_shape, ins["cache_len"],
+                ins["token"])
+        kind, tokens = "decode", cell.global_batch
+    t_lower = time.time() - t0
+
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    hlo = compiled.as_text()
+    roof = ra.analyze(arch_name, shape_name, mesh_name, chips, compiled,
+                      cfg, params_shape, kind, tokens, hlo_text=hlo)
+    # Whole-graph cost_analysis under-counts scan bodies (×1, not ×L):
+    # keep it as *_scanned, and use the piecewise totals for the roofline.
+    scanned = {"flops_scanned": roof.flops_total,
+               "bytes_scanned": roof.bytes_total,
+               "coll_scanned": roof.coll_bytes_per_chip}
+    result_pieces = None
+    if not multi_pod:
+        # §Roofline is single-pod only; the multi-pod pass proves the
+        # "pod" axis shards (compile + memory analysis).
+        from repro.roofline.piecewise import analyze_cell_piecewise
+        pw = analyze_cell_piecewise(cfg, shape_name, mesh)
+        roof.flops_total = pw["flops_dev"] * chips
+        roof.bytes_total = pw["bytes_dev"] * chips
+        roof.coll_bytes_per_chip = pw["coll_bytes_dev"]
+        roof.coll_count = pw["coll_count"]
+        result_pieces = pw["pieces"]
+    mem = compiled.memory_analysis()
+    result = roof.to_dict()
+    if result_pieces is not None:
+        result["pieces"] = result_pieces
+    result.update(scanned)
+    result.update(
+        status="ok", t_lower_s=round(t_lower, 1),
+        t_compile_s=round(t_compile, 1),
+        mem_argument_gb=getattr(mem, "argument_size_in_bytes", 0) / 1e9,
+        mem_temp_gb=getattr(mem, "temp_size_in_bytes", 0) / 1e9,
+        mem_output_gb=getattr(mem, "output_size_in_bytes", 0) / 1e9,
+        hlo_lines=hlo.count("\n"),
+        params_total=ra.count_params(params_shape),
+        params_active=ra.count_active_params(cfg, params_shape),
+    )
+    if verbose:
+        print(f"  memory_analysis: arg={result['mem_argument_gb']:.2f}GB "
+              f"temp={result['mem_temp_gb']:.2f}GB "
+              f"out={result['mem_output_gb']:.2f}GB (per device)")
+        print(f"  cost_analysis: flops/dev={roof.flops_total/chips:.3e} "
+              f"bytes/dev={roof.bytes_total/chips:.3e}")
+        print(f"  collectives: {roof.coll_count} ops, "
+              f"{roof.coll_bytes_per_chip/1e9:.3f} GB/chip")
+    return result
+
+
+def run_pso_cell(dim: int, particles: int, multi_pod: bool):
+    """Bonus rows: the paper's own workload lowered on the production mesh."""
+    from repro.core import PSOConfig
+    from repro.core.distributed import (init_sharded_swarm,
+                                        make_distributed_run, swarm_pspec)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    cfg = PSOConfig(dim=dim, particle_cnt=particles, fitness="cubic")
+    axes = ("pod", "data") if multi_pod else ("data",)
+    runner = make_distributed_run(cfg, mesh, iters=100, variant="queue",
+                                  exchange_interval=10, particle_axes=axes)
+    state_shape = jax.eval_shape(
+        lambda: init_sharded_swarm(cfg, 0, mesh, particle_axes=axes))
+    lowered = runner.lower(state_shape)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    cost = compiled.cost_analysis()
+    coll = ra.collective_bytes(hlo)
+    mem = compiled.memory_analysis()
+    # model flops: 100 iters × N × (~10 flops/dim update + fitness ~5/dim)
+    mf = 100.0 * particles * dim * 15.0
+    return {
+        "arch": f"pso-cubic-{dim}d", "shape": f"n{particles}",
+        "mesh": mesh_name, "chips": chips, "status": "ok",
+        "flops_total": float(cost.get("flops", 0.0)) * chips,
+        "bytes_total": float(cost.get("bytes accessed", 0.0)) * chips,
+        "coll_bytes_per_chip": coll["total"], "coll_count": coll["count"],
+        "model_flops": mf,
+        "mem_temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 1e9,
+        "t_compute": float(cost.get("flops", 0.0)) / ra.PEAK_FLOPS,
+        "t_memory": float(cost.get("bytes accessed", 0.0)) / ra.HBM_BW,
+        "t_collective": coll["total"] / ra.ICI_BW,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="reports/dryrun.json")
+    ap.add_argument("--pso", action="store_true",
+                    help="also run the PSO bonus rows")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    def save():
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+
+    for arch in archs:
+        cfg = get_arch(arch)
+        for shape in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+                if key in results and results[key].get("status") in ("ok", "skip"):
+                    continue
+                if not cfg.supports(shape):
+                    results[key] = {
+                        "status": "skip",
+                        "reason": "full-attention arch; long_500k is "
+                                  "defined for sub-quadratic archs only "
+                                  "(DESIGN.md §5)"}
+                    save()
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    results[key] = run_cell(arch, shape, mp)
+                    print(f"[dryrun] {key} OK "
+                          f"(lower {results[key]['t_lower_s']}s, "
+                          f"compile {results[key]['t_compile_s']}s)",
+                          flush=True)
+                except Exception as e:
+                    results[key] = {"status": "fail", "error": str(e)[:2000],
+                                    "traceback":
+                                        traceback.format_exc()[-4000:]}
+                    print(f"[dryrun] {key} FAIL: {e}", flush=True)
+                save()
+
+    if args.pso:
+        for dim, n in ((1, 1 << 20), (120, 1 << 20)):
+            for mp in meshes:
+                key = f"pso-cubic-{dim}d|n{n}|{'2x16x16' if mp else '16x16'}"
+                if key in results and not args.force:
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    results[key] = run_pso_cell(dim, n, mp)
+                    print(f"[dryrun] {key} OK", flush=True)
+                except Exception as e:
+                    results[key] = {"status": "fail", "error": str(e)[:2000]}
+                    print(f"[dryrun] {key} FAIL: {e}", flush=True)
+                save()
+
+    ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    skip = sum(1 for v in results.values() if v.get("status") == "skip")
+    fail = sum(1 for v in results.values() if v.get("status") == "fail")
+    print(f"[dryrun] done: {ok} ok, {skip} skip, {fail} fail")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

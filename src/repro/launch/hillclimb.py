@@ -1,0 +1,141 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-cell perf hillclimbing (EXPERIMENTS.md §Perf).
+
+Re-runs ONE cell's piecewise roofline with ArchConfig overrides and prints
+the before/after of all three terms vs the baseline in reports/dryrun.json.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --arch arctic-480b --shape train_4k \
+        --set moe_expert_sharding=ep --set flash_custom_vjp=True \
+        --tag ep_vjp --out reports/hillclimb.json
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, get_arch  # noqa: E402
+from repro.launch.mesh import data_axes, make_production_mesh  # noqa: E402
+from repro.models.policy import activation_policy  # noqa: E402
+from repro.roofline import analysis as ra  # noqa: E402
+from repro.roofline.piecewise import analyze_cell_piecewise  # noqa: E402
+
+
+def parse_val(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def run(arch: str, shape: str, overrides: dict, full: bool = False):
+    cfg = get_arch(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh()
+    chips = 256
+    cell = SHAPES[shape]
+    mem_temp_gb = None
+    if full:
+        # whole-graph compile: memory_analysis captures buffer reuse and
+        # fusion, i.e. the true per-device residency (the bytes-accessed
+        # piecewise proxy is fusion-naive on the CPU backend).
+        import repro.launch.dryrun as dr
+        with activation_policy(mesh, data_axes(mesh), "model"):
+            import unittest.mock as um
+            with um.patch("repro.launch.dryrun.get_arch",
+                          lambda name: cfg):
+                res = dr._run_cell_inner(cfg, arch, shape, False, mesh,
+                                         verbose=False)
+        mem_temp_gb = res["mem_temp_gb"]
+    with activation_policy(mesh, data_axes(mesh), "model"):
+        pw = analyze_cell_piecewise(cfg, shape, mesh)
+    from repro.models import zoo
+    params_shape = zoo.abstract_params(cfg)
+    kind = cell.kind if cell.kind != "prefill" else "prefill"
+    tokens = (cell.global_batch if cell.kind == "decode"
+              else cell.seq_len * cell.global_batch)
+    mf = ra.model_flops(cfg, params_shape, cell.kind, tokens)
+    t_c = pw["flops_dev"] / ra.PEAK_FLOPS
+    t_m = pw["bytes_dev"] / ra.HBM_BW
+    t_x = pw["coll_bytes_dev"] / ra.ICI_BW
+    crit = max(t_c, t_m, t_x)
+    return {
+        "arch": arch, "shape": shape, "overrides": overrides,
+        "flops_dev": pw["flops_dev"], "bytes_dev": pw["bytes_dev"],
+        "coll_bytes_dev": pw["coll_bytes_dev"],
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "bottleneck": max((("compute", t_c), ("memory", t_m),
+                           ("collective", t_x)), key=lambda kv: kv[1])[0],
+        "model_flops": mf,
+        "useful_ratio": mf / max(pw["flops_dev"] * chips, 1.0),
+        "roofline_fraction": (mf / (chips * ra.PEAK_FLOPS)) / max(crit,
+                                                                  1e-30),
+        "mem_temp_gb": mem_temp_gb,
+        "pieces": pw["pieces"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="FIELD=VALUE")
+    ap.add_argument("--tag", default="exp")
+    ap.add_argument("--out", default="reports/hillclimb.json")
+    ap.add_argument("--baseline", default="reports/dryrun.json")
+    ap.add_argument("--full", action="store_true",
+                    help="also whole-graph compile for memory_analysis")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in getattr(args, "set"):
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+
+    res = run(args.arch, args.shape, overrides, full=args.full)
+
+    # compare vs baseline
+    base = {}
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            b = json.load(f)
+        base = b.get(f"{args.arch}|{args.shape}|16x16", {})
+    print(f"\n=== {args.arch} | {args.shape} | {args.tag} ===")
+    hdr = f"{'term':13s} {'baseline':>12s} {'this':>12s} {'delta':>8s}"
+    print(hdr)
+    for term in ("t_compute", "t_memory", "t_collective",
+                 "roofline_fraction", "useful_ratio"):
+        b0 = base.get(term)
+        v = res[term]
+        if b0:
+            print(f"{term:13s} {b0:12.4f} {v:12.4f} {v/b0-1:+8.1%}")
+        else:
+            print(f"{term:13s} {'—':>12s} {v:12.4f}")
+    print(f"bottleneck: {base.get('bottleneck', '—')} -> {res['bottleneck']}")
+    if res.get("mem_temp_gb") is not None:
+        print(f"mem_temp_gb: {base.get('mem_temp_gb', float('nan')):.1f}"
+              f" -> {res['mem_temp_gb']:.1f}")
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    results[f"{args.arch}|{args.shape}|{args.tag}"] = res
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

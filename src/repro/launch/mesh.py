@@ -1,0 +1,24 @@
+"""Production meshes. A FUNCTION (not module-level constant) so importing
+never touches jax device state — the 512-device fake platform is set only
+by dryrun.py before any jax import."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1):
+    """Whatever devices exist, as (data, model) — for tests/examples."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch/particles."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,218 @@
+"""Sharding policy: PartitionSpecs for params, optimizer states, batches and
+decode caches on the production meshes (DESIGN.md §6).
+
+Baseline policy (uniform, divisibility-guarded):
+  * weight matrices — last dim over "model" (TP), previous dim over "data"
+    (FSDP); leading stack dims (layer/group/expert) unsharded; vectors
+    replicated. The "pod" axis is pure DP: params replicated across pods,
+    gradients all-reduced (XLA inserts the collective because the batch is
+    sharded over pod while params are not).
+  * batch-like arrays — first dim over ("pod","data").
+  * decode KV caches — batch over "data" when divisible, cache sequence
+    over "model" (context parallelism); long_500k (batch=1) re-shards the
+    sequence over ("data","model").
+An axis is applied only when the dim divides the mesh extent — the policy
+is total over every (arch × shape × mesh) cell by construction.
+
+Per-arch overrides (the §Perf hillclimb levers) are expressed via
+``rules``-dict entries keyed by path substring.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig
+from .mesh import data_axes
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        total = 1
+        for a in axis:
+            total *= mesh.shape[a]
+        return dim % total == 0
+    return dim % mesh.shape[axis] == 0
+
+
+def _matrix_spec(shape, mesh: Mesh, n_stack: int,
+                 model_axis="model", data_axis="data") -> P:
+    """Generic weight rule: trailing dim → model, the one before → data."""
+    ndim = len(shape)
+    spec = [None] * ndim
+    if ndim - n_stack >= 1:
+        last = ndim - 1
+        if _fits(shape[last], mesh, model_axis):
+            spec[last] = model_axis
+    if ndim - n_stack >= 2:
+        prev = ndim - 2
+        if _fits(shape[prev], mesh, data_axis):
+            spec[prev] = data_axis
+    return P(*spec)
+
+
+def _count_stack_dims(path_str: str, cfg: ArchConfig) -> int:
+    """Leading non-matmul dims: layer stacks, xlstm groups, moe experts."""
+    n = 0
+    if "layers" in path_str or "enc_layers" in path_str or "dec_layers" in path_str:
+        n += 1
+        if "['m']" in path_str and cfg.xlstm:
+            n += 1                              # [G, g-1, ...]
+    if "moe" in path_str and ("w_in" in path_str or "w_out" in path_str
+                              or "w_gate" in path_str):
+        n += 1                                  # expert dim
+    return n
+
+
+def param_pspecs(cfg: ArchConfig, params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching an (abstract) param tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        ps = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        if len(shape) <= 1 + _count_stack_dims(ps, cfg):
+            # vectors (norms, biases) possibly stacked: replicate
+            specs.append(P())
+            continue
+        if cfg.moe and "moe" in ps and any(
+                w in ps for w in ("w_in", "w_out", "w_gate")) \
+                and cfg.moe_expert_sharding == "ep":
+            # expert parallelism: E over model; FSDP the wider matmul dim
+            nstack = _count_stack_dims(ps, cfg) - 1   # E handled explicitly
+            spec = [None] * len(shape)
+            e_dim = nstack                            # [..stack.., E, a, b]
+            if _fits(shape[e_dim], mesh, "model"):
+                spec[e_dim] = "model"
+            if _fits(shape[e_dim + 1], mesh, "data"):
+                spec[e_dim + 1] = "data"
+            specs.append(P(*spec))
+            continue
+        if "embed" in ps or "unembed" in ps:
+            # [V, d] / [d, V]: vocab→model, d→data
+            big = 0 if shape[0] >= shape[1] else 1
+            spec = [None, None]
+            if _fits(shape[big], mesh, "model"):
+                spec[big] = "model"
+            if _fits(shape[1 - big], mesh, "data"):
+                spec[1 - big] = "data"
+            specs.append(P(*spec))
+            continue
+        if cfg.row_parallel_out and any(w in ps for w in ("wo", "w_out")):
+            # Megatron row-parallel: contraction dim (ff / H*hd) over model
+            # so it matches the TP layout of the incoming activations;
+            # output dim FSDP over data. Avoids activation reshards at
+            # every down-projection (§Perf iteration on qwen1.5-110b).
+            ns = _count_stack_dims(ps, cfg)
+            nd = len(shape)
+            spec = [None] * nd
+            if _fits(shape[nd - 2], mesh, "model"):
+                spec[nd - 2] = "model"
+            if _fits(shape[nd - 1], mesh, "data"):
+                spec[nd - 1] = "data"
+            specs.append(P(*spec))
+            continue
+        specs.append(_matrix_spec(shape, mesh, _count_stack_dims(ps, cfg)))
+    return jax.tree.unflatten(treedef, specs)
+
+
+def opt_pspecs(cfg: ArchConfig, opt_shape: Any, mesh: Mesh,
+               param_specs: Any) -> Any:
+    """Optimizer state specs: mirror the param spec where shapes match;
+    adafactor's factored vectors inherit the surviving dims."""
+    # Build a path→spec map from params for lookup by suffix.
+    pflat, _ = jax.tree_util.tree_flatten_with_path(param_specs)
+    by_path = {jax.tree_util.keystr(p): s for p, s in pflat}
+
+    oflat, otreedef = jax.tree_util.tree_flatten_with_path(opt_shape)
+    out = []
+    for path, leaf in oflat:
+        ps = jax.tree_util.keystr(path)
+        # strip the optimizer wrapper levels: [...]['inner']['m']<param path>
+        match = None
+        for ppath, spec in by_path.items():
+            if ps.endswith(ppath) or ppath in ps:
+                match = (ppath, spec)
+                break
+        if leaf.ndim == 0:
+            out.append(P())
+        elif match and len(match[1]) == leaf.ndim:
+            out.append(match[1])
+        elif match and len(match[1]) == leaf.ndim + 1:
+            # factored row/col: drop the missing trailing/leading entry
+            spec = list(match[1])
+            if ps.endswith("['vr']") or "vr" in ps.rsplit("[", 1)[-1]:
+                out.append(P(*spec[:-1]))
+            else:                                 # vc: drops dim -2
+                out.append(P(*(spec[:-2] + spec[-1:])))
+        else:
+            out.append(P())
+    return jax.tree.unflatten(otreedef, out)
+
+
+def batch_pspecs(cfg: ArchConfig, shape_name: str, mesh: Mesh) -> Any:
+    cell = SHAPES[shape_name]
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    b = cell.global_batch
+    bdp = dp if _fits(b, mesh, dp) else None
+    if cell.kind in ("train", "prefill"):
+        spec: Dict[str, P] = {"tokens": P(bdp, None), "labels": P(bdp, None)}
+        if cfg.encdec:
+            spec["frames"] = P(bdp, None, None)
+        if cfg.vision_prefix:
+            spec["vision_embeds"] = P(bdp, None, None)
+        return spec
+    return {"token": P(bdp, None), "cache_len": P()}
+
+
+def cache_pspecs(cfg: ArchConfig, cache_shape: Any, shape_name: str,
+                 mesh: Mesh) -> Any:
+    """Decode caches: [L, B, S, ...] → B over data, S over model (context
+    parallelism); batch=1 (long_500k) shards S over (data, model)."""
+    cell = SHAPES[shape_name]
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        ps = jax.tree_util.keystr(path)
+        if cfg.xlstm or "ssm" in ps or "['s']" in ps:
+            # recurrent states: shard batch dim if possible, else replicate
+            spec = [None] * len(shape)
+            for i, d in enumerate(shape):
+                if d == cell.global_batch and _fits(d, mesh, "data"):
+                    spec[i] = "data"
+                    break
+            return P(*spec)
+        # KV-like: [L, B, S, K, hd] or [L, B, S, r]
+        spec = [None] * len(shape)
+        b_dim, s_dim = 1, 2
+        if cfg.swa_window_decode and cfg.swa_window:
+            # windowed decode reads are dynamic slices along S — keep the
+            # cache unsharded on S (batch-sharded only) so the slice stays
+            # shard-local (§Perf hymba decode iteration).
+            if _fits(shape[b_dim], mesh, "data"):
+                spec[b_dim] = "data"
+            return P(*spec)
+        seq_axis: Any = "model"
+        if cell.global_batch == 1:
+            seq_axis = tuple(a for a in mesh.axis_names)  # all axes
+            if not _fits(shape[s_dim], mesh, seq_axis):
+                seq_axis = ("data", "model")
+        elif _fits(shape[b_dim], mesh, "data"):
+            spec[b_dim] = "data"
+        if _fits(shape[s_dim], mesh, seq_axis):
+            spec[s_dim] = seq_axis
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree.unflatten(treedef, [spec_for(p, l) for p, l in flat])
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,53 @@
+"""Jittable train/serve step builders shared by dryrun.py, train.py and the
+benchmarks."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import zoo
+from repro.optim import get_optimizer
+from repro.optim.schedules import cosine_schedule
+
+
+def make_train_step(cfg: ArchConfig, base_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10000
+                    ) -> Tuple[Callable, Callable]:
+    """Returns (train_step, opt_init). train_step: (params, opt_state,
+    batch) -> (params, opt_state, metrics)."""
+    opt_init, opt_update = get_optimizer(cfg.optimizer)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: zoo.loss_fn(cfg, p, batch))(params)
+        lr = cosine_schedule(opt_state.step, base_lr, warmup, total_steps)
+        params, opt_state = opt_update(params, grads, opt_state, lr)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, opt_init
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    """Forward-only loss evaluation at prefill shapes (throughput proxy for
+    inference prefill; cache write-back excluded — a small bytes-only term,
+    see EXPERIMENTS.md §Dry-run notes)."""
+    def prefill_step(params, batch):
+        return zoo.loss_fn(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    """One-token decode: (params, cache, cache_len, token) ->
+    (logits, new_cache)."""
+    def serve_step(params, cache, cache_len, token):
+        return zoo.decode_fn(cfg, params, cache, cache_len, token)
+
+    return serve_step

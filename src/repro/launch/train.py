@@ -1,0 +1,88 @@
+"""LM training launcher (example end-to-end driver at reduced scale runs in
+examples/train_lm.py; this module is the production entry point).
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \
+        --steps 200 --batch 8 --seq 256 --smoke --ckpt-dir /tmp/ckpt
+
+--smoke uses the reduced config (CPU-viable). On a real pod, omit --smoke
+and launch one process per host (jax.distributed.initialize is called when
+the usual cluster env vars are present).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import make_train_step
+from repro.models import zoo
+from repro.runtime import RunnerConfig, StepRunner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--log-interval", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if "COORDINATOR_ADDRESS" in os.environ:      # multi-host fleet
+        jax.distributed.initialize()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    params = zoo.init_params(cfg, jax.random.key(args.seed))
+    train_step, opt_init = make_train_step(cfg, base_lr=args.lr,
+                                           warmup=max(args.steps // 10, 1),
+                                           total_steps=args.steps)
+    opt_state = opt_init(params)
+    jstep = jax.jit(train_step)
+
+    data = SyntheticLM(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        seed=args.seed, num_shards=jax.process_count(),
+        shard_id=jax.process_index()))
+
+    losses = []
+
+    def step_fn(state, step):
+        params, opt_state = state
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        params, opt_state, metrics = jstep(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_interval == 0:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+        return params, opt_state
+
+    state = (params, opt_state)
+    if args.ckpt_dir:
+        runner = StepRunner(
+            RunnerConfig(args.ckpt_dir, ckpt_interval=args.ckpt_interval),
+            step_fn)
+        start, state = runner.resume_or(state)
+        state = runner.run(state, start, args.steps - start)
+    else:
+        for step in range(args.steps):
+            state = step_fn(state, step)
+    print(f"final loss: {losses[-1]:.4f} (first: {losses[0]:.4f})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

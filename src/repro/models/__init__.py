@@ -1,0 +1,4 @@
+from . import attention, encdec, layers, moe, ssm, transformer, zoo
+
+__all__ = ["attention", "encdec", "layers", "moe", "ssm", "transformer",
+           "zoo"]

@@ -1,0 +1,343 @@
+"""Attention: GQA (+bias, RoPE, sliding window), MLA (latent KV), and a
+memory-efficient blockwise "flash" attention in pure JAX.
+
+The flash path never materializes [S, S] scores: a static python loop over
+query blocks wraps a ``lax.scan`` over exactly the key/value blocks inside
+the causal/window horizon, carrying online-softmax statistics. This keeps
+HLO FLOPs at ~S²/2 for causal (not S²) and ~S·W for sliding-window — the
+compiled cost_analysis reflects only useful work, which matters for the
+roofline's MODEL_FLOPS/HLO_FLOPs ratio (EXPERIMENTS.md §Roofline).
+
+Decode paths take a cache dict and a scalar ``cache_len``; MLA decode uses
+the absorbed-weight formulation so attention runs entirely in the latent
+space (cache = [S, kv_rank + rope] per token, the technique's memory win).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise flash attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, mult: int, axis: int):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, s
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg), s
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, q_block: int = 1024,
+                    kv_block: int = 1024, scale: Optional[float] = None,
+                    prefix_len: int = 0):
+    """q: [B, Sq, H, hd_qk]; k: [B, Sk, K, hd_qk]; v: [B, Sk, K, hd_v].
+
+    GQA via grouped einsum (H = K * G). ``q_offset``: absolute position of
+    q[0] (prefill continuation). ``window``: 0 = unlimited; else each query
+    attends to keys in (q_pos - window, q_pos]. ``prefix_len``: the first
+    `prefix_len` keys (meta tokens / vision prefix) are always visible.
+    Returns [B, Sq, H, hd_v].
+    """
+    b, sq, h, hdq = q.shape
+    _, sk, kh, hdv = v.shape
+    g = h // kh
+    scale = scale or (hdq ** -0.5)
+    q_block = min(q_block, max(sq, 16))
+    kv_block = min(kv_block, max(sk, 16))
+
+    q, sq_real = _pad_to(q, q_block, axis=1)
+    k, sk_real = _pad_to(k, kv_block, axis=1)
+    v, _ = _pad_to(v, kv_block, axis=1)
+    sqp, skp = q.shape[1], k.shape[1]
+    nq, nk = sqp // q_block, skp // kv_block
+
+    qg = q.reshape(b, sqp, kh, g, hdq)
+    outs = []
+    for i in range(nq):                     # static loop: per-block bounds
+        q_i = qg[:, i * q_block:(i + 1) * q_block]          # [B,qb,K,G,hd]
+        q_i = (q_i * scale).astype(q.dtype)
+        qpos = q_offset + i * q_block + jnp.arange(q_block)  # [qb]
+        # causal horizon for this block (static ints → scan length is exact)
+        if causal:
+            hi_pos = q_offset + (i + 1) * q_block           # exclusive
+            k_hi = min(nk, -(-min(hi_pos, sk_real) // kv_block))
+        else:
+            k_hi = nk
+        if window and causal:
+            lo_pos = q_offset + i * q_block - window
+            k_lo = max(0, lo_pos // kv_block)
+        else:
+            k_lo = 0
+        n_steps = max(k_hi - k_lo, 1)
+
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            k_j = jax.lax.dynamic_slice_in_dim(k, blk * kv_block, kv_block, 1)
+            v_j = jax.lax.dynamic_slice_in_dim(v, blk * kv_block, kv_block, 1)
+            kpos = blk * kv_block + jnp.arange(kv_block)     # [kb]
+            s_ij = jnp.einsum("bqkgh,bskh->bkgqs", q_i, k_j,
+                              preferred_element_type=jnp.float32)
+            mask = kpos[None, :] < sk_real                  # valid keys
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+                if window:
+                    win = (qpos[:, None] - kpos[None, :] < window)
+                    if prefix_len:
+                        win = win | (kpos[None, :] < prefix_len)
+                    mask = mask & win
+            s_ij = jnp.where(mask[None, None, None], s_ij, NEG_INF)
+            m_new = jnp.maximum(m, s_ij.max(axis=-1))
+            p = jnp.exp(s_ij - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(v.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), ()
+
+        m0 = jnp.full((b, kh, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_block, hdv), jnp.float32)
+        from .unroll import maybe_scan
+        (m, l, acc), _ = maybe_scan(
+            kv_step, (m0, l0, a0), jnp.arange(k_lo, k_lo + n_steps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]        # [B,K,G,qb,hdv]
+        outs.append(out.transpose(0, 3, 1, 2, 4))           # [B,qb,K,G,hdv]
+    out = jnp.concatenate(outs, axis=1)[:, :sq_real]
+    return out.reshape(b, sq_real, h, hdv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     scale: Optional[float] = None, prefix_len: int = 0):
+    """Single-token attention. q: [B, 1, H, hd]; caches: [B, S, K, hd]."""
+    b, _, h, hdq = q.shape
+    _, s, kh, hdv = v_cache.shape
+    g = h // kh
+    scale = scale or (hdq ** -0.5)
+    qg = (q.reshape(b, kh, g, hdq) * scale).astype(q.dtype)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    kpos = jnp.arange(s)
+    mask = kpos[None, :] < cache_len
+    if window:
+        win = (cache_len - 1 - kpos[None, :]) < window
+        if prefix_len:
+            win = win | (kpos[None, :] < prefix_len)
+        mask = mask & win
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hdv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, d: int, h: int, kh: int, hd: int, bias: bool, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, h * hd, dtype),
+         "wk": dense_init(ks[1], d, kh * hd, dtype),
+         "wv": dense_init(ks[2], d, kh * hd, dtype),
+         "wo": dense_init(ks[3], h * hd, d, dtype)}
+    if bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kh * hd,), dtype)
+        p["bv"] = jnp.zeros((kh * hd,), dtype)
+    return p
+
+
+def gqa_project(p: Params, x, h: int, kh: int, hd: int):
+    from .policy import constrain
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (constrain(q.reshape(b, s, h, hd), ("dp", None, "tp", None)),
+            constrain(k.reshape(b, s, kh, hd), ("dp", None, "tp", None)),
+            constrain(v.reshape(b, s, kh, hd), ("dp", None, "tp", None)))
+
+
+def gqa_forward(p: Params, x, positions, *, h, kh, hd, theta, window=0,
+                prefix_len=0, q_block=1024, kv_block=1024,
+                use_custom_vjp: bool = False,
+                return_kv: bool = False):
+    """Training / prefill self-attention. x: [B, S, d]."""
+    q, k, v = gqa_project(p, x, h, kh, hd)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    if use_custom_vjp:
+        from .flash_vjp import flash_attention_vjp
+        out = flash_attention_vjp(q, k, v, True, window, 0, q_block,
+                                  kv_block, None, prefix_len)
+    else:
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              prefix_len=prefix_len,
+                              q_block=q_block, kv_block=kv_block)
+    from .policy import constrain
+    out = constrain(out, ("dp", None, "tp", None))
+    out = constrain(out.reshape(*x.shape[:2], h * hd) @ p["wo"],
+                    ("dp", None, None))
+    return (out, (k, v)) if return_kv else out
+
+
+def gqa_decode(p: Params, x, cache: Params, cache_len, *, h, kh, hd, theta,
+               window=0, prefix_len=0, window_only_reads: bool = False):
+    """x: [B, 1, d]; cache: {"k","v": [B, Smax, K, hd]} updated in place
+    (functionally) at ``cache_len``. Returns (out, new_cache).
+
+    window_only_reads (§Perf): for sliding-window layers, gather only the
+    ``prefix_len`` always-visible rows plus the last ``window`` rows of
+    the cache instead of streaming all Smax rows through the masked
+    attention — decode reads drop from O(Smax) to O(window+prefix)
+    (hymba decode_32k: 32768 → 1152 rows per layer).
+    """
+    q, k, v = gqa_project(p, x, h, kh, hd)
+    pos = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+    q = apply_rope(q, pos, theta)
+    k = apply_rope(k, pos, theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), cache_len, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), cache_len, 1)
+    smax = k_cache.shape[1]
+    if window_only_reads and window and window + prefix_len < smax:
+        start = jnp.clip(cache_len + 1 - window, prefix_len, smax - window)
+        k_win = jax.lax.dynamic_slice_in_dim(k_cache, start, window, 1)
+        v_win = jax.lax.dynamic_slice_in_dim(v_cache, start, window, 1)
+        if prefix_len:
+            k_r = jnp.concatenate([k_cache[:, :prefix_len], k_win], axis=1)
+            v_r = jnp.concatenate([v_cache[:, :prefix_len], v_win], axis=1)
+        else:
+            k_r, v_r = k_win, v_win
+        # positions within the gathered view: rows [prefix, prefix+window)
+        # hold absolute positions [start, start+window); valid rows are
+        # those with absolute position <= cache_len.
+        kpos_abs = jnp.concatenate(
+            [jnp.arange(prefix_len),
+             start + jnp.arange(window)]) if prefix_len else (
+            start + jnp.arange(window))
+        b = x.shape[0]
+        g = h // kh
+        scale = hd ** -0.5
+        qg = (q.reshape(b, kh, g, hd) * scale).astype(q.dtype)
+        scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_r,
+                            preferred_element_type=jnp.float32)
+        mask = kpos_abs[None, :] <= cache_len
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+        pattn = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgs,bskh->bkgh", pattn.astype(v_r.dtype), v_r,
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(b, 1, h * hd).astype(q.dtype)
+    else:
+        out = decode_attention(q, k_cache, v_cache, cache_len + 1,
+                               window=window, prefix_len=prefix_len)
+        out = out.reshape(x.shape[0], 1, h * hd)
+    out = out @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention) — minicpm3
+# ---------------------------------------------------------------------------
+
+def init_mla(key, d: int, h: int, *, q_rank, kv_rank, rope_hd, nope_hd,
+             v_hd, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, q_rank, dtype),
+        "q_norm": jnp.ones((q_rank,), dtype),
+        "wq_b": dense_init(ks[1], q_rank, h * (nope_hd + rope_hd), dtype),
+        "wkv_a": dense_init(ks[2], d, kv_rank + rope_hd, dtype),
+        "kv_norm": jnp.ones((kv_rank,), dtype),
+        "w_uk": dense_init(ks[3], kv_rank, h * nope_hd, dtype),
+        "w_uv": dense_init(ks[4], kv_rank, h * v_hd, dtype),
+        "wo": dense_init(ks[5], h * v_hd, d, dtype),
+    }
+
+
+def _mla_q(p, x, positions, h, nope_hd, rope_hd, theta, eps):
+    from .layers import rmsnorm
+    b, s, _ = x.shape
+    ql = rmsnorm(p["q_norm"], x @ p["wq_a"], eps)
+    q = (ql @ p["wq_b"]).reshape(b, s, h, nope_hd + rope_hd)
+    q_nope, q_rope = q[..., :nope_hd], q[..., nope_hd:]
+    q_rope = apply_rope(q_rope, positions, theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, positions, kv_rank, rope_hd, theta, eps):
+    from .layers import rmsnorm
+    kv = x @ p["wkv_a"]                                   # [B,S,kvr+rope]
+    c_kv = rmsnorm(p["kv_norm"], kv[..., :kv_rank], eps)
+    k_rope = apply_rope(kv[..., None, kv_rank:], positions, theta)  # [B,S,1,r]
+    return c_kv, k_rope[..., 0, :]
+
+
+def mla_forward(p: Params, x, positions, *, h, q_rank, kv_rank, rope_hd,
+                nope_hd, v_hd, theta, eps, q_block=1024, kv_block=1024):
+    """Training / prefill: expand latent to per-head K/V, run flash."""
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(p, x, positions, h, nope_hd, rope_hd, theta, eps)
+    c_kv, k_rope = _mla_latent(p, x, positions, kv_rank, rope_hd, theta, eps)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, nope_hd)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, v_hd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, rope_hd))],
+        axis=-1)
+    scale = (nope_hd + rope_hd) ** -0.5
+    out = flash_attention(q, k, v, causal=True, scale=scale,
+                          q_block=q_block, kv_block=kv_block)
+    return out.reshape(b, s, h * v_hd) @ p["wo"]
+
+
+def mla_decode(p: Params, x, cache: Params, cache_len, *, h, q_rank, kv_rank,
+               rope_hd, nope_hd, v_hd, theta, eps):
+    """Absorbed-weight decode over the latent cache.
+
+    cache: {"c_kv": [B, Smax, kv_rank], "k_rope": [B, Smax, rope_hd]} —
+    the MLA memory win: kv_rank+rope floats/token instead of 2·H·hd.
+    """
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, pos, h, nope_hd, rope_hd, theta, eps)
+    c_new, r_new = _mla_latent(p, x, pos, kv_rank, rope_hd, theta, eps)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), cache_len, 1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], r_new.astype(cache["k_rope"].dtype), cache_len, 1)
+    # Absorb W_uk into q: score in latent space.
+    w_uk = p["w_uk"].reshape(kv_rank, h, nope_hd)
+    q_lat = jnp.einsum("bqhn,khn->bhk", q_nope, w_uk)     # [B,H,kv_rank]
+    s_lat = jnp.einsum("bhk,bsk->bhs", q_lat, c_kv,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bqhr,bsr->bhs", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+    scale = (nope_hd + rope_hd) ** -0.5
+    scores = (s_lat + s_rope) * scale
+    smax = c_kv.shape[1]
+    mask = jnp.arange(smax)[None, :] < (cache_len + 1)
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    pattn = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsk->bhk", pattn.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32)  # [B,H,kvr]
+    w_uv = p["w_uv"].reshape(kv_rank, h, v_hd)
+    out = jnp.einsum("bhk,khv->bhv", ctx_lat.astype(x.dtype), w_uv)
+    out = out.reshape(b, 1, h * v_hd) @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,188 @@
+"""Encoder-decoder backbone (whisper-small). The conv audio frontend is a
+STUB per the assignment: the encoder consumes precomputed frame embeddings
+[B, S_enc, d] from input_specs(). Decoder: causal self-attention +
+cross-attention to the encoder output; decode keeps a self KV cache and a
+precomputed cross KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import attention as attn
+from .layers import chunked_xent, dense_init, embed_init, init_mlp, mlp, \
+    rmsnorm, rmsnorm_init
+from .transformer import _remat
+
+Params = Dict[str, Any]
+
+
+def _init_enc_layer(cfg: ArchConfig, key) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    k1, k2 = jax.random.split(key)
+    return {"ln1": rmsnorm_init(d, dt),
+            "attn": attn.init_gqa(k1, d, cfg.n_heads, cfg.n_kv_heads, hd,
+                                  False, dt),
+            "ln2": rmsnorm_init(d, dt),
+            "mlp": init_mlp(k2, d, cfg.d_ff, cfg.act, dt)}
+
+
+def _init_dec_layer(cfg: ArchConfig, key) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": rmsnorm_init(d, dt),
+            "self_attn": attn.init_gqa(k1, d, cfg.n_heads, cfg.n_kv_heads,
+                                       hd, False, dt),
+            "ln_x": rmsnorm_init(d, dt),
+            "cross_attn": attn.init_gqa(k2, d, cfg.n_heads, cfg.n_kv_heads,
+                                        hd, False, dt),
+            "ln2": rmsnorm_init(d, dt),
+            "mlp": init_mlp(k3, d, cfg.d_ff, cfg.act, dt)}
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": embed_init(kt, cfg.vocab, cfg.d_model, dt),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(cfg, k))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(cfg, k))(dec_keys),
+        "enc_norm": rmsnorm_init(cfg.d_model, dt),
+        "final_norm": rmsnorm_init(cfg.d_model, dt),
+        "unembed": dense_init(kh, cfg.d_model, cfg.vocab, dt),
+    }
+
+
+def _kw(cfg: ArchConfig):
+    return dict(h=cfg.n_heads, kh=cfg.n_kv_heads, hd=cfg.resolved_head_dim,
+                theta=cfg.rope_theta, q_block=cfg.attn_q_block,
+                kv_block=cfg.attn_kv_block)
+
+
+def encode(cfg: ArchConfig, params: Params, frames):
+    """frames: [B, S_enc, d] (stub embeddings). Bidirectional encoder."""
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = frames.astype(jnp.dtype(cfg.param_dtype))
+
+    def body(lp, x):
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.gqa_project(lp["attn"], h, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.resolved_head_dim)
+        from .layers import apply_rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        a = attn.flash_attention(q, k, v, causal=False,
+                                 q_block=cfg.attn_q_block,
+                                 kv_block=cfg.attn_kv_block)
+        a = a.reshape(b, s, -1) @ lp["attn"]["wo"]
+        x = x + a
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        return x + mlp(lp["mlp"], h2, cfg.act)
+
+    rb = _remat(body, cfg.remat)
+
+    def step(x, lp):
+        return rb(lp, x), None
+
+    x, _ = jax.lax.scan(step, x, params["enc_layers"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_attend(cfg, lp, x, enc_kv):
+    """x: [B, St, d]; enc_kv: (k, v) [B, Se, K, hd]."""
+    b, st, _ = x.shape
+    h = rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+    q = (h @ lp["cross_attn"]["wq"]).reshape(
+        b, st, cfg.n_heads, cfg.resolved_head_dim)
+    out = attn.flash_attention(q, enc_kv[0], enc_kv[1], causal=False,
+                               q_block=cfg.attn_q_block,
+                               kv_block=cfg.attn_kv_block)
+    return out.reshape(b, st, -1) @ lp["cross_attn"]["wo"]
+
+
+def _enc_kv(cfg, lp, enc_out):
+    b, se, _ = enc_out.shape
+    k = (enc_out @ lp["cross_attn"]["wk"]).reshape(
+        b, se, cfg.n_kv_heads, cfg.resolved_head_dim)
+    v = (enc_out @ lp["cross_attn"]["wv"]).reshape(
+        b, se, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return k, v
+
+
+def decode_train(cfg: ArchConfig, params: Params, tokens, enc_out):
+    """Teacher-forced decoder forward. Returns final hidden [B, St, d]."""
+    b, st = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(st)[None], (b, st))
+
+    def body(lp, x):
+        a = attn.gqa_forward(lp["self_attn"],
+                             rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                             positions, **_kw(cfg))
+        x = x + a
+        kv = _enc_kv(cfg, lp, enc_out)
+        x = x + _cross_attend(cfg, lp, x, kv)
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        return x + mlp(lp["mlp"], h2, cfg.act)
+
+    rb = _remat(body, cfg.remat)
+    x, _ = jax.lax.scan(lambda x, lp: (rb(lp, x), None), x,
+                        params["dec_layers"])
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch):
+    enc = encode(cfg, params, batch["frames"])
+    h = decode_train(cfg, params, batch["tokens"], enc)
+    return chunked_xent(h, params["unembed"], batch["labels"],
+                        cfg.loss_chunk, pad_vocab=cfg.pad_vocab)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd), dt),
+        "xk": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, hd), dt),
+        "xv": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, hd), dt),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache, cache_len, token):
+    """One decoder token; cross KV already lives in the cache."""
+    x = jnp.take(params["embed"], token, axis=0)      # [B, 1, d]
+    kw = _kw(cfg)
+    kw.pop("q_block"), kw.pop("kv_block")
+
+    def body(x, lc):
+        lp, cl = lc
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        a, new_kv = attn.gqa_decode(lp["self_attn"], h,
+                                    {"k": cl["k"], "v": cl["v"]},
+                                    cache_len, **kw)
+        x = x + a
+        hx = rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+        b = x.shape[0]
+        q = (hx @ lp["cross_attn"]["wq"]).reshape(
+            b, 1, cfg.n_heads, cfg.resolved_head_dim)
+        xa = attn.decode_attention(q, cl["xk"], cl["xv"],
+                                   cl["xk"].shape[1])
+        x = x + xa.reshape(b, 1, -1) @ lp["cross_attn"]["wo"]
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h2, cfg.act)
+        return x, dict(cl, k=new_kv["k"], v=new_kv["v"])
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    logits = (x[:, 0] @ params["unembed"]).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,136 @@
+"""Shared model building blocks (pure JAX, no flax): norms, embeddings,
+RoPE, MLPs, parameter initializers.
+
+Params are plain dict pytrees. ``init_*`` functions take a key and return
+the param tree; ``apply`` logic is free functions so everything composes
+under jit / scan / shard_map and can be abstractly initialized with
+``jax.eval_shape`` for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(w, x, eps: float = 1e-5):
+    # Norm statistics in fp32 regardless of activation dtype.
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, dtype=jnp.float32):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / plain)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, act: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_in": dense_init(k1, d, ff, dtype),
+         "w_out": dense_init(k2, ff, d, dtype)}
+    if act == "silu":                                    # gated (SwiGLU)
+        p["w_gate"] = dense_init(k3, d, ff, dtype)
+    return p
+
+
+def mlp(p: Params, x, act: str):
+    from .policy import constrain
+    h = constrain(x @ p["w_in"], ("dp", None, "tp"))
+    if "w_gate" in p:
+        h = act_fn(act)(constrain(x @ p["w_gate"], ("dp", None, "tp"))) * h
+    else:
+        h = act_fn(act)(h)
+    return constrain(h @ p["w_out"], ("dp", None, None))
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy with sequence chunking (vocab can be 152k: never materialize
+# the full [B, S, V] logits — scan over S chunks and reduce).
+# ---------------------------------------------------------------------------
+
+def chunked_xent(h, w_unembed, labels, chunk: int, pad_vocab: bool = False):
+    """h: [B, S, d] final hidden; w_unembed: [d, V]; labels: [B, S] int32.
+    Returns mean NLL (fp32). Positions with label < 0 are masked out.
+
+    pad_vocab: pad V up to a multiple of 128 so the logits can shard over
+    the model axis even for awkward vocab sizes (32001, 51865, 73448);
+    padded columns are masked to -inf before the logsumexp. Without this,
+    an indivisible vocab silently REPLICATES the whole unembed matmul on
+    every model rank (measured 11x head-flops inflation on hymba-1.5b).
+    """
+    b, s, d = h.shape
+    v_real = w_unembed.shape[-1]
+    if pad_vocab and v_real % 128:
+        w_unembed = jnp.pad(w_unembed, ((0, 0), (0, (-v_real) % 128)))
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+
+    def piece(hc, lc):
+        from .policy import constrain
+        logits = constrain((hc @ w_unembed).astype(jnp.float32),
+                           ("dp", None, "tp"))               # [B, c, V]
+        if logits.shape[-1] != v_real:
+            col = jnp.arange(logits.shape[-1])
+            logits = jnp.where(col[None, None, :] < v_real, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return ((lse - tgt) * mask).sum(), mask.sum()
+
+    def body(carry, xs):
+        hc, lc = xs
+        nll, cnt = piece(hc, lc)
+        return (carry[0] + nll, carry[1] + cnt), ()
+
+    hs = h[:, :n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1)
+    ls = labels[:, :n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+    from .unroll import maybe_scan
+    (nll, cnt), _ = maybe_scan(body, (jnp.float32(0), jnp.float32(0)),
+                               (hs, ls))
+    if rem:
+        nll_r, cnt_r = piece(h[:, n * chunk:], labels[:, n * chunk:])
+        nll, cnt = nll + nll_r, cnt + cnt_r
+    return nll / jnp.maximum(cnt, 1.0)

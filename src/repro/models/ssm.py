@@ -1,0 +1,305 @@
+"""State-space & recurrent blocks: mamba-2-style SSD (hymba's parallel SSM
+heads), and xLSTM's mLSTM / sLSTM.
+
+One chunked *gated linear attention* engine serves both SSD and mLSTM:
+
+    H_t = exp(log_decay_t) · H_{t-1} + inc_t · k_t ⊗ v_t
+    y_t = q_t · H_t
+
+computed chunk-parallel (intra-chunk masked matmul in log-decay space +
+inter-chunk scan over [N, P] states). This is the sub-quadratic form that
+makes the long_500k cell well-defined: train/prefill cost is O(S·L) per
+chunk pair, decode is a single O(N·P) state update.
+
+mLSTM's normalizer is folded in by augmenting v with a ones-column, so the
+engine runs once and yields numerator and denominator together.
+
+Simplifications vs the source papers (documented in DESIGN.md §5): no
+depthwise conv frontend in the SSD branch; mLSTM uses log-space gate
+clamping instead of the running-max stabilizer; sLSTM keeps the true
+sequential recurrence (lax.scan over time) since that is its defining
+feature.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Params = Dict[str, Any]
+
+_CLAMP = 20.0  # log-space clamp for gate stability
+
+
+# ---------------------------------------------------------------------------
+# Chunked gated linear attention engine
+# ---------------------------------------------------------------------------
+
+def gla_chunked(q, k, v, log_decay, log_inc, chunk: int = 128,
+                h0=None, chunk_remat: bool = True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q,k: [B,S,H,N]; v: [B,S,H,P]; log_decay/log_inc: [B,S,H].
+    Returns (y [B,S,H,P], h_final [B,H,N,P]).
+
+    chunk_remat (§Perf hymba/xlstm iteration): checkpoint each chunk step
+    so autodiff saves only the O(B·H·N·P) inter-chunk carries instead of
+    every intra-chunk [B,L,L,H] weight tile and stacked qkv residual —
+    the dominant memory term of hybrid/ssm training (HLO inspection:
+    f32[16,33,128,25,128] residual stacks ×229 on hymba-1.5b). Backward
+    recomputes the intra-chunk forward (+~1/3 of this piece's flops)."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_decay = jnp.pad(log_decay, [(0, 0), (0, pad), (0, 0)])
+        log_inc = jnp.pad(log_inc, [(0, 0), (0, pad), (0, 0)],
+                          constant_values=-_CLAMP * 2)
+    sp = s + pad
+    nc = sp // chunk
+    # [B, nc, L, H, ...] -> scan over nc
+    resh = lambda a: a.reshape(b, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    ldc, lic = resh(log_decay), resh(log_inc)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]                    # j <= i
+
+    def chunk_step(hprev, xs):
+        qi, ki, vi, ld, li = xs                           # [B,L,H,...]
+        cum = jnp.cumsum(ld, axis=1)                      # [B,L,H]
+        # intra-chunk: S_ij = (q_i·k_j) exp(cum_i - cum_j + li_j), j<=i
+        # log-space math stays f32 (decay spans ±80); the materialized
+        # [B,L,L,H] weight/score tiles are bf16 with f32 accumulation —
+        # halves the dominant memory-term tensors (§Perf hymba iteration).
+        logw = cum[:, :, None] - cum[:, None, :] + li[:, None, :]  # [B,L,L,H]
+        logw = jnp.where(tri[None, :, :, None], logw, -jnp.inf)
+        w = jnp.exp(jnp.clip(logw, -_CLAMP * 4, _CLAMP)).astype(vi.dtype)
+        qk = jnp.einsum("blhn,bmhn->blmh", qi, ki,
+                        preferred_element_type=vi.dtype)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", qk * w, vi,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: q_i · exp(cum_i) · h_prev
+        ei = jnp.exp(jnp.clip(cum, -_CLAMP * 4, _CLAMP))  # [B,L,H]
+        y_inter = jnp.einsum("blhn,bhnp->blhp", qi * ei[..., None],
+                             hprev.astype(qi.dtype),
+                             preferred_element_type=jnp.float32)
+        # new state
+        tot = cum[:, -1:, :]                              # [B,1,H]
+        wj = jnp.exp(jnp.clip(tot - cum + li, -_CLAMP * 4, _CLAMP))
+        dstate = jnp.einsum("blhn,blhp->bhnp", ki * wj[..., None], vi,
+                            preferred_element_type=jnp.float32)
+        decay_tot = jnp.exp(jnp.clip(tot[:, 0], -_CLAMP * 4, _CLAMP))
+        hnew = hprev * decay_tot[:, :, None, None] + dstate
+        return hnew, (y_intra + y_inter).astype(v.dtype)
+
+    from .unroll import maybe_scan
+    step = jax.checkpoint(chunk_step) if chunk_remat else chunk_step
+    hf, ys = maybe_scan(step, h0, (qc, kc, vc, ldc, lic))
+    y = ys.swapaxes(0, 1).reshape(b, sp, h, p)[:, :s]
+    return y, hf
+
+
+def gla_step(hprev, q, k, v, log_decay, log_inc):
+    """Single decode step. q,k: [B,H,N]; v: [B,H,P]; gates: [B,H].
+    Returns (y [B,H,P], h_new)."""
+    d = jnp.exp(jnp.clip(log_decay, -_CLAMP * 4, _CLAMP))[..., None, None]
+    i = jnp.exp(jnp.clip(log_inc, -_CLAMP * 4, _CLAMP))[..., None, None]
+    hnew = hprev * d + i * jnp.einsum("bhn,bhp->bhnp", k, v,
+                                      preferred_element_type=jnp.float32)
+    y = jnp.einsum("bhn,bhnp->bhp", q, hnew.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    return y.astype(v.dtype), hnew
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba-2 scalar-A) branch — hymba's parallel SSM heads
+# ---------------------------------------------------------------------------
+
+def init_ssd(key, d: int, heads: int, state: int, expand: int, dtype) -> Params:
+    d_in = expand * d
+    hd = d_in // heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, d_in, dtype),
+        "w_z": dense_init(ks[1], d, d_in, dtype),
+        "w_B": dense_init(ks[2], d, heads * state, dtype),
+        "w_C": dense_init(ks[3], d, heads * state, dtype),
+        "w_dt": dense_init(ks[4], d, heads, dtype, scale=0.02),
+        "dt_bias": jnp.zeros((heads,), dtype),
+        "a_log": jnp.zeros((heads,), jnp.float32),        # A = -exp(a_log)
+        "d_skip": jnp.ones((heads,), dtype),
+        "w_out": dense_init(ks[5], d_in, d, dtype),
+    }
+
+
+def _ssd_gates(p, x, heads):
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                      # [H]
+    log_decay = dt * a                                            # ≤ 0
+    log_inc = jnp.log(dt + 1e-9)
+    return log_decay, log_inc
+
+
+def ssd_forward(p: Params, x, *, heads: int, state: int, expand: int,
+                chunk: int = 128, h0=None, return_state: bool = False):
+    """x: [B,S,d] -> [B,S,d] (+ final state)."""
+    b, s, d = x.shape
+    d_in = expand * d
+    hd = d_in // heads
+    xs = (x @ p["w_x"]).reshape(b, s, heads, hd)
+    z = (x @ p["w_z"]).reshape(b, s, heads, hd)
+    bb = (x @ p["w_B"]).reshape(b, s, heads, state)
+    cc = (x @ p["w_C"]).reshape(b, s, heads, state)
+    log_decay, log_inc = _ssd_gates(p, x, heads)
+    y, hf = gla_chunked(cc, bb, xs, log_decay, log_inc, chunk=chunk, h0=h0)
+    y = y + xs * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y * jax.nn.silu(z)
+    out = y.reshape(b, s, d_in) @ p["w_out"]
+    return (out, hf) if return_state else out
+
+
+def ssd_decode(p: Params, x, h, *, heads: int, state: int, expand: int):
+    """x: [B,1,d]; h: [B,H,N,hd] recurrent state. Returns (out, h_new)."""
+    b, _, d = x.shape
+    d_in = expand * d
+    hd = d_in // heads
+    xs = (x @ p["w_x"]).reshape(b, heads, hd)
+    z = (x @ p["w_z"]).reshape(b, heads, hd)
+    bb = (x @ p["w_B"]).reshape(b, heads, state)
+    cc = (x @ p["w_C"]).reshape(b, heads, state)
+    ld, li = _ssd_gates(p, x, heads)
+    y, hnew = gla_step(h, cc, bb, xs, ld[:, 0], li[:, 0])
+    y = y + xs * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y * jax.nn.silu(z)
+    return (y.reshape(b, 1, d_in) @ p["w_out"]), hnew
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d: int, heads: int, dtype) -> Params:
+    hd = d // heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_q": dense_init(ks[0], d, d, dtype),
+        "w_k": dense_init(ks[1], d, d, dtype),
+        "w_v": dense_init(ks[2], d, d, dtype),
+        "w_i": dense_init(ks[3], d, heads, dtype, scale=0.02),
+        "w_f": dense_init(ks[4], d, heads, dtype, scale=0.02),
+        "f_bias": jnp.full((heads,), 3.0, dtype),     # open forget gates
+        "w_o": dense_init(ks[5], d, d, dtype),
+        "w_out": dense_init(ks[6], d, d, dtype),
+    }
+
+
+def _mlstm_qkv_gates(p, x, heads):
+    b, s, d = x.shape
+    hd = d // heads
+    q = (x @ p["w_q"]).reshape(b, s, heads, hd) * (hd ** -0.5)
+    k = (x @ p["w_k"]).reshape(b, s, heads, hd) * (hd ** -0.5)
+    v = (x @ p["w_v"]).reshape(b, s, heads, hd)
+    log_f = jax.nn.log_sigmoid(
+        (x @ p["w_f"]).astype(jnp.float32) + p["f_bias"].astype(jnp.float32))
+    log_i = jnp.clip((x @ p["w_i"]).astype(jnp.float32), -_CLAMP, _CLAMP)
+    return q, k, v, log_f, log_i
+
+
+def mlstm_forward(p: Params, x, *, heads: int, chunk: int = 128, h0=None,
+                  return_state: bool = False):
+    b, s, d = x.shape
+    hd = d // heads
+    q, k, v, log_f, log_i = _mlstm_qkv_gates(p, x, heads)
+    # ones-column fold-in: engine yields numerator and normalizer together
+    v_aug = jnp.concatenate([v, jnp.ones((b, s, heads, 1), v.dtype)], -1)
+    y_aug, hf = gla_chunked(q, k, v_aug, log_f, log_i, chunk=chunk, h0=h0)
+    num, den = y_aug[..., :hd], y_aug[..., hd:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    o = jax.nn.sigmoid(x @ p["w_o"]).reshape(b, s, heads, hd)
+    out = (y * o).reshape(b, s, d) @ p["w_out"]
+    return (out, hf) if return_state else out
+
+
+def mlstm_decode(p: Params, x, h, *, heads: int):
+    b, _, d = x.shape
+    hd = d // heads
+    q, k, v, log_f, log_i = _mlstm_qkv_gates(p, x, heads)
+    v_aug = jnp.concatenate([v, jnp.ones((b, 1, heads, 1), v.dtype)], -1)
+    y_aug, hnew = gla_step(h, q[:, 0], k[:, 0], v_aug[:, 0],
+                           log_f[:, 0], log_i[:, 0])
+    num, den = y_aug[..., :hd], y_aug[..., hd:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    o = jax.nn.sigmoid(x @ p["w_o"]).reshape(b, heads, hd)
+    out = (y * o).reshape(b, 1, d) @ p["w_out"]
+    return out, hnew
+
+
+def mlstm_state_shape(batch: int, d: int, heads: int):
+    hd = d // heads
+    return (batch, heads, hd, hd + 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — true sequential recurrence
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype),    # i, f, z, o from x
+        "r_gates": dense_init(ks[1], d, 4 * d, dtype, scale=0.02),  # from h
+        "b_gates": jnp.zeros((4 * d,), dtype),
+        "w_out": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _slstm_cell(p, x_t, carry):
+    """x_t: [B, 4d] pre-projected gates; carry: (h, c, n) each [B, d]."""
+    h, c, n = carry
+    gates = x_t + h @ p["r_gates"] + p["b_gates"]
+    i_pre, f_pre, z_pre, o_pre = jnp.split(gates.astype(jnp.float32), 4, -1)
+    i = jnp.exp(jnp.clip(i_pre, -_CLAMP, _CLAMP))
+    f = jax.nn.sigmoid(f_pre)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c = f * c + i * z
+    n = f * n + i
+    h_new = (o * c / jnp.maximum(jnp.abs(n), 1.0)).astype(x_t.dtype)
+    return h_new, c, n
+
+
+def slstm_forward(p: Params, x, carry=None, return_state: bool = False):
+    b, s, d = x.shape
+    if carry is None:
+        carry = (jnp.zeros((b, d), x.dtype),
+                 jnp.zeros((b, d), jnp.float32),
+                 jnp.zeros((b, d), jnp.float32))
+    xg = x @ p["w_gates"]                                 # hoisted matmul
+
+    def step(carry, x_t):
+        new = _slstm_cell(p, x_t, carry)
+        return new, new[0]
+
+    carry, hs = jax.lax.scan(step, carry, xg.swapaxes(0, 1))
+    out = hs.swapaxes(0, 1) @ p["w_out"]
+    return (out, carry) if return_state else out
+
+
+def slstm_decode(p: Params, x, carry):
+    xg = x[:, 0] @ p["w_gates"]
+    new = _slstm_cell(p, xg, carry)
+    return (new[0] @ p["w_out"])[:, None], new
+
+
+def slstm_state_shape(batch: int, d: int):
+    return [(batch, d)] * 3

@@ -1,0 +1,441 @@
+"""Decoder-only LM assembly for all non-enc-dec families.
+
+Layer stacks are ``lax.scan``-ned over stacked parameters [L, ...] so the
+HLO stays one-layer-sized regardless of depth (qwen1.5-110b's 80 layers
+compile as fast as 2). Non-uniform archs are handled structurally:
+
+  * hymba    — SWA layers scanned in two runs around the 3 unrolled
+               global-attention layers (exact interleave 0/16/31), so SWA
+               layers keep their O(S·W) flash path and global layers their
+               O(S²/2) path — no masking-only fake windows that would
+               inflate HLO FLOPs.
+  * xlstm    — outer scan over groups of (slstm_group-1 mLSTM + 1 sLSTM).
+
+Remat policy per config: "full" (checkpoint whole layer), "dots"
+(checkpoint_dots), "nothing".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm
+from .layers import (chunked_xent, dense_init, embed_init, init_mlp, mlp,
+                     rmsnorm, rmsnorm_init)
+
+Params = Dict[str, Any]
+
+
+def _remat(fn, mode: str):
+    if mode == "nothing":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ArchConfig, key, kind: str) -> Params:
+    """kind: dense | moe | hybrid | mlstm | slstm."""
+    dt = jnp.dtype(cfg.param_dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    if kind == "mlstm":
+        return {"ln": rmsnorm_init(d, dt),
+                "mlstm": ssm.init_mlstm(ks[0], d, cfg.n_heads, dt)}
+    if kind == "slstm":
+        return {"ln": rmsnorm_init(d, dt),
+                "slstm": ssm.init_slstm(ks[0], d, dt)}
+    p: Params = {"ln1": rmsnorm_init(d, dt), "ln2": rmsnorm_init(d, dt)}
+    if cfg.mla:
+        p["attn"] = attn.init_mla(
+            ks[0], d, cfg.n_heads, q_rank=cfg.q_rank, kv_rank=cfg.kv_rank,
+            rope_hd=cfg.rope_head_dim, nope_hd=cfg.nope_head_dim,
+            v_hd=cfg.v_head_dim, dtype=dt)
+    else:
+        p["attn"] = attn.init_gqa(ks[0], d, cfg.n_heads, cfg.n_kv_heads, hd,
+                                  cfg.qkv_bias, dt)
+    if kind == "hybrid":
+        p["ssd"] = ssm.init_ssd(ks[1], d, cfg.ssm_heads, cfg.ssm_state,
+                                cfg.ssm_expand, dt)
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(ks[2], d, cfg.d_ff, cfg.n_experts,
+                                    cfg.act, dt)
+        if cfg.dense_residual:
+            p["dense_mlp"] = init_mlp(ks[3], d, cfg.dense_residual_ff,
+                                      cfg.act, dt)
+    elif cfg.d_ff:
+        p["mlp"] = init_mlp(ks[2], d, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def _attn_kwargs(cfg: ArchConfig, window: int):
+    return dict(h=cfg.n_heads, kh=cfg.n_kv_heads, hd=cfg.resolved_head_dim,
+                theta=cfg.rope_theta, window=window,
+                prefix_len=cfg.meta_tokens,
+                q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+                use_custom_vjp=cfg.flash_custom_vjp)
+
+
+def _mla_kwargs(cfg: ArchConfig):
+    return dict(h=cfg.n_heads, q_rank=cfg.q_rank, kv_rank=cfg.kv_rank,
+                rope_hd=cfg.rope_head_dim, nope_hd=cfg.nope_head_dim,
+                v_hd=cfg.v_head_dim, theta=cfg.rope_theta, eps=cfg.norm_eps,
+                q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+
+
+def _apply_layer(cfg: ArchConfig, lp: Params, x, positions, kind: str,
+                 window: int):
+    """Training/prefill forward for one layer. Returns (x, aux_loss)."""
+    aux = jnp.float32(0)
+    if kind == "mlstm":
+        return x + ssm.mlstm_forward(lp["mlstm"], rmsnorm(lp["ln"], x,
+                                                          cfg.norm_eps),
+                                     heads=cfg.n_heads,
+                                     chunk=cfg.ssm_chunk), aux
+    if kind == "slstm":
+        return x + ssm.slstm_forward(lp["slstm"], rmsnorm(lp["ln"], x,
+                                                          cfg.norm_eps)), aux
+    from .policy import constrain
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        a = attn.mla_forward(lp["attn"], h, positions, **_mla_kwargs(cfg))
+    else:
+        a = attn.gqa_forward(lp["attn"], h, positions,
+                             **_attn_kwargs(cfg, window))
+    if kind == "hybrid":
+        s = ssm.ssd_forward(lp["ssd"], h, heads=cfg.ssm_heads,
+                            state=cfg.ssm_state, expand=cfg.ssm_expand,
+                            chunk=cfg.ssm_chunk)
+        a = 0.5 * (a + s)                    # hymba: parallel heads, fused
+    x = constrain(x + a, ("dp", None, None))
+    h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        m, aux = moe_mod.moe_apply(lp["moe"], h2, n_experts=cfg.n_experts,
+                                   top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   act=cfg.act,
+                                   group_tokens=cfg.moe_group_tokens,
+                                   expert_sharding=cfg.moe_expert_sharding)
+        if cfg.dense_residual:
+            m = m + mlp(lp["dense_mlp"], h2, cfg.act)
+        x = x + m
+    elif cfg.d_ff:
+        x = x + mlp(lp["mlp"], h2, cfg.act)
+    return constrain(x, ("dp", None, None)), aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def _stacked_init(cfg: ArchConfig, key, kind: str, n: int) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_layer(cfg, k, kind))(keys)
+
+
+def _layer_plan(cfg: ArchConfig):
+    """Structural plan of the layer stack."""
+    if cfg.xlstm:
+        g = cfg.slstm_group
+        n_groups = cfg.n_layers // g
+        return ("xlstm", n_groups, g)
+    if cfg.hybrid_ssm:
+        return ("hymba",)
+    kind = "moe" if cfg.moe else ("hybrid" if cfg.hybrid_ssm else "dense")
+    return ("uniform", kind)
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    k_emb, k_layers, k_head, k_meta = jax.random.split(key, 4)
+    p: Params = {"embed": embed_init(k_emb, cfg.vocab, cfg.d_model, dt),
+                 "final_norm": rmsnorm_init(cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k_head, cfg.d_model, cfg.vocab, dt)
+    if cfg.meta_tokens:
+        p["meta"] = (jax.random.normal(k_meta, (cfg.meta_tokens, cfg.d_model),
+                                       jnp.float32) * 0.02).astype(dt)
+    plan = _layer_plan(cfg)
+    if plan[0] == "xlstm":
+        _, n_groups, g = plan
+        km, ks_ = jax.random.split(k_layers)
+        m_keys = jax.random.split(km, n_groups * (g - 1))
+        m_stack = jax.vmap(lambda k: _init_layer(cfg, k, "mlstm"))(m_keys)
+        m_stack = jax.tree.map(
+            lambda a: a.reshape(n_groups, g - 1, *a.shape[1:]), m_stack)
+        p["layers"] = {"m": m_stack,
+                       "s": _stacked_init(cfg, ks_, "slstm", n_groups)}
+    elif plan[0] == "hymba":
+        kg, ks_ = jax.random.split(k_layers)
+        n_global = len(cfg.global_attn_layers)
+        p["layers"] = {
+            "global": _stacked_init(cfg, kg, "hybrid", n_global),
+            "swa": _stacked_init(cfg, ks_, "hybrid",
+                                 cfg.n_layers - n_global)}
+    else:
+        p["layers"] = _stacked_init(cfg, k_layers, plan[1], cfg.n_layers)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill), scan over layers
+# ---------------------------------------------------------------------------
+
+def _scan_stack(cfg: ArchConfig, stacked: Params, x, positions, kind: str,
+                window: int):
+    body = _remat(
+        functools.partial(_apply_layer, cfg, positions=positions, kind=kind,
+                          window=window), cfg.remat)
+
+    def step(carry, lp):
+        x, aux = carry
+        x, a = body(lp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0)), stacked)
+    return x, aux
+
+
+def _hymba_segments(cfg: ArchConfig):
+    """Yield ('global', idx) and ('swa', start, count) in layer order."""
+    gl = sorted(cfg.global_attn_layers)
+    segs = []
+    prev = 0
+    swa_seen = 0
+    for gi, g in enumerate(gl):
+        if g > prev:
+            segs.append(("swa", swa_seen, g - prev))
+            swa_seen += g - prev
+        segs.append(("global", gi))
+        prev = g + 1
+    if prev < cfg.n_layers:
+        segs.append(("swa", swa_seen, cfg.n_layers - prev))
+    return segs
+
+
+def forward(cfg: ArchConfig, params: Params, tokens,
+            extra_embeds: Optional[jnp.ndarray] = None):
+    """tokens: [B, S_text]; extra_embeds (vlm frames/patches): [B, P, d].
+    Returns (hidden [B, S_total, d], aux_loss, n_prefix) where n_prefix =
+    meta + extra positions that carry no loss."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    n_prefix = 0
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        n_prefix += extra_embeds.shape[1]
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(params["meta"][None],
+                                (x.shape[0], cfg.meta_tokens, cfg.d_model))
+        x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+        n_prefix += cfg.meta_tokens
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    aux = jnp.float32(0)
+    plan = _layer_plan(cfg)
+    if plan[0] == "xlstm":
+        def group_step(carry, gp):
+            x, aux = carry
+            for i in range(cfg.slstm_group - 1):
+                lp = jax.tree.map(lambda a: a[i], gp["m"])
+                x, a = _remat(functools.partial(
+                    _apply_layer, cfg, positions=positions, kind="mlstm",
+                    window=0), cfg.remat)(lp, x)
+                aux = aux + a
+            x, a = _remat(functools.partial(
+                _apply_layer, cfg, positions=positions, kind="slstm",
+                window=0), cfg.remat)(gp["s"], x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(group_step, (x, aux), params["layers"])
+    elif plan[0] == "hymba":
+        for seg in _hymba_segments(cfg):
+            if seg[0] == "global":
+                lp = jax.tree.map(lambda a: a[seg[1]],
+                                  params["layers"]["global"])
+                x, a = _apply_layer(cfg, lp, x, positions, "hybrid", 0)
+                aux = aux + a
+            else:
+                _, start, count = seg
+                sub = jax.tree.map(lambda a: a[start:start + count],
+                                   params["layers"]["swa"])
+                x, a = _scan_stack(cfg, sub, x, positions, "hybrid",
+                                   cfg.swa_window)
+                aux = aux + a
+    else:
+        x, aux = _scan_stack(cfg, params["layers"], x, positions, plan[1], 0)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux, n_prefix
+
+
+def unembed_matrix(cfg: ArchConfig, params: Params):
+    return (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray]):
+    """batch: tokens [B,S], labels [B,S] (−1 = masked), optional
+    vision_embeds. Returns scalar loss (fp32)."""
+    h, aux, n_prefix = forward(cfg, params, batch["tokens"],
+                               batch.get("vision_embeds"))
+    h = h[:, n_prefix:]                       # loss only over text positions
+    nll = chunked_xent(h, unembed_matrix(cfg, params), batch["labels"],
+                       cfg.loss_chunk, pad_vocab=cfg.pad_vocab)
+    return nll + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step) with caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    """Cache pytree for one-token decode; shapes are family-specific."""
+    dt = jnp.dtype(cfg.param_dtype)
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    if cfg.xlstm:
+        g = cfg.slstm_group
+        ng = L // g
+        return {
+            "m": jnp.zeros((ng, g - 1,
+                            *ssm.mlstm_state_shape(batch, cfg.d_model,
+                                                   cfg.n_heads)), jnp.float32),
+            "s": [jnp.zeros((ng, batch, cfg.d_model),
+                            jnp.float32 if i else dt) for i in range(3)],
+        }
+    total = max_len + cfg.meta_tokens
+    if cfg.mla:
+        return {"c_kv": jnp.zeros((L, batch, total, cfg.kv_rank), dt),
+                "k_rope": jnp.zeros((L, batch, total, cfg.rope_head_dim), dt)}
+    if cfg.hybrid_ssm:
+        d_in = cfg.ssm_expand * cfg.d_model
+
+        def sub(n):
+            return {"k": jnp.zeros((n, batch, total, cfg.n_kv_heads, hd), dt),
+                    "v": jnp.zeros((n, batch, total, cfg.n_kv_heads, hd), dt),
+                    "ssm": jnp.zeros((n, batch, cfg.ssm_heads, cfg.ssm_state,
+                                      d_in // cfg.ssm_heads), jnp.float32)}
+
+        ng = len(cfg.global_attn_layers)
+        return {"global": sub(ng), "swa": sub(L - ng)}
+    return {"k": jnp.zeros((L, batch, total, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((L, batch, total, cfg.n_kv_heads, hd), dt)}
+
+
+def _decode_layer(cfg: ArchConfig, lp, cache_l, x, cache_len, kind, window):
+    if kind == "mlstm":
+        h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+        out, st = ssm.mlstm_decode(lp["mlstm"], h, cache_l,
+                                   heads=cfg.n_heads)
+        return x + out, st
+    if kind == "slstm":
+        h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+        out, st = ssm.slstm_decode(lp["slstm"], h, tuple(cache_l))
+        return x + out, list(st)
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        a, new_cache = attn.mla_decode(
+            lp["attn"], h, cache_l, cache_len,
+            **{k: v for k, v in _mla_kwargs(cfg).items()
+               if k not in ("q_block", "kv_block")})
+    else:
+        kw = _attn_kwargs(cfg, window)
+        for drop in ("q_block", "kv_block", "use_custom_vjp"):
+            kw.pop(drop, None)
+        kw["window_only_reads"] = cfg.swa_window_decode
+        kv_cache = {"k": cache_l["k"], "v": cache_l["v"]}
+        a, new_cache = attn.gqa_decode(lp["attn"], h, kv_cache, cache_len,
+                                       **kw)
+    if kind == "hybrid":
+        s_out, ssm_state = ssm.ssd_decode(
+            lp["ssd"], h, cache_l["ssm"], heads=cfg.ssm_heads,
+            state=cfg.ssm_state, expand=cfg.ssm_expand)
+        a = 0.5 * (a + s_out)
+        new_cache = dict(new_cache, ssm=ssm_state)
+    x = x + a
+    h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        m, _ = moe_mod.moe_apply(lp["moe"], h2, n_experts=cfg.n_experts,
+                                 top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 act=cfg.act, group_tokens=x.shape[0],
+                                 expert_sharding=cfg.moe_expert_sharding)
+        if cfg.dense_residual:
+            m = m + mlp(lp["dense_mlp"], h2, cfg.act)
+        x = x + m
+    elif cfg.d_ff:
+        x = x + mlp(lp["mlp"], h2, cfg.act)
+    return x, new_cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params, cache_len,
+                token):
+    """One-token decode. token: [B, 1] int32; cache_len: [] int32 —
+    number of positions already in the cache (incl. meta tokens).
+    Returns (logits [B, V], new_cache)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    plan = _layer_plan(cfg)
+    if plan[0] == "xlstm":
+        def group_step(x, gc):
+            gp, cc = gc
+            new_m = []
+            for i in range(cfg.slstm_group - 1):
+                lp = jax.tree.map(lambda a: a[i], gp["m"])
+                x, st = _decode_layer(cfg, lp, cc["m"][i], x, cache_len,
+                                      "mlstm", 0)
+                new_m.append(st)
+            x, s_st = _decode_layer(cfg, gp["s"],
+                                    [c for c in cc["s"]], x,
+                                    cache_len, "slstm", 0)
+            return x, {"m": jnp.stack(new_m), "s": s_st}
+
+        def scan_body(x, gc):
+            x, nc = group_step(x, gc)
+            return x, nc
+
+        cache_in = {"m": cache["m"], "s": cache["s"]}
+        x, new_cache = jax.lax.scan(scan_body, x,
+                                    (params["layers"], cache_in))
+    elif plan[0] == "hymba":
+        gi_ct, sw_ct = 0, 0
+        new_g, new_s = [], []
+        for seg in _hymba_segments(cfg):
+            if seg[0] == "global":
+                lp = jax.tree.map(lambda a: a[seg[1]],
+                                  params["layers"]["global"])
+                cl = jax.tree.map(lambda a: a[gi_ct], cache["global"])
+                x, nc = _decode_layer(cfg, lp, cl, x, cache_len, "hybrid", 0)
+                new_g.append(nc)
+                gi_ct += 1
+            else:
+                _, start, count = seg
+                for i in range(count):
+                    lp = jax.tree.map(lambda a: a[start + i],
+                                      params["layers"]["swa"])
+                    cl = jax.tree.map(lambda a: a[start + i], cache["swa"])
+                    x, nc = _decode_layer(cfg, lp, cl, x, cache_len,
+                                          "hybrid", cfg.swa_window)
+                    new_s.append(nc)
+        stack = lambda lst: jax.tree.map(lambda *a: jnp.stack(a), *lst)
+        new_cache = {"global": stack(new_g), "swa": stack(new_s)}
+    else:
+        kind = plan[1]
+
+        def body(x, lc):
+            lp, cl = lc
+            x, nc = _decode_layer(cfg, lp, cl, x, cache_len, kind, 0)
+            return x, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x[:, 0] @ unembed_matrix(cfg, params)).astype(jnp.float32)
+    return logits, new_cache

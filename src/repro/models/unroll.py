@@ -1,0 +1,46 @@
+"""Inner-scan unroll switch for piecewise roofline analysis.
+
+``compiled.cost_analysis()`` counts lax.scan bodies once; the piecewise
+analyzer (repro.roofline.piecewise) therefore lowers single pieces with
+inner loops UNROLLED so each piece's cost is exact. Production lowering
+keeps scans (small HLO, fast compile). Flip via ``unrolled()`` context.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_STATE = {"unroll": False}
+
+
+def is_unrolled() -> bool:
+    return _STATE["unroll"]
+
+
+@contextlib.contextmanager
+def unrolled(on: bool = True):
+    prev = _STATE["unroll"]
+    _STATE["unroll"] = on
+    try:
+        yield
+    finally:
+        _STATE["unroll"] = prev
+
+
+def maybe_scan(body, carry, xs, length=None):
+    """lax.scan, or an equivalent python loop when unroll mode is on.
+    xs: pytree of stacked arrays (or None with ``length``)."""
+    if not _STATE["unroll"]:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(int(n)):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jax.numpy.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked

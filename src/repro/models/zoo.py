@@ -1,0 +1,117 @@
+"""Uniform model API over all families + ShapeDtypeStruct input specs for
+the dry-run.
+
+  init_params(cfg, key)                 -> params pytree
+  loss_fn(cfg, params, batch)           -> scalar loss
+  decode_fn(cfg, params, cache, n, tok) -> (logits, new_cache)
+  init_cache(cfg, batch, max_len)       -> cache pytree
+  input_specs(cfg, shape_name)          -> dict of ShapeDtypeStructs
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig
+from . import encdec, transformer
+
+Params = Dict[str, Any]
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    if cfg.encdec:
+        return encdec.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def abstract_params(cfg: ArchConfig):
+    """Shape-only params for dry-run lowering (no allocation)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch):
+    if cfg.encdec:
+        return encdec.loss_fn(cfg, params, batch)
+    return transformer.loss_fn(cfg, params, batch)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.encdec:
+        # Cross-cache sized by the encoder context (stub: 1500 frames).
+        return encdec.init_cache(cfg, batch, max_len, enc_len=1500)
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+def decode_fn(cfg: ArchConfig, params: Params, cache, cache_len, token):
+    if cfg.encdec:
+        return encdec.decode_step(cfg, params, cache, cache_len, token)
+    return transformer.decode_step(cfg, params, cache, cache_len, token)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — never allocated)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                override_batch: int = 0) -> Dict[str, Any]:
+    """Model inputs for one shape cell (weak-type-correct stand-ins)."""
+    cell = SHAPES[shape_name]
+    b = override_batch or cell.global_batch
+    s = cell.seq_len
+    i32 = jnp.int32
+    f32 = jnp.dtype(cfg.param_dtype)
+    if cell.kind in ("train", "prefill"):
+        if cfg.encdec:
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if cfg.vision_prefix:
+            st = s - cfg.vision_prefix
+            return {
+                "vision_embeds": jax.ShapeDtypeStruct(
+                    (b, cfg.vision_prefix, cfg.d_model), f32),
+                "tokens": jax.ShapeDtypeStruct((b, st), i32),
+                "labels": jax.ShapeDtypeStruct((b, st), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a cache of length s
+    return {"token": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache_len": jax.ShapeDtypeStruct((), i32)}
+
+
+def abstract_cache(cfg: ArchConfig, shape_name: str):
+    cell = SHAPES[shape_name]
+    return jax.eval_shape(
+        lambda: init_cache(cfg, cell.global_batch, cell.seq_len))
+
+
+def make_batch(cfg: ArchConfig, shape_name: str, batch: int, seq: int,
+               key) -> Dict[str, Any]:
+    """Concrete random batch for smoke tests (reduced sizes)."""
+    cell = SHAPES[shape_name]
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    if cell.kind in ("train", "prefill"):
+        if cfg.encdec:
+            return {
+                "frames": jax.random.normal(k2, (batch, seq, cfg.d_model), dt),
+                "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab),
+                "labels": jax.random.randint(k1, (batch, seq), 0, cfg.vocab),
+            }
+        if cfg.vision_prefix:
+            st = max(seq - cfg.vision_prefix, 8)
+            return {
+                "vision_embeds": jax.random.normal(
+                    k2, (batch, cfg.vision_prefix, cfg.d_model), dt),
+                "tokens": jax.random.randint(k1, (batch, st), 0, cfg.vocab),
+                "labels": jax.random.randint(k1, (batch, st), 0, cfg.vocab),
+            }
+        return {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab),
+                "labels": jax.random.randint(k1, (batch, seq), 0, cfg.vocab)}
+    return {"token": jax.random.randint(k1, (batch, 1), 0, cfg.vocab),
+            "cache_len": jnp.asarray(seq - 1, jnp.int32)}

@@ -1,0 +1,94 @@
+"""Gradient-free PSO as an optimizer over model parameters — the paper's
+algorithm exposed with the same ergonomics as Adam/SGD (DESIGN.md §3).
+
+Each particle is a full parameter vector; fitness = −loss on the current
+batch. Viable for small parameter counts (probes, heads, adapters,
+neuroevolution demos) — population × params memory makes it intentionally
+NOT a replacement for gradient training of the big assigned archs (see
+DESIGN.md §Arch-applicability). Used by examples/quickstart.py and
+tests/test_pso_optimizer.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pso import PSOConfig, SwarmState, STEP_FNS, init_swarm
+
+
+class PSOOptimizer:
+    """Flattens a param pytree into the swarm's position space and runs the
+    queue-variant PSO steps against a user loss."""
+
+    def __init__(self, params_template: Any, particles: int = 32,
+                 span: float = 1.0, w: float = 0.72, c1: float = 1.49,
+                 c2: float = 1.49, variant: str = "queue", seed: int = 0):
+        leaves, self.treedef = jax.tree.flatten(params_template)
+        self.shapes = [l.shape for l in leaves]
+        self.sizes = [int(jnp.size(l)) for l in leaves]
+        self.dtypes = [l.dtype for l in leaves]
+        dim = sum(self.sizes)
+        self.cfg = PSOConfig(dim=dim, particle_cnt=particles, w=w, c1=c1,
+                             c2=c2, fitness="sphere", min_pos=-span,
+                             max_pos=span, max_v=0.25 * span).resolved()
+        self.step_fn = STEP_FNS[variant]
+        self.state = init_swarm(self.cfg, seed)
+        # center the swarm on the provided template
+        center = self._flatten(params_template)
+        self.state = self.state._replace(
+            pos=self.state.pos * 0.1 + center[None, :],
+            pbest_pos=self.state.pbest_pos * 0.1 + center[None, :],
+            gbest_pos=center)
+
+    def _flatten(self, params) -> jnp.ndarray:
+        leaves = jax.tree.leaves(params)
+        return jnp.concatenate(
+            [l.astype(jnp.float32).reshape(-1) for l in leaves])
+
+    def unflatten(self, vec: jnp.ndarray) -> Any:
+        leaves = []
+        off = 0
+        for shape, size, dt in zip(self.shapes, self.sizes, self.dtypes):
+            leaves.append(vec[off:off + size].reshape(shape).astype(dt))
+            off += size
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def step(self, loss_fn: Callable[[Any], jnp.ndarray]) -> float:
+        """Evaluate the population, update the swarm. Returns best loss.
+
+        Unlike the built-in step variants (which own their fitness
+        function), the external-loss mode evaluates the user loss, applies
+        the pbest/gbest updates with the queue predicate, and then advances
+        positions WITHOUT re-evaluating any internal fitness.
+        """
+        from repro.core import rng as crng
+        from repro.core.pso import STREAM_R1, STREAM_R2
+        fits = -jax.vmap(lambda v: loss_fn(self.unflatten(v)))(self.state.pos)
+        s = self.state._replace(fit=fits)
+        improved = fits > s.pbest_fit
+        pbest_fit = jnp.where(improved, fits, s.pbest_fit)
+        pbest_pos = jnp.where(improved[:, None], s.pos, s.pbest_pos)
+        if bool(jnp.any(fits > s.gbest_fit)):       # queue predicate (§4.1)
+            best = jnp.argmax(pbest_fit)
+            s = s._replace(gbest_fit=pbest_fit[best],
+                           gbest_pos=pbest_pos[best])
+        s = s._replace(pbest_fit=pbest_fit, pbest_pos=pbest_pos)
+        # advance (Alg. 1 steps 2 only — no internal fitness)
+        cfg = self.cfg
+        n, d = s.pos.shape
+        it = s.iteration + 1
+        idx = jnp.arange(n * d, dtype=jnp.uint32).reshape(n, d)
+        r1 = crng.uniform(s.seed, it, STREAM_R1, idx, dtype=s.pos.dtype)
+        r2 = crng.uniform(s.seed, it, STREAM_R2, idx, dtype=s.pos.dtype)
+        vel = (cfg.w * s.vel + cfg.c1 * r1 * (s.pbest_pos - s.pos)
+               + cfg.c2 * r2 * (s.gbest_pos[None] - s.pos))
+        vel = jnp.clip(vel, -cfg.max_v, cfg.max_v)
+        pos = jnp.clip(s.pos + vel, cfg.min_pos, cfg.max_pos)
+        self.state = s._replace(pos=pos, vel=vel, iteration=it)
+        return float(-self.state.gbest_fit)
+
+    @property
+    def best_params(self):
+        return self.unflatten(self.state.gbest_pos)

@@ -1,0 +1,7 @@
+from .analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, analyze,
+                       collective_bytes, count_active_params, count_params,
+                       model_flops)
+
+__all__ = ["Roofline", "analyze", "collective_bytes", "count_params",
+           "count_active_params", "model_flops", "PEAK_FLOPS", "HBM_BW",
+           "ICI_BW"]

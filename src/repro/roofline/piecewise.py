@@ -1,0 +1,536 @@
+"""Piecewise roofline accounting — correct FLOP/byte/collective totals for
+scan-over-layers models.
+
+``compiled.cost_analysis()`` counts a ``while`` (scan) body ONCE, not
+× trip-count (verified empirically; see EXPERIMENTS.md §Dry-run notes), so
+whole-model numbers from the scanned step function under-report by ~L×.
+Instead we lower each *piece* in unrolled-inner mode with the same
+shardings on the same production mesh, and combine:
+
+    total = Σ_piece  trip_count(piece) × cost(piece)  +  top-level piece
+
+Pieces per arch: one per distinct layer kind (dense/moe/hybrid-swa/
+hybrid-global/mlstm/slstm/enc/dec), the embed+loss head, and for decode the
+per-layer cache-update step. Training pieces are wrapped in the SAME remat
+policy as the real model, so recompute FLOPs are included. sLSTM's
+sequential time-scan is lowered at a short window and scaled linearly
+(per-step cost is constant in sequence position).
+
+The engine-level knob ``repro.models.unroll.UNROLL`` flips the inner
+lax.scans (flash-attention KV loop, GLA chunk loop, xent chunk loop) into
+python loops for these piece lowerings only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import unroll as unroll_mod
+from repro.models import zoo
+from . import analysis as ra
+
+
+@dataclasses.dataclass
+class PieceCost:
+    name: str
+    trips: float
+    flops: float            # per trip, per device
+    bytes_: float
+    coll_bytes: float
+    coll_count: int
+
+
+def _measure(fn, in_shardings, args, name: str, trips: float) -> PieceCost:
+    lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = ra.collective_bytes(compiled.as_text())
+    return PieceCost(name=name, trips=trips,
+                     flops=float(cost.get("flops", 0.0)),
+                     bytes_=float(cost.get("bytes accessed", 0.0)),
+                     coll_bytes=float(coll["total"]),
+                     coll_count=int(coll["count"]))
+
+
+def combine(pieces: List[PieceCost]) -> Dict[str, float]:
+    return {
+        "flops_dev": sum(p.flops * p.trips for p in pieces),
+        "bytes_dev": sum(p.bytes_ * p.trips for p in pieces),
+        "coll_bytes_dev": sum(p.coll_bytes * p.trips for p in pieces),
+        "coll_count": int(sum(p.coll_count * p.trips for p in pieces)),
+        "pieces": {p.name: {"trips": p.trips, "flops": p.flops,
+                            "bytes": p.bytes_, "coll": p.coll_bytes}
+                   for p in pieces},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Piece construction
+# ---------------------------------------------------------------------------
+
+def _dp(mesh):
+    from repro.launch.mesh import data_axes
+    dp = data_axes(mesh)
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _named(mesh, spec_tree):
+    from repro.launch import sharding as shp
+    return shp.to_named(spec_tree, mesh)
+
+
+def _single_layer_shapes(cfg: ArchConfig, kind: str):
+    from repro.models.transformer import _init_layer
+    return jax.eval_shape(lambda: _init_layer(cfg, jax.random.key(0), kind))
+
+
+def _layer_specs(cfg: ArchConfig, lp_shape, mesh):
+    from repro.launch import sharding as shp
+    return shp.param_pspecs(cfg, lp_shape, mesh)
+
+
+def _x_sds(cfg: ArchConfig, b: int, s: int):
+    return jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                jnp.dtype(cfg.param_dtype))
+
+
+def layer_plan_pieces(cfg: ArchConfig, s_total: int):
+    """[(name, kind, window, trips, s_piece, scale)] — scale multiplies the
+    measured cost (linear-in-S pieces lowered at a shorter window)."""
+    LIN_CAP = 4352                        # lower linear pieces at ≤ this S
+    out = []
+    if cfg.xlstm:
+        g = cfg.slstm_group
+        ng = cfg.n_layers // g
+        sp = min(s_total, 2048)
+        out.append(("mlstm", "mlstm", 0, ng * (g - 1), sp, s_total / sp))
+        sp_s = min(s_total, 64)
+        out.append(("slstm", "slstm", 0, ng, sp_s, s_total / sp_s))
+        return out
+    if cfg.hybrid_ssm:
+        n_glob = len(cfg.global_attn_layers)
+        sp = min(s_total, LIN_CAP)
+        out.append(("hybrid_swa", "hybrid", cfg.swa_window,
+                    cfg.n_layers - n_glob, sp, s_total / sp))
+        out.append(("hybrid_global", "hybrid", 0, n_glob, s_total, 1.0))
+        return out
+    kind = "moe" if cfg.moe else "dense"
+    out.append((kind, kind, 0, cfg.n_layers, s_total, 1.0))
+    return out
+
+
+ANALYSIS_BLOCK = 4096   # attention tiling for piece lowerings: FLOPs are
+                        # tiling-invariant; fewer/larger inner bodies keep
+                        # single-core compile times tractable.
+
+
+def _analysis_cfg(cfg: ArchConfig) -> ArchConfig:
+    # SWA archs: tiles must not exceed the window, or the blockwise loop
+    # loses its ability to skip out-of-window KV blocks and the analysis
+    # over-counts FLOPs that the real kernel never does.
+    blk = ANALYSIS_BLOCK
+    if cfg.swa_window:
+        blk = min(1024, max(cfg.swa_window, 128))
+    return dataclasses.replace(cfg, attn_q_block=blk, attn_kv_block=blk)
+
+
+def _train_layer_piece(cfg: ArchConfig, mesh, kind: str, window: int,
+                       b: int, s: int, name: str, trips: float,
+                       scale: float, fwd_only: bool = False) -> PieceCost:
+    from repro.models.transformer import _apply_layer, _remat
+    cfg = _analysis_cfg(cfg)
+    lp_shape = _single_layer_shapes(cfg, kind)
+    lp_spec = _named(mesh, _layer_specs(cfg, lp_shape, mesh))
+    x = _x_sds(cfg, b, s)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    x_spec = NamedSharding(mesh, P(_dp(mesh), None, None))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    body = functools.partial(_apply_layer, cfg, positions=positions,
+                             kind=kind, window=window)
+
+    if fwd_only:
+        def fn(lp, xx):
+            y, aux = body(lp, xx)
+            return jnp.sum(y).astype(jnp.float32) + aux
+        jfn = jax.jit(fn, in_shardings=(lp_spec, x_spec))
+    else:
+        rb = _remat(lambda lp, xx: body(lp, xx), cfg.remat)
+
+        def fn(lp, xx):
+            def lf(lp_, x_):
+                y, aux = rb(lp_, x_)
+                return jnp.sum(y).astype(jnp.float32) + aux
+            return jax.value_and_grad(lf, argnums=(0, 1))(lp, xx)
+
+        jfn = jax.jit(fn, in_shardings=(lp_spec, x_spec),
+                      out_shardings=(None, (lp_spec, x_spec)))
+    with unroll_mod.unrolled():
+        lowered = jfn.lower(lp_shape, x)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = ra.collective_bytes(compiled.as_text())
+    return PieceCost(name=name, trips=trips,
+                     flops=float(cost.get("flops", 0.0)) * scale,
+                     bytes_=float(cost.get("bytes accessed", 0.0)) * scale,
+                     coll_bytes=float(coll["total"]) * scale,
+                     coll_count=int(coll["count"]))
+
+
+def _encdec_layer_piece(cfg: ArchConfig, mesh, which: str, b: int, s: int,
+                        trips: float, fwd_only: bool) -> PieceCost:
+    from repro.models import encdec as ed
+    from repro.models.transformer import _remat
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    cfg = _analysis_cfg(cfg)
+    init = (ed._init_enc_layer if which == "enc" else ed._init_dec_layer)
+    lp_shape = jax.eval_shape(lambda: init(cfg, jax.random.key(0)))
+    lp_spec = _named(mesh, _layer_specs(cfg, lp_shape, mesh))
+    x = _x_sds(cfg, b, s)
+    x_spec = NamedSharding(mesh, P(_dp(mesh), None, None))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if which == "enc":
+        def body(lp, xx):
+            import jax.numpy as jn
+            from repro.models import attention as at
+            from repro.models.layers import apply_rope, mlp, rmsnorm
+            h = rmsnorm(lp["ln1"], xx, cfg.norm_eps)
+            q, k, v = at.gqa_project(lp["attn"], h, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.resolved_head_dim)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            a = at.flash_attention(q, k, v, causal=False,
+                                   q_block=cfg.attn_q_block,
+                                   kv_block=cfg.attn_kv_block)
+            a = a.reshape(b, s, -1) @ lp["attn"]["wo"]
+            xx = xx + a
+            h2 = rmsnorm(lp["ln2"], xx, cfg.norm_eps)
+            return xx + mlp(lp["mlp"], h2, cfg.act)
+
+        def fn_fwd(lp, xx):
+            return jnp.sum(body(lp, xx)).astype(jnp.float32)
+        args = (lp_shape, x)
+        in_sh = (lp_spec, x_spec)
+        out_sh = (None, (lp_spec, x_spec))
+    else:
+        def body(lp, xx, enc):
+            from repro.models import attention as at
+            from repro.models.layers import mlp, rmsnorm
+            a = at.gqa_forward(lp["self_attn"],
+                               rmsnorm(lp["ln1"], xx, cfg.norm_eps),
+                               positions, **ed._kw(cfg))
+            xx = xx + a
+            kv = ed._enc_kv(cfg, lp, enc)
+            xx = xx + ed._cross_attend(cfg, lp, xx, kv)
+            h2 = rmsnorm(lp["ln2"], xx, cfg.norm_eps)
+            return xx + mlp(lp["mlp"], h2, cfg.act)
+
+        def fn_fwd(lp, xx, enc):
+            return jnp.sum(body(lp, xx, enc)).astype(jnp.float32)
+        args = (lp_shape, x, x)
+        in_sh = (lp_spec, x_spec, x_spec)
+        out_sh = (None, (lp_spec, x_spec, x_spec))
+
+    if fwd_only:
+        jfn = jax.jit(fn_fwd, in_shardings=in_sh)
+    else:
+        rb = _remat(fn_fwd, cfg.remat)
+        nargs = len(args)
+
+        def fn(*a):
+            return jax.value_and_grad(rb, argnums=tuple(range(nargs)))(*a)
+
+        jfn = jax.jit(fn, in_shardings=in_sh,
+                      out_shardings=(None, tuple(in_sh)))
+    with unroll_mod.unrolled():
+        compiled = jfn.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = ra.collective_bytes(compiled.as_text())
+    return PieceCost(name=f"{which}_layer", trips=trips,
+                     flops=float(cost.get("flops", 0.0)),
+                     bytes_=float(cost.get("bytes accessed", 0.0)),
+                     coll_bytes=float(coll["total"]),
+                     coll_count=int(coll["count"]))
+
+
+def _head_piece(cfg: ArchConfig, mesh, b: int, s_text: int,
+                fwd_only: bool) -> PieceCost:
+    """final norm + unembed + chunked xent (+ grads)."""
+    from repro.models.layers import chunked_xent, rmsnorm
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dt = jnp.dtype(cfg.param_dtype)
+    dp = _dp(mesh)
+    x = jax.ShapeDtypeStruct((b, s_text, cfg.d_model), dt)
+    labels = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    w = jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), dt)
+    norm = jax.ShapeDtypeStruct((cfg.d_model,), dt)
+    x_spec = NamedSharding(mesh, P(dp, None, None))
+    l_spec = NamedSharding(mesh, P(dp, None))
+    w_spec = NamedSharding(
+        mesh, P("data" if cfg.d_model % mesh.shape["data"] == 0 else None,
+                "model" if cfg.vocab % mesh.shape["model"] == 0 else None))
+    n_spec = NamedSharding(mesh, P(None))
+
+    def fn(norm_w, w_un, xx, ll):
+        h = rmsnorm(norm_w, xx, cfg.norm_eps)
+        return chunked_xent(h, w_un, ll, cfg.loss_chunk,
+                            pad_vocab=cfg.pad_vocab)
+
+    if fwd_only:
+        jfn = jax.jit(fn, in_shardings=(n_spec, w_spec, x_spec, l_spec))
+    else:
+        def gfn(norm_w, w_un, xx, ll):
+            return jax.value_and_grad(fn, argnums=(0, 1, 2))(
+                norm_w, w_un, xx, ll)
+        jfn = jax.jit(gfn, in_shardings=(n_spec, w_spec, x_spec, l_spec),
+                      out_shardings=(None, (n_spec, w_spec, x_spec)))
+    with unroll_mod.unrolled():
+        compiled = jfn.lower(norm, w, x, labels).compile()
+    cost = compiled.cost_analysis()
+    coll = ra.collective_bytes(compiled.as_text())
+    return PieceCost("head", 1.0, float(cost.get("flops", 0.0)),
+                     float(cost.get("bytes accessed", 0.0)),
+                     float(coll["total"]), int(coll["count"]))
+
+
+def _embed_piece(cfg: ArchConfig, mesh, b: int, s_text: int,
+                 fwd_only: bool) -> PieceCost:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dt = jnp.dtype(cfg.param_dtype)
+    dp = _dp(mesh)
+    emb = jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dt)
+    toks = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    e_spec = NamedSharding(
+        mesh, P("model" if cfg.vocab % mesh.shape["model"] == 0 else None,
+                "data" if cfg.d_model % mesh.shape["data"] == 0 else None))
+    t_spec = NamedSharding(mesh, P(dp, None))
+
+    def fn(e, t):
+        return jnp.sum(jnp.take(e, t, axis=0).astype(jnp.float32))
+
+    if fwd_only:
+        jfn = jax.jit(fn, in_shardings=(e_spec, t_spec))
+    else:
+        jfn = jax.jit(lambda e, t: jax.value_and_grad(fn)(e, t),
+                      in_shardings=(e_spec, t_spec),
+                      out_shardings=(None, e_spec))
+    compiled = jfn.lower(emb, toks).compile()
+    cost = compiled.cost_analysis()
+    coll = ra.collective_bytes(compiled.as_text())
+    return PieceCost("embed", 1.0, float(cost.get("flops", 0.0)),
+                     float(cost.get("bytes accessed", 0.0)),
+                     float(coll["total"]), int(coll["count"]))
+
+
+def _optimizer_piece(cfg: ArchConfig, mesh) -> PieceCost:
+    from repro.launch import sharding as shp
+    from repro.launch.steps import make_train_step
+    from repro.models import zoo
+    from repro.optim import get_optimizer
+    params_shape = zoo.abstract_params(cfg)
+    pspecs_p = shp.param_pspecs(cfg, params_shape, mesh)
+    pspecs = _named(mesh, pspecs_p)
+    opt_init, opt_update = get_optimizer(cfg.optimizer)
+    opt_shape = jax.eval_shape(opt_init, params_shape)
+    ospecs = _named(mesh, shp.opt_pspecs(cfg, opt_shape, mesh, pspecs_p))
+
+    def fn(p, g, s):
+        return opt_update(p, g, s, 1e-4)
+
+    jfn = jax.jit(fn, in_shardings=(pspecs, pspecs, ospecs),
+                  out_shardings=(pspecs, ospecs))
+    compiled = jfn.lower(params_shape, params_shape, opt_shape).compile()
+    cost = compiled.cost_analysis()
+    coll = ra.collective_bytes(compiled.as_text())
+    return PieceCost("optimizer", 1.0, float(cost.get("flops", 0.0)),
+                     float(cost.get("bytes accessed", 0.0)),
+                     float(coll["total"]), int(coll["count"]))
+
+
+# ---------------------------------------------------------------------------
+# Decode pieces
+# ---------------------------------------------------------------------------
+
+def _decode_layer_piece(cfg: ArchConfig, mesh, shape_name: str, kind: str,
+                        window: int, name: str, trips: float) -> PieceCost:
+    from repro.launch import sharding as shp
+    from repro.models import zoo
+    from repro.models.transformer import _decode_layer
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    cell = SHAPES[shape_name]
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.encdec:
+        from repro.models import encdec as ed
+        lp_shape = jax.eval_shape(
+            lambda: ed._init_dec_layer(cfg, jax.random.key(0)))
+    else:
+        lp_shape = _single_layer_shapes(cfg, kind)
+    lp_spec = _named(mesh, _layer_specs(cfg, lp_shape, mesh))
+    cache_full = zoo.abstract_cache(cfg, shape_name)
+    cspec_full = shp.cache_pspecs(cfg, cache_full, shape_name, mesh)
+
+    def strip(tree_sds, tree_spec, n_lead: int):
+        sds = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[n_lead:], a.dtype),
+            tree_sds)
+        spec = jax.tree.map(lambda p: P(*p[n_lead:]), tree_spec,
+                            is_leaf=lambda x: isinstance(x, P))
+        return sds, spec
+
+    if cfg.xlstm:
+        if kind == "mlstm":
+            sub, subspec = strip(cache_full["m"], cspec_full["m"], 2)
+        else:
+            sub = [jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+                   for a in cache_full["s"]]
+            subspec = [P(*p[1:]) for p in cspec_full["s"]]
+    elif cfg.hybrid_ssm:
+        sub, subspec = strip(cache_full["swa"], cspec_full["swa"], 1)
+    else:
+        sub, subspec = strip(cache_full, cspec_full, 1)
+    c_spec = _named(mesh, subspec)
+    x = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.dtype(cfg.param_dtype))
+    dp = _dp(mesh)
+    # batch=1 (long_500k): replicate x over the batch axes
+    x_ax = dp if (b % _axes_size(mesh, dp) == 0) else None
+    bspec = NamedSharding(mesh, P(x_ax, None, None))
+    n = jax.ShapeDtypeStruct((), jnp.int32)
+
+    if cfg.encdec:
+        from repro.models import encdec as ed
+        from repro.models import attention as at
+        from repro.models.layers import mlp, rmsnorm
+
+        def fn(lp, cl, xx, cache_len):
+            h = rmsnorm(lp["ln1"], xx, cfg.norm_eps)
+            kw = ed._kw(cfg)
+            kw.pop("q_block"), kw.pop("kv_block")
+            a, new_kv = at.gqa_decode(lp["self_attn"], h,
+                                      {"k": cl["k"], "v": cl["v"]},
+                                      cache_len, **kw)
+            xx = xx + a
+            hx = rmsnorm(lp["ln_x"], xx, cfg.norm_eps)
+            q = (hx @ lp["cross_attn"]["wq"]).reshape(
+                b, 1, cfg.n_heads, cfg.resolved_head_dim)
+            xa = at.decode_attention(q, cl["xk"], cl["xv"],
+                                     cl["xk"].shape[1])
+            xx = xx + xa.reshape(b, 1, -1) @ lp["cross_attn"]["wo"]
+            h2 = rmsnorm(lp["ln2"], xx, cfg.norm_eps)
+            xx = xx + mlp(lp["mlp"], h2, cfg.act)
+            return xx, dict(cl, k=new_kv["k"], v=new_kv["v"])
+    else:
+        def fn(lp, cl, xx, cache_len):
+            return _decode_layer(cfg, lp, cl, xx, cache_len, kind, window)
+
+    jfn = jax.jit(fn, in_shardings=(lp_spec, c_spec, bspec, None),
+                  out_shardings=(bspec, c_spec))
+    compiled = jfn.lower(lp_shape, sub, x, n).compile()
+    cost = compiled.cost_analysis()
+    coll = ra.collective_bytes(compiled.as_text())
+    return PieceCost(name, trips, float(cost.get("flops", 0.0)),
+                     float(cost.get("bytes accessed", 0.0)),
+                     float(coll["total"]), int(coll["count"]))
+
+
+def _axes_size(mesh, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def _decode_top_piece(cfg: ArchConfig, mesh, b: int) -> PieceCost:
+    """embed gather (1 tok) + final norm + unembed matmul."""
+    from repro.models.layers import rmsnorm
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dt = jnp.dtype(cfg.param_dtype)
+    emb = jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dt)
+    w = jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), dt)
+    norm = jax.ShapeDtypeStruct((cfg.d_model,), dt)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    e_spec = NamedSharding(
+        mesh, P("model" if cfg.vocab % mesh.shape["model"] == 0 else None,
+                None))
+    w_spec = NamedSharding(
+        mesh, P(None,
+                "model" if cfg.vocab % mesh.shape["model"] == 0 else None))
+
+    def fn(e, wn, wu, t):
+        x = jnp.take(e, t, axis=0)
+        x = rmsnorm(wn, x, cfg.norm_eps)
+        return (x[:, 0] @ wu).astype(jnp.float32)
+
+    jfn = jax.jit(fn, in_shardings=(e_spec, None, w_spec, None))
+    compiled = jfn.lower(emb, norm, w, tok).compile()
+    cost = compiled.cost_analysis()
+    coll = ra.collective_bytes(compiled.as_text())
+    return PieceCost("decode_top", 1.0, float(cost.get("flops", 0.0)),
+                     float(cost.get("bytes accessed", 0.0)),
+                     float(coll["total"]), int(coll["count"]))
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def analyze_cell_piecewise(cfg: ArchConfig, shape_name: str, mesh,
+                           ) -> Dict[str, Any]:
+    cell = SHAPES[shape_name]
+    b, s = cell.global_batch, cell.seq_len
+    pieces: List[PieceCost] = []
+    if cell.kind in ("train", "prefill"):
+        fwd = cell.kind == "prefill"
+        s_total = s
+        s_text = s
+        if cfg.vision_prefix:
+            s_text = s - cfg.vision_prefix
+        if cfg.meta_tokens:
+            s_total = s + cfg.meta_tokens
+        if cfg.encdec:
+            pieces.append(_encdec_layer_piece(cfg, mesh, "enc", b, s,
+                                              cfg.enc_layers, fwd))
+            pieces.append(_encdec_layer_piece(cfg, mesh, "dec", b, s,
+                                              cfg.n_layers, fwd))
+        else:
+            for (name, kind, window, trips, sp, scale) in \
+                    layer_plan_pieces(cfg, s_total):
+                pieces.append(_train_layer_piece(
+                    cfg, mesh, kind, window, b, sp, name, trips, scale,
+                    fwd_only=fwd))
+        pieces.append(_head_piece(cfg, mesh, b, s_text, fwd))
+        pieces.append(_embed_piece(cfg, mesh, b, s_text, fwd))
+        if cell.kind == "train":
+            pieces.append(_optimizer_piece(cfg, mesh))
+    else:
+        if cfg.encdec:
+            pieces.append(_decode_layer_piece(
+                cfg, mesh, shape_name, "dense", 0, "dec_layer",
+                cfg.n_layers))
+        elif cfg.xlstm:
+            g = cfg.slstm_group
+            ng = cfg.n_layers // g
+            pieces.append(_decode_layer_piece(cfg, mesh, shape_name,
+                                              "mlstm", 0, "mlstm",
+                                              ng * (g - 1)))
+            pieces.append(_decode_layer_piece(cfg, mesh, shape_name,
+                                              "slstm", 0, "slstm", ng))
+        elif cfg.hybrid_ssm:
+            pieces.append(_decode_layer_piece(
+                cfg, mesh, shape_name, "hybrid", cfg.swa_window, "hybrid",
+                cfg.n_layers))
+        else:
+            kind = "moe" if cfg.moe else "dense"
+            pieces.append(_decode_layer_piece(cfg, mesh, shape_name, kind,
+                                              0, kind, cfg.n_layers))
+        pieces.append(_decode_top_piece(cfg, mesh, b))
+    return combine(pieces)

@@ -1,0 +1,87 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
+reports/dryrun.json.
+
+    PYTHONPATH=src python -m repro.roofline.report reports/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def dryrun_table(results: Dict) -> str:
+    rows = ["| cell | mesh | status | HLO flops/dev | bytes/dev | "
+            "coll GB/chip | mem/dev (arg+tmp) GB | compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        r = results[key]
+        arch_shape = "|".join(key.split("|")[:2])
+        mesh = key.split("|")[2]
+        if r.get("status") == "skip":
+            rows.append(f"| {arch_shape} | {mesh} | skip | | | | | |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {arch_shape} | {mesh} | **FAIL** | | | | | |")
+            continue
+        chips = r.get("chips", 256)
+        mem = r.get("mem_argument_gb", 0) + r.get("mem_temp_gb", 0)
+        rows.append(
+            f"| {arch_shape} | {mesh} | ok "
+            f"| {r['flops_total']/chips:.2e} "
+            f"| {r['bytes_total']/chips:.2e} "
+            f"| {r['coll_bytes_per_chip']/1e9:.2f} "
+            f"| {mem:.1f} "
+            f"| {r.get('t_compile_s', 0):.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(results: Dict) -> str:
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | "
+            "bottleneck | MODEL_FLOPS | useful ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        r = results[key]
+        if r.get("status") != "ok" or not key.endswith("16x16") \
+                or "2x16x16" in key or "pieces" not in r:
+            continue
+        arch, shape, _ = key.split("|")
+        rows.append(
+            f"| {arch} | {shape} | {fmt_s(r['t_compute'])} "
+            f"| {fmt_s(r['t_memory'])} | {fmt_s(r['t_collective'])} "
+            f"| **{r['bottleneck']}** | {r['model_flops']:.2e} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def summary(results: Dict) -> str:
+    ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    skip = sum(1 for v in results.values() if v.get("status") == "skip")
+    fail = sum(1 for v in results.values() if v.get("status") == "fail")
+    return f"{ok} compiled ok, {skip} defined-skips, {fail} failures"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun.json"
+    with open(path) as f:
+        results = json.load(f)
+    print("## Summary\n")
+    print(summary(results) + "\n")
+    print("## Dry-run table\n")
+    print(dryrun_table(results) + "\n")
+    print("## Roofline table (single-pod 16x16)\n")
+    print(roofline_table(results))
+
+
+if __name__ == "__main__":
+    main()

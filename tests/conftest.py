@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: XLA_FLAGS --xla_force_host_platform_device_count is deliberately NOT
+# set here — smoke tests and benchmarks must see the real single CPU device.
+# Only launch/dryrun.py fakes 512 devices (and only in its own process).
+
+
+@pytest.fixture(scope="session")
+def rng_np():
+    return np.random.default_rng(0)

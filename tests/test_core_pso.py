@@ -1,0 +1,122 @@
+"""Behaviour tests for the core PSO variants (paper Alg. 1 / §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PSOConfig, SerialSwarm, init_swarm, run, solve,
+                        step_queue, step_queue_lock, step_reduction)
+from repro.core.pso import STEP_FNS
+
+CUBIC_1D_MAX = 900000.0  # f(100) for Eq. 3, the boundary max on [-100, 100]
+
+
+@pytest.mark.parametrize("variant", ["reduction", "queue", "queue_lock"])
+def test_variants_converge_cubic_1d(variant):
+    s = solve(PSOConfig(dim=1, particle_cnt=256), seed=0, iters=200,
+              variant=variant)
+    assert float(s.gbest_fit) == pytest.approx(CUBIC_1D_MAX, rel=1e-6)
+
+
+@pytest.mark.parametrize("variant", ["reduction", "queue", "queue_lock"])
+def test_variants_converge_sphere_5d(variant):
+    cfg = PSOConfig(dim=5, particle_cnt=512, fitness="sphere", w=0.7)
+    s = solve(cfg, seed=1, iters=400, variant=variant)
+    assert float(s.gbest_fit) > -1e-2          # optimum is 0
+    np.testing.assert_allclose(np.asarray(s.gbest_pos), 0.0, atol=0.2)
+
+
+def test_queue_equals_reduction_trajectory():
+    """§4.1: the queue algorithm is an *optimization*, not an approximation —
+    gbest trajectories must be identical to the reduction baseline."""
+    cfg = PSOConfig(dim=7, particle_cnt=128, fitness="rastrigin").resolved()
+    s_q = init_swarm(cfg, 3)
+    s_r = init_swarm(cfg, 3)
+    for _ in range(50):
+        s_q = step_queue(cfg, s_q)
+        s_r = step_reduction(cfg, s_r)
+        assert float(s_q.gbest_fit) == float(s_r.gbest_fit)
+    np.testing.assert_allclose(np.asarray(s_q.pos), np.asarray(s_r.pos),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_queue_lock_equals_queue_trajectory():
+    cfg = PSOConfig(dim=4, particle_cnt=256, fitness="ackley").resolved()
+    s_q = init_swarm(cfg, 5)
+    s_l = init_swarm(cfg, 5)
+    for _ in range(50):
+        s_q = step_queue(cfg, s_q)
+        s_l = step_queue_lock(cfg, s_l)
+    np.testing.assert_allclose(float(s_q.gbest_fit), float(s_l.gbest_fit),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_q.pos), np.asarray(s_l.pos),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("variant", ["reduction", "queue", "queue_lock"])
+def test_gbest_monotone_and_bounds(variant):
+    cfg = PSOConfig(dim=12, particle_cnt=64, fitness="griewank").resolved()
+    s = init_swarm(cfg, 11)
+    step = STEP_FNS[variant]
+    prev = float(s.gbest_fit)
+    for _ in range(30):
+        s = step(cfg, s)
+        g = float(s.gbest_fit)
+        assert g >= prev                       # gbest never regresses
+        prev = g
+        pos = np.asarray(s.pos)
+        vel = np.asarray(s.vel)
+        assert pos.min() >= cfg.min_pos - 1e-6
+        assert pos.max() <= cfg.max_pos + 1e-6
+        assert np.abs(vel).max() <= cfg.max_v + 1e-6
+        # pbest dominates current fitness
+        assert np.all(np.asarray(s.pbest_fit) >= np.asarray(s.fit) - 1e-5)
+        # gbest dominates all pbests
+        assert g >= np.asarray(s.pbest_fit).max() - 1e-4 * abs(g)
+
+
+def test_serial_spso_matches_sync_on_single_particle():
+    """With one particle, sequential vs synchronous semantics coincide."""
+    cfg = PSOConfig(dim=2, particle_cnt=1, fitness="sphere").resolved()
+    ser = SerialSwarm(cfg, seed=9)
+    par = init_swarm(cfg, 9)
+    np.testing.assert_allclose(ser.pos, np.asarray(par.pos), rtol=1e-6)
+    for _ in range(20):
+        ser.step()
+        par = step_reduction(cfg, par)
+    np.testing.assert_allclose(ser.pos, np.asarray(par.pos),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ser.gbest_fit, float(par.gbest_fit),
+                               rtol=1e-4)
+
+
+def test_serial_spso_gbest_dominates():
+    cfg = PSOConfig(dim=3, particle_cnt=8, fitness="rastrigin")
+    ser = SerialSwarm(cfg, seed=2)
+    f0 = ser.gbest_fit
+    ser.run(25)
+    assert ser.gbest_fit >= f0
+    assert ser.gbest_fit >= ser.pbest_fit.max() - 1e-6
+
+
+def test_run_fori_loop_equals_python_loop():
+    cfg = PSOConfig(dim=6, particle_cnt=128, fitness="cubic").resolved()
+    s_loop = init_swarm(cfg, 4)
+    for _ in range(17):
+        s_loop = step_queue(cfg, s_loop)
+    s_run = run(cfg, init_swarm(cfg, 4), 17, "queue")
+    np.testing.assert_allclose(np.asarray(s_loop.pos), np.asarray(s_run.pos),
+                               rtol=1e-5, atol=1e-5)
+    assert int(s_run.iteration) == 17
+
+
+def test_float64_path():
+    """Paper uses double precision; the library supports it on CPU."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        cfg = PSOConfig(dim=1, particle_cnt=64, dtype="float64")
+        s = solve(cfg, seed=0, iters=100, variant="queue")
+        assert s.pos.dtype == jnp.float64
+        assert float(s.gbest_fit) == pytest.approx(CUBIC_1D_MAX, rel=1e-9)
+    finally:
+        jax.config.update("jax_enable_x64", False)

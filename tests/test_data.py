@@ -1,0 +1,57 @@
+"""Data pipeline: determinism, shard-exactness, restart replay."""
+import numpy as np
+
+from repro.data import DataConfig, MemmapCorpus, SyntheticLM, write_corpus
+
+
+def test_synthetic_deterministic_replay():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8, seed=5)
+    a = SyntheticLM(cfg).batch(13)
+    b = SyntheticLM(cfg).batch(13)            # fresh instance, same step
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    c = SyntheticLM(cfg).batch(14)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4)
+    b = SyntheticLM(cfg).batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_sharding_partitions_global_batch():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=8, seed=1)
+    whole = SyntheticLM(cfg).batch(3)
+    parts = [
+        SyntheticLM(DataConfig(vocab=1000, seq_len=16, global_batch=8,
+                               seed=1, num_shards=2, shard_id=i)).batch(3)
+        for i in range(2)
+    ]
+    merged = np.concatenate([p["tokens"] for p in parts])
+    np.testing.assert_array_equal(whole["tokens"], merged)
+
+
+def test_elastic_reshard_same_examples():
+    """4 shards and 2 shards must produce the same global example set."""
+    def allb(n):
+        return np.concatenate([
+            SyntheticLM(DataConfig(vocab=500, seq_len=8, global_batch=8,
+                                   seed=2, num_shards=n, shard_id=i)
+                        ).batch(0)["tokens"]
+            for i in range(n)])
+    np.testing.assert_array_equal(allb(2), allb(4))
+
+
+def test_memmap_corpus(tmp_path):
+    path = str(tmp_path / "corpus.bin")
+    rng = np.random.default_rng(0)
+    write_corpus(path, rng.integers(0, 1000, size=10000))
+    cfg = DataConfig(vocab=1000, seq_len=64, global_batch=4, seed=3)
+    c = MemmapCorpus(path, cfg)
+    a = c.batch(5)
+    b = MemmapCorpus(path, cfg).batch(5)      # restart-exact
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 64)
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 1000
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])

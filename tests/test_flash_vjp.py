@@ -1,0 +1,78 @@
+"""Custom flash VJP vs autodiff-through-scan reference: values and all
+three gradients, across causal/window/GQA/offset configurations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import flash_attention
+from repro.models.flash_vjp import flash_attention_vjp
+
+CASES = [
+    # (B, Sq, Sk, H, KH, hd, hdv, causal, window, qb, kb)
+    (2, 64, 64, 4, 4, 16, 16, True, 0, 32, 32),
+    (1, 128, 128, 8, 2, 16, 16, True, 0, 64, 32),    # GQA
+    (2, 96, 96, 4, 4, 16, 16, True, 32, 32, 32),     # sliding window
+    (1, 64, 64, 4, 2, 16, 8, True, 0, 32, 32),       # hd_qk != hd_v
+    (2, 64, 64, 4, 4, 16, 16, False, 0, 32, 32),     # non-causal
+]
+
+
+def _mk(case, seed=0):
+    b, sq, sk, h, kh, hd, hdv, causal, window, qb, kb = case
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, sk, kh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, sk, kh, hdv), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_forward_matches(case):
+    b, sq, sk, h, kh, hd, hdv, causal, window, qb, kb = case
+    q, k, v = _mk(case)
+    ref = flash_attention(q, k, v, causal=causal, window=window,
+                          q_block=qb, kv_block=kb)
+    got = flash_attention_vjp(q, k, v, causal, window, 0, qb, kb, None, 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_grads_match(case):
+    b, sq, sk, h, kh, hd, hdv, causal, window, qb, kb = case
+    q, k, v = _mk(case)
+
+    def loss_ref(q, k, v):
+        o = flash_attention(q, k, v, causal=causal, window=window,
+                            q_block=qb, kv_block=kb)
+        return jnp.sum(jnp.sin(o))          # nontrivial cotangents
+
+    def loss_vjp(q, k, v):
+        o = flash_attention_vjp(q, k, v, causal, window, 0, qb, kb, None, 0)
+        return jnp.sum(jnp.sin(o))
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    g_got = jax.grad(loss_vjp, argnums=(0, 1, 2))(q, k, v)
+    for name, a, bb in zip("qkv", g_got, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                   rtol=5e-4, atol=5e-4,
+                                   err_msg=f"d{name} mismatch")
+
+
+def test_model_trains_with_custom_vjp():
+    """End-to-end: smoke arch with flash_custom_vjp=True trains one step
+    and matches the default path's loss."""
+    import dataclasses
+    from repro.configs import get_arch
+    from repro.models import zoo
+    cfg0 = get_arch("stablelm-3b").smoke()
+    cfg1 = dataclasses.replace(cfg0, flash_custom_vjp=True)
+    params = zoo.init_params(cfg0, jax.random.key(0))
+    batch = zoo.make_batch(cfg0, "train_4k", 2, 64, jax.random.key(1))
+    l0 = float(jax.jit(lambda p: zoo.loss_fn(cfg0, p, batch))(params))
+    l1 = float(jax.jit(lambda p: zoo.loss_fn(cfg1, p, batch))(params))
+    assert l0 == pytest.approx(l1, rel=1e-4)
+    g = jax.jit(jax.grad(lambda p: zoo.loss_fn(cfg1, p, batch)))(params)
+    assert all(np.all(np.isfinite(np.asarray(x, np.float32)))
+               for x in jax.tree.leaves(g))

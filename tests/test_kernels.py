@@ -1,0 +1,125 @@
+"""Pallas kernel validation: interpret-mode kernels vs pure-jnp oracles
+(ref.py) and vs the independent library implementation (core/pso.py),
+swept over shapes, dims, block sizes and fitness functions."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PSOConfig, init_swarm
+from repro.core.pso import step_queue
+from repro.kernels import ops, ref
+from repro.kernels.pso_step import KERNEL_FITNESS, pad_dim
+
+
+def _oracle_kwargs(cfg, dim):
+    kw = ops._cfg_kwargs(cfg)
+    kw["d_real"] = dim
+    return kw
+
+
+SHAPE_SWEEP = [
+    # (dim, n, block_n) — includes the paper's two regimes (1D, 120D)
+    (1, 128, 128),
+    (1, 1024, 256),
+    (2, 256, 128),
+    (120, 256, 128),
+    (120, 512, 512),
+    (33, 384, 128),      # non-aligned dim, odd block count
+]
+
+
+@pytest.mark.parametrize("dim,n,bn", SHAPE_SWEEP)
+@pytest.mark.parametrize("fitness", ["cubic", "rastrigin"])
+def test_queue_kernel_vs_oracle(dim, n, bn, fitness):
+    cfg = PSOConfig(dim=dim, particle_cnt=n, fitness=fitness).resolved()
+    s = init_swarm(cfg, 42)
+    out = ops.queue_step(cfg, s, block_n=bn)
+    scal, pos, vel, pbp, pbf, gp, gf = ops.state_to_kernel(s, dim)
+    kw = _oracle_kwargs(cfg, dim)
+    fitness_name = kw.pop("fitness")
+    o_pos, o_vel, o_pbp, o_pbf, o_gp, o_gf, aux_f, aux_i = ref.queue_step_oracle(
+        int(s.seed), int(s.iteration), pos, vel, pbp, pbf, gp, float(gf[0]),
+        bn, fitness=fitness_name, **kw)
+    np.testing.assert_allclose(np.asarray(ops.pack_dmajor(out.pos, dim)),
+                               np.asarray(o_pos), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ops.pack_dmajor(out.vel, dim)),
+                               np.asarray(o_vel), rtol=1e-5, atol=1e-5)
+    # atol: |∂f/∂x| ~ 3·max_pos² for cubic ⇒ 1 ulp of pos ≈ 0.25 in fit
+    np.testing.assert_allclose(np.asarray(out.pbest_fit),
+                               np.asarray(o_pbf)[0], rtol=1e-5, atol=0.5)
+    np.testing.assert_allclose(float(out.gbest_fit), float(o_gf), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dim,n,bn", SHAPE_SWEEP)
+def test_fused_kernel_vs_oracle(dim, n, bn):
+    iters = 5
+    cfg = PSOConfig(dim=dim, particle_cnt=n, fitness="cubic").resolved()
+    s = init_swarm(cfg, 7)
+    out = ops.run_queue_lock_fused(cfg, s, iters=iters, block_n=bn)
+    scal, pos, vel, pbp, pbf, gp, gf = ops.state_to_kernel(s, dim)
+    kw = _oracle_kwargs(cfg, dim)
+    fitness_name = kw.pop("fitness")
+    o = ref.run_fused_oracle(int(s.seed), int(s.iteration), pos, vel, pbp,
+                             pbf, gp, float(gf[0]), iters, bn,
+                             fitness=fitness_name, **kw)
+    np.testing.assert_allclose(np.asarray(ops.pack_dmajor(out.pos, dim)),
+                               np.asarray(o[0]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(out.gbest_fit), float(o[5]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out.gbest_pos),
+                               np.asarray(o[4])[:dim, 0],
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("fitness", list(KERNEL_FITNESS))
+def test_kernel_fitness_matches_library(fitness):
+    """_fitness_dmajor must agree with repro.core.fitness row-for-row."""
+    from repro.core.fitness import FITNESS_FNS
+    from repro.kernels.pso_step import _fitness_dmajor
+    rng = np.random.default_rng(1)
+    for d in (1, 2, 17, 120):
+        n = 128
+        pos = rng.uniform(-5, 5, size=(n, d)).astype(np.float32)
+        want = np.asarray(FITNESS_FNS[fitness](jnp.asarray(pos)))
+        packed = ops.pack_dmajor(jnp.asarray(pos), d)
+        dmask = (np.arange(pad_dim(d)) < d)[:, None] & np.ones((1, n), bool)
+        got = np.asarray(_fitness_dmajor(fitness, packed,
+                                         jnp.asarray(dmask), d))[0]
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_queue_kernel_matches_library_step():
+    """Kernel (interpret) vs the independent [N,D]-layout library step."""
+    cfg = PSOConfig(dim=120, particle_cnt=256, fitness="cubic").resolved()
+    s = init_swarm(cfg, 0)
+    k = ops.queue_step(cfg, s, block_n=128)
+    j = step_queue(cfg, s)
+    np.testing.assert_allclose(np.asarray(k.pos), np.asarray(j.pos),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(k.pbest_fit),
+                               np.asarray(j.pbest_fit), rtol=1e-4, atol=1.0)
+    # gbest: kernel uses (queue ∘ blocks) argmax — same value as global argmax
+    np.testing.assert_allclose(float(k.gbest_fit), float(j.gbest_fit),
+                               rtol=1e-5)
+
+
+def test_fused_kernel_converges_120d():
+    cfg = PSOConfig(dim=120, particle_cnt=512, fitness="cubic", w=0.9).resolved()
+    s = init_swarm(cfg, 0)
+    f0 = float(s.gbest_fit)
+    out = ops.run_queue_lock_fused(cfg, s, iters=150, block_n=128)
+    assert float(out.gbest_fit) > f0
+    # 120D cubic optimum = 120 * 900000
+    assert float(out.gbest_fit) > 0.55 * 120 * 900000.0
+    assert not np.any(np.isnan(np.asarray(out.pos)))
+
+
+def test_fused_iteration_counter_chains():
+    """Two fused calls of k iters == one call of 2k iters (RNG continuity)."""
+    cfg = PSOConfig(dim=9, particle_cnt=128, fitness="sphere").resolved()
+    s = init_swarm(cfg, 13)
+    a = ops.run_queue_lock_fused(cfg, s, iters=4, block_n=128)
+    a = ops.run_queue_lock_fused(cfg, a, iters=4, block_n=128)
+    b = ops.run_queue_lock_fused(cfg, s, iters=8, block_n=128)
+    np.testing.assert_allclose(np.asarray(a.pos), np.asarray(b.pos),
+                               rtol=1e-5, atol=1e-5)
+    assert int(a.iteration) == int(b.iteration) == 8

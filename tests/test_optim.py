@@ -1,0 +1,88 @@
+"""Optimizers + PSO-as-optimizer + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (PSOOptimizer, adafactor_init, adafactor_update,
+                         adam_init, adam_update, cosine_schedule,
+                         get_optimizer, sgd_init, sgd_update)
+
+OPTS = [("adam", adam_init, adam_update),
+        ("adafactor", adafactor_init, adafactor_update),
+        ("sgd", sgd_init, sgd_update)]
+
+
+def _quadratic_params():
+    return {"w": jnp.asarray([3.0, -2.0, 1.0]),
+            "b": {"c": jnp.asarray([[0.5, -0.5], [1.0, -1.0]])}}
+
+
+@pytest.mark.parametrize("name,init,update", OPTS)
+def test_optimizers_minimize_quadratic(name, init, update):
+    params = _quadratic_params()
+    state = init(params)
+
+    def loss(p):
+        return sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(p))
+
+    lr = {"adam": 0.05, "adafactor": 0.05, "sgd": 0.05}[name]
+    l0 = float(loss(params))
+    for _ in range(120):
+        grads = jax.grad(loss)(params)
+        params, state = update(params, grads, state, lr)
+    assert float(loss(params)) < 0.05 * l0, name
+    assert int(state.step) == 120
+
+
+@pytest.mark.parametrize("name,init,update", OPTS)
+def test_dtype_and_shape_preserved(name, init, update):
+    params = {"a": jnp.ones((8, 16), jnp.bfloat16),
+              "v": jnp.ones((5,), jnp.float32)}
+    grads = jax.tree.map(lambda p: jnp.full_like(p, 0.01), params)
+    state = init(params)
+    new_p, _ = update(params, grads, state, 1e-3)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: a.shape == b.shape and a.dtype == b.dtype,
+        new_p, params))
+
+
+def test_adafactor_memory_factored():
+    """Factored 2nd moment must be O(rows+cols), not O(rows*cols)."""
+    p = {"big": jnp.zeros((1024, 512), jnp.bfloat16)}
+    st = adafactor_init(p)
+    inner = st.inner["big"]
+    assert inner["vr"].shape == (1024,)
+    assert inner["vc"].shape == (512,)
+    assert inner["m"].dtype == jnp.bfloat16
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(jnp.asarray(0), 1e-3, 10, 100)
+    assert float(s) == 0.0
+    mid = cosine_schedule(jnp.asarray(10), 1e-3, 10, 100)
+    assert float(mid) == pytest.approx(1e-3, rel=1e-5)
+    end = cosine_schedule(jnp.asarray(100), 1e-3, 10, 100)
+    assert float(end) == pytest.approx(1e-4, rel=1e-3)
+
+
+def test_pso_optimizer_gradient_free_regression():
+    key = jax.random.key(0)
+    X = jax.random.normal(key, (128, 4))
+    w_true = jnp.asarray([0.4, -0.2, 0.1, 0.3])
+    y = X @ w_true
+    opt = PSOOptimizer({"w": jnp.zeros((4,))}, particles=128, span=1.0,
+                       seed=0)
+    loss = lambda p: jnp.mean((X @ p["w"] - y) ** 2)
+    best = None
+    for _ in range(150):
+        best = opt.step(loss)
+    assert best < 1e-2
+    np.testing.assert_allclose(np.asarray(opt.best_params["w"]),
+                               np.asarray(w_true), atol=0.1)
+
+
+def test_get_optimizer_registry():
+    for name in ("adam", "adafactor", "sgd"):
+        init, update = get_optimizer(name)
+        assert callable(init) and callable(update)

@@ -1,0 +1,100 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PSOConfig, init_swarm
+from repro.core.pso import (SwarmState, step_queue, step_queue_lock,
+                            step_reduction)
+
+FITNESS = st.sampled_from(["cubic", "sphere", "rastrigin", "ackley"])
+
+
+def _mk_state(cfg, seed):
+    return init_swarm(cfg.resolved(), seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dim=st.integers(1, 40), n_exp=st.integers(3, 7),
+       seed=st.integers(0, 2 ** 31 - 1), fitness=FITNESS)
+def test_step_invariants(dim, n_exp, seed, fitness):
+    """For any problem: clamping, pbest domination, gbest monotonicity."""
+    cfg = PSOConfig(dim=dim, particle_cnt=2 ** n_exp, fitness=fitness).resolved()
+    s = _mk_state(cfg, seed)
+    g0 = float(s.gbest_fit)
+    s = step_queue(cfg, s)
+    assert float(s.gbest_fit) >= g0
+    pos, vel = np.asarray(s.pos), np.asarray(s.vel)
+    assert pos.min() >= cfg.min_pos - 1e-5
+    assert pos.max() <= cfg.max_pos + 1e-5
+    assert np.abs(vel).max() <= cfg.max_v * (1 + 1e-6)
+    assert np.all(np.asarray(s.pbest_fit) >= np.asarray(s.fit) - 1e-4)
+    assert not np.any(np.isnan(pos))
+
+
+@settings(max_examples=15, deadline=None)
+@given(dim=st.integers(1, 16), seed=st.integers(0, 2 ** 31 - 1),
+       fitness=FITNESS, steps=st.integers(1, 8))
+def test_queue_reduction_equivalence(dim, seed, fitness, steps):
+    """§4.1 claim: queue is semantically identical to reduction — for ANY
+    landscape/seed, not just the paper's cubic."""
+    cfg = PSOConfig(dim=dim, particle_cnt=64, fitness=fitness).resolved()
+    a = _mk_state(cfg, seed)
+    b = _mk_state(cfg, seed)
+    for _ in range(steps):
+        a = step_queue(cfg, a)
+        b = step_reduction(cfg, b)
+    np.testing.assert_allclose(float(a.gbest_fit), float(b.gbest_fit),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(a.pos), np.asarray(b.pos),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), fitness=FITNESS)
+def test_queue_lock_equivalence(seed, fitness):
+    cfg = PSOConfig(dim=5, particle_cnt=32, fitness=fitness).resolved()
+    a = _mk_state(cfg, seed)
+    b = _mk_state(cfg, seed)
+    for _ in range(5):
+        a = step_queue(cfg, a)
+        b = step_queue_lock(cfg, b)
+    np.testing.assert_allclose(float(a.gbest_fit), float(b.gbest_fit),
+                               rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_particle_permutation_invariance_of_gbest(seed):
+    """Relabeling particles must not change the gbest value sequence —
+    the reduction is a symmetric function."""
+    cfg = PSOConfig(dim=3, particle_cnt=64, fitness="rastrigin").resolved()
+    s = _mk_state(cfg, seed)
+    perm = np.random.default_rng(seed).permutation(64)
+    # A permuted swarm evolves differently particle-for-particle (RNG is tied
+    # to the particle index), so permute *after* stepping and verify the
+    # aggregation alone. gbest(perm(state)) == gbest(state).
+    s = step_queue(cfg, s)
+    permuted = s._replace(
+        pos=s.pos[perm], vel=s.vel[perm], fit=s.fit[perm],
+        pbest_pos=s.pbest_pos[perm], pbest_fit=s.pbest_fit[perm])
+    gp = jnp.max(permuted.pbest_fit)
+    go = jnp.max(s.pbest_fit)
+    assert float(gp) == float(go)
+    assert float(s.gbest_fit) >= float(go) - 1e-4 * abs(float(go))
+
+
+@settings(max_examples=10, deadline=None)
+@given(dim=st.integers(1, 64), n=st.sampled_from([128, 256, 384]),
+       seed=st.integers(0, 1000))
+def test_kernel_property_sweep(dim, n, seed):
+    """Hypothesis-driven shape sweep of the fused kernel vs the library:
+    gbest after k iterations must dominate the library's pbest max (same
+    particles, fresher gbest can only help or tie)."""
+    from repro.kernels import ops
+    cfg = PSOConfig(dim=dim, particle_cnt=n, fitness="sphere").resolved()
+    s = init_swarm(cfg, seed)
+    out = ops.run_queue_lock_fused(cfg, s, iters=3)
+    assert not np.any(np.isnan(np.asarray(out.pos)))
+    assert float(out.gbest_fit) >= float(s.gbest_fit)
+    assert np.asarray(out.pos).shape == (n, dim)

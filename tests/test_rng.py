@@ -1,0 +1,42 @@
+"""Counter-RNG quality + determinism (the cuRAND substitute, DESIGN.md §2)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rng
+
+
+def test_deterministic_and_jnp_numpy_agree():
+    from repro.core import serial
+    idx = np.arange(4096, dtype=np.uint32)
+    a = np.asarray(rng.uniform(123, 7, 2, jnp.asarray(idx)))
+    b = serial._uniform(123, 7, 2, idx)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_uniformity():
+    u = np.asarray(rng.uniform(0, 1, 0, jnp.arange(1 << 16, dtype=jnp.uint32)))
+    assert 0.0 <= u.min() and u.max() < 1.0
+    # mean/var of U(0,1)
+    assert abs(u.mean() - 0.5) < 5e-3
+    assert abs(u.var() - 1.0 / 12.0) < 5e-3
+    # chi-square over 64 bins, very loose gate
+    hist, _ = np.histogram(u, bins=64, range=(0, 1))
+    expected = len(u) / 64
+    chi2 = ((hist - expected) ** 2 / expected).sum()
+    assert chi2 < 2 * 64
+
+
+def test_streams_and_iterations_decorrelated():
+    idx = jnp.arange(1 << 14, dtype=jnp.uint32)
+    a = np.asarray(rng.uniform(0, 1, 0, idx))
+    b = np.asarray(rng.uniform(0, 1, 1, idx))   # different stream
+    c = np.asarray(rng.uniform(0, 2, 0, idx))   # different iteration
+    assert abs(np.corrcoef(a, b)[0, 1]) < 0.02
+    assert abs(np.corrcoef(a, c)[0, 1]) < 0.02
+    assert not np.array_equal(a, b)
+
+
+def test_no_collisions_across_particles():
+    """Adjacent counter values must not produce identical draws."""
+    u = np.asarray(rng.uniform(9, 3, 0, jnp.arange(100000, dtype=jnp.uint32)))
+    assert np.unique(u).size > 0.99 * u.size
