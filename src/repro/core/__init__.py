@@ -2,17 +2,23 @@
 from .fitness import FITNESS_FNS, FITNESS_IDS, DEFAULT_BOUNDS
 from .pso import (PSOConfig, SwarmState, STEP_FNS, init_swarm, run, solve,
                   step_queue, step_queue_lock, step_reduction)
+from .multi_swarm import (SwarmBatch, batch_row, best_of_batch, init_batch,
+                          run_many, solve_many, stack_states)
 from .serial import SerialSwarm, run_serial_fast
 from .topology import (best_of_swarms, init_multi_swarm, run_multi_swarm,
                        run_ring, step_ring)
-from .tuner import PSOTuner, SearchDim, TunerResult
+from .tuner import (PSO_COEFF_DIMS, PSOTuner, SearchDim, TunerResult,
+                    make_solve_many_fitness)
 
 __all__ = [
     "FITNESS_FNS", "FITNESS_IDS", "DEFAULT_BOUNDS",
     "PSOConfig", "SwarmState", "STEP_FNS", "init_swarm", "run", "solve",
     "step_queue", "step_queue_lock", "step_reduction",
+    "SwarmBatch", "init_batch", "batch_row", "stack_states", "run_many",
+    "solve_many", "best_of_batch",
     "SerialSwarm", "run_serial_fast",
     "run_ring", "step_ring", "init_multi_swarm", "run_multi_swarm",
     "best_of_swarms",
-    "PSOTuner", "SearchDim", "TunerResult",
+    "PSOTuner", "SearchDim", "TunerResult", "PSO_COEFF_DIMS",
+    "make_solve_many_fitness",
 ]

@@ -36,6 +36,25 @@ from .pso import PSOConfig, STEP_FNS, SwarmState, init_swarm
 
 Array = jnp.ndarray
 
+# jax moved shard_map to the top level and renamed check_rep -> check_vma in
+# newer releases — and not necessarily in the same release, so resolve the
+# function and the kwarg spelling independently.
+if hasattr(jax, "shard_map"):
+    _shard_map_fn = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_fn
+
+import inspect as _inspect
+
+_SM_CHECK_KW = ("check_vma" if "check_vma"
+                in _inspect.signature(_shard_map_fn).parameters
+                else "check_rep")
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    return _shard_map_fn(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, **{_SM_CHECK_KW: False})
+
 
 def swarm_pspec(particle_axes) -> SwarmState:
     """PartitionSpecs for a SwarmState sharded over ``particle_axes``."""
@@ -73,8 +92,7 @@ def init_sharded_swarm(cfg: PSOConfig, seed: int, mesh: Mesh,
         return local._replace(gbest_fit=gfit, gbest_pos=gpos)
 
     specs = swarm_pspec(axes if len(axes) > 1 else axes[0])
-    fn = jax.shard_map(per_shard, mesh=mesh, in_specs=(), out_specs=specs,
-                       check_vma=False)
+    fn = _shard_map(per_shard, mesh, (), specs)
     return jax.jit(fn)()
 
 
@@ -126,8 +144,7 @@ def make_distributed_run(cfg: PSOConfig, mesh: Mesh, iters: int,
         return jax.lax.fori_loop(0, rounds, one_round, state)
 
     specs = swarm_pspec(axes if len(axes) > 1 else axes[0])
-    fn = jax.shard_map(shard_body, mesh=mesh, in_specs=(specs,), out_specs=specs,
-                       check_vma=False)
+    fn = _shard_map(shard_body, mesh, (specs,), specs)
     return jax.jit(fn)
 
 

@@ -1,0 +1,149 @@
+"""Batched multi-swarm engine: many independent PSO solves in ONE device
+program (DESIGN: the scaling layer on top of the paper's single-swarm
+queue/queue-lock algorithms).
+
+The paper (arXiv 2205.01313) amortizes aggregation cost *within* one swarm;
+serving-scale workloads (tuning sweeps, per-request optimizations) need to
+amortize across *many* swarms — different seeds, and optionally different
+(w, c1, c2) hyper-parameters — without paying one dispatch + compile per
+swarm. This module vmaps the three step variants from ``repro.core.pso``
+over a leading swarm axis, so a batch of S solves costs one compile and one
+dispatch per ``run_many`` call. PSO-PS (arXiv 2009.03816) makes the same
+move to keep distributed populations device-resident.
+
+RNG stream convention
+---------------------
+Each swarm carries its own ``seed`` and the counter RNG is keyed by
+``(seed, iteration, stream, element_index)`` with element indices local to
+the swarm (particle * D + dim, exactly the single-swarm ``index_offset=0``
+convention of ``init_swarm``/``_advance``). Because vmap changes neither the
+counters nor the arithmetic, row ``s`` of a batch is **bit-identical** to a
+standalone ``solve(cfg, seeds[s])`` — batching is a pure scheduling
+transform, never a semantic one. This is asserted exactly (``==`` on
+float bits) in tests/test_multi_swarm.py.
+
+Caveat (CPU backend): XLA:CPU chooses vectorization + FMA contraction per
+compiled shape, and for a few tiny odd batch sizes (observed: S=4) the
+batched program can round an element-wise chain one ulp differently from
+the standalone program, which chaotic PSO dynamics then amplify. The
+serving layer (``repro.launch.serve``) therefore pads request batches to
+bucket sizes >= 8, where the identity is validated. This also constrains
+step-function design: a ``lax.cond`` carrying an [N, D] branch output
+changes XLA's fusion clustering enough to break the identity at *every*
+batch size (see ``step_queue_lock``).
+
+Per-swarm hyper-parameters
+--------------------------
+``coeffs=(w, c1, c2)`` (each shape ``[S]``) rides the same vmap, which is
+what lets ``repro.core.tuner.make_solve_many_fitness`` evaluate a whole
+population of PSO hyper-parameter candidates as one batched solve.
+
+The Pallas counterpart (one ``pallas_call`` advancing S swarms x iters with
+per-swarm gbest buffers) is ``repro.kernels.ops.run_queue_lock_fused_batch``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from .pso import PSOConfig, STEP_FNS, SwarmState, init_swarm
+
+Array = jnp.ndarray
+
+
+class SwarmBatch(NamedTuple):
+    """S independent swarms, stacked on a leading axis.
+
+    Field order matches ``SwarmState`` exactly so the two convert by
+    positional splat (``SwarmBatch(*state_pytree)``) and vmapped SwarmState
+    functions apply directly.
+    """
+
+    pos: Array        # [S, N, D]
+    vel: Array        # [S, N, D]
+    fit: Array        # [S, N]
+    pbest_pos: Array  # [S, N, D]
+    pbest_fit: Array  # [S, N]
+    gbest_pos: Array  # [S, D]
+    gbest_fit: Array  # [S]
+    iteration: Array  # [S] int32
+    seed: Array       # [S] uint32
+
+    @property
+    def swarm_cnt(self) -> int:
+        return self.gbest_fit.shape[0]
+
+
+def init_batch(cfg: PSOConfig, seeds) -> SwarmBatch:
+    """Initialize S swarms, one per entry of ``seeds``.
+
+    Row ``s`` is bit-identical to ``init_swarm(cfg, seeds[s])`` (see module
+    docstring: the RNG counters are untouched by the vmap).
+    """
+    cfg = cfg.resolved()
+    seeds = jnp.asarray(seeds)
+    return SwarmBatch(*jax.vmap(lambda sd: init_swarm(cfg, sd))(seeds))
+
+
+def batch_row(batch: SwarmBatch, s: int) -> SwarmState:
+    """Extract swarm ``s`` as a standalone SwarmState."""
+    return SwarmState(*(jax.tree_util.tree_map(lambda a: a[s], tuple(batch))))
+
+
+def stack_states(states: Sequence[SwarmState]) -> SwarmBatch:
+    """Stack standalone swarms into a batch (inverse of ``batch_row``)."""
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+    return SwarmBatch(*stacked)
+
+
+@partial(jax.jit, static_argnames=("cfg", "iters", "variant"))
+def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
+             variant: str = "queue",
+             coeffs: Optional[Tuple[Array, Array, Array]] = None
+             ) -> SwarmBatch:
+    """Advance every swarm of the batch ``iters`` iterations in lockstep.
+
+    One fori_loop over one vmapped step: a single compiled program, a single
+    dispatch, no host round-trips between iterations or between swarms.
+    """
+    cfg = cfg.resolved()
+    step = STEP_FNS[variant]
+    if coeffs is None:
+        step_b = jax.vmap(lambda s: step(cfg, s))
+
+        def body(_, b):
+            return SwarmBatch(*step_b(SwarmState(*b)))
+    else:
+        w, c1, c2 = (jnp.asarray(c) for c in coeffs)
+        step_b = jax.vmap(
+            lambda s, w_, c1_, c2_: step(cfg, s, coeffs=(w_, c1_, c2_)))
+
+        def body(_, b):
+            return SwarmBatch(*step_b(SwarmState(*b), w, c1, c2))
+
+    return jax.lax.fori_loop(0, iters, body, batch)
+
+
+def solve_many(cfg: PSOConfig, seeds, iters: int = 1000,
+               variant: str = "queue",
+               coeffs: Optional[Tuple[Array, Array, Array]] = None
+               ) -> SwarmBatch:
+    """Batched one-shot: init + run for S independent solves.
+
+    ``seeds`` is any int sequence/array of length S; ``variant`` is one of
+    ``reduction | queue | queue_lock``; ``coeffs`` optionally supplies
+    per-swarm ``(w, c1, c2)`` arrays. Row ``s`` of the result is
+    bit-identical to ``solve(cfg, seeds[s], iters, variant)`` when
+    ``coeffs`` is None.
+    """
+    cfg = cfg.resolved()
+    return run_many(cfg, init_batch(cfg, seeds), iters, variant, coeffs)
+
+
+def best_of_batch(batch: SwarmBatch) -> Tuple[Array, Array, Array]:
+    """(best gbest_fit, its gbest_pos, winning swarm index) over the batch."""
+    b = jnp.argmax(batch.gbest_fit)
+    return batch.gbest_fit[b], batch.gbest_pos[b], b

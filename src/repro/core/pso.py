@@ -19,6 +19,13 @@ Semantics note: all parallel variants are *synchronous* PPSO — every particle
 sees the gbest of the previous iteration (the paper's Fig. 1 workflow). The
 sequential SPSO (Alg. 1), where gbest updates mid-iteration, lives in
 ``repro.core.serial`` and is used as the CPU baseline and semantic oracle.
+
+Scaling note: all three step functions are written to vmap cleanly over a
+leading swarm axis — ``repro.core.multi_swarm.solve_many`` batches many
+independent solves (heterogeneous seeds, optionally per-swarm ``coeffs``
+overriding (w, c1, c2)) into one device program with per-row bit-identity
+to the standalone path. Keep step-function ``lax.cond`` branch outputs
+small (scalars / [D]); see ``step_queue_lock`` for why.
 """
 from __future__ import annotations
 
@@ -118,22 +125,30 @@ def init_swarm(cfg: PSOConfig, seed: int, n: Optional[int] = None,
     )
 
 
-def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0
+def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0,
+             coeffs: Optional[Tuple[Array, Array, Array]] = None
              ) -> Tuple[Array, Array, Array]:
     """Steps 2–3 of Alg. 1: velocity/position update + fitness, vectorized.
 
     Returns (pos, vel, fit) for iteration ``s.iteration + 1``.
+
+    ``coeffs`` optionally overrides ``(w, c1, c2)`` with traced scalars —
+    the hook ``repro.core.multi_swarm.solve_many`` uses to vmap one compiled
+    program over *per-swarm* hyper-parameters (meta-tuning). When ``None``
+    the config's Python floats are used, producing the exact same jaxpr as
+    before the hook existed.
     """
     n, d = s.pos.shape
     dt = s.pos.dtype
     it = s.iteration + 1
+    w, c1, c2 = coeffs if coeffs is not None else (cfg.w, cfg.c1, cfg.c2)
     idx = (jnp.arange(n * d, dtype=jnp.uint32).reshape(n, d)
            + jnp.uint32(index_offset * d))
     r1 = rng.uniform(s.seed, it, STREAM_R1, idx, dtype=dt)
     r2 = rng.uniform(s.seed, it, STREAM_R2, idx, dtype=dt)
-    vel = (cfg.w * s.vel
-           + cfg.c1 * r1 * (s.pbest_pos - s.pos)
-           + cfg.c2 * r2 * (s.gbest_pos[None, :] - s.pos))
+    vel = (w * s.vel
+           + c1 * r1 * (s.pbest_pos - s.pos)
+           + c2 * r2 * (s.gbest_pos[None, :] - s.pos))
     vel = jnp.clip(vel, -cfg.max_v, cfg.max_v)
     pos = jnp.clip(s.pos + vel, cfg.min_pos, cfg.max_pos)
     fit = cfg.fitness_fn(pos)
@@ -147,9 +162,11 @@ def _update_pbest(s: SwarmState, pos: Array, fit: Array) -> Tuple[Array, Array]:
     return pbest_pos, pbest_fit
 
 
-def step_reduction(cfg: PSOConfig, s: SwarmState) -> SwarmState:
+def step_reduction(cfg: PSOConfig, s: SwarmState,
+                   coeffs: Optional[Tuple[Array, Array, Array]] = None
+                   ) -> SwarmState:
     """Baseline: unconditional full argmax reduction (paper §3.2)."""
-    pos, vel, fit = _advance(cfg, s)
+    pos, vel, fit = _advance(cfg, s, coeffs=coeffs)
     pbest_pos, pbest_fit = _update_pbest(s, pos, fit)
     best = jnp.argmax(pbest_fit)                      # O(N) reduction, always
     cand_fit = pbest_fit[best]
@@ -162,7 +179,9 @@ def step_reduction(cfg: PSOConfig, s: SwarmState) -> SwarmState:
                       gbest_fit=gbest_fit, iteration=s.iteration + 1)
 
 
-def step_queue(cfg: PSOConfig, s: SwarmState) -> SwarmState:
+def step_queue(cfg: PSOConfig, s: SwarmState,
+               coeffs: Optional[Tuple[Array, Array, Array]] = None
+               ) -> SwarmState:
     """Queue algorithm (paper §4.1), TPU adaptation.
 
     The shared-memory queue + atomicAdd degenerates on a SIMD core into a
@@ -171,7 +190,7 @@ def step_queue(cfg: PSOConfig, s: SwarmState) -> SwarmState:
     memory traffic when the queue is empty — maps to predicating the argmax +
     gather on the cheap scalar ``any(improved)``.
     """
-    pos, vel, fit = _advance(cfg, s)
+    pos, vel, fit = _advance(cfg, s, coeffs=coeffs)
     pbest_pos, pbest_fit = _update_pbest(s, pos, fit)
     improved = fit > s.gbest_fit                      # cheap vector compare
     any_improved = jnp.any(improved)                  # scalar "queue non-empty"
@@ -192,34 +211,43 @@ def step_queue(cfg: PSOConfig, s: SwarmState) -> SwarmState:
                       gbest_fit=gbest_fit, iteration=s.iteration + 1)
 
 
-def step_queue_lock(cfg: PSOConfig, s: SwarmState) -> SwarmState:
-    """Queue-lock (paper §4.2) jnp fallback: single fused predicated region.
+def step_queue_lock(cfg: PSOConfig, s: SwarmState,
+                    coeffs: Optional[Tuple[Array, Array, Array]] = None
+                    ) -> SwarmState:
+    """Queue-lock (paper §4.2) jnp fallback: predicated gbest publication.
 
     The real fusion win (one pallas_call spanning all iterations with gbest
     carried in SMEM — the TPU analogue of removing the 2nd kernel and the
-    spin-lock) is ``repro.kernels.ops.run_queue_lock_fused``; this function
-    keeps identical semantics for non-kernel paths and additionally folds the
-    pbest-position write under the same rare-improvement predicate.
+    spin-lock, including folding the rare O(N·D) pbest-position write under
+    the improvement predicate) is ``repro.kernels.ops.run_queue_lock_fused``;
+    this function keeps identical semantics for non-kernel paths with the
+    argmax + D-dim gather predicated on the rare ``any(improved)``.
+
+    The cond deliberately carries only the small gbest pair ([], [D]) —
+    never an [N, D] operand. A matrix-valued branch output changes how XLA
+    clusters the surrounding element-wise graph, and (on CPU) the float
+    contraction it picks, breaking the multi-swarm engine's row-bit-identity
+    invariant (vmapped select vs single-swarm cond); see
+    tests/test_multi_swarm.py.
     """
-    pos, vel, fit = _advance(cfg, s)
+    pos, vel, fit = _advance(cfg, s, coeffs=coeffs)
     p_improved = fit > s.pbest_fit
     pbest_fit = jnp.where(p_improved, fit, s.pbest_fit)
+    pbest_pos = jnp.where(p_improved[:, None], pos, s.pbest_pos)
     any_p = jnp.any(p_improved)
 
     def publish(operand):
-        pbp, gf, gp = operand
-        pbest_pos = jnp.where(p_improved[:, None], pos, pbp)   # rare O(N·D) write
-        best = jnp.argmax(pbest_fit)
+        gf, gp = operand
+        best = jnp.argmax(pbest_fit)                  # rare O(N) + O(D) gather
         take = pbest_fit[best] > gf
-        return (pbest_pos,
-                jnp.where(take, pbest_fit[best], gf),
+        return (jnp.where(take, pbest_fit[best], gf),
                 jnp.where(take, pbest_pos[best], gp))
 
     def skip(operand):
         return operand
 
-    pbest_pos, gbest_fit, gbest_pos = jax.lax.cond(
-        any_p, publish, skip, (s.pbest_pos, s.gbest_fit, s.gbest_pos))
+    gbest_fit, gbest_pos = jax.lax.cond(
+        any_p, publish, skip, (s.gbest_fit, s.gbest_pos))
     return s._replace(pos=pos, vel=vel, fit=fit, pbest_pos=pbest_pos,
                       pbest_fit=pbest_fit, gbest_pos=gbest_pos,
                       gbest_fit=gbest_fit, iteration=s.iteration + 1)

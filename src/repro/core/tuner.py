@@ -8,6 +8,14 @@ is better), typically "−validation loss after a short probe run" produced by
 step variants from ``repro.core.pso``; evaluations are batched over the
 population so the underlying train substrate can vmap/pmap them when cheap,
 or loop when each evaluation is itself a distributed job.
+
+Batched evaluation: ``PSOTuner.run`` accepts ``batch_fitness`` — one call
+scoring the whole population — instead of a per-candidate callable. The
+first-class producer is ``make_solve_many_fitness``: when the quantity being
+tuned is PSO's own hyper-parameters ``(w, c1, c2)``, the entire population x
+probe-seed grid is evaluated as ONE ``repro.core.multi_swarm.solve_many``
+device program (per-swarm coeffs ride the same vmap as per-swarm seeds),
+instead of population x seeds separate solves.
 """
 from __future__ import annotations
 
@@ -100,13 +108,27 @@ class PSOTuner:
         np.clip(self.vel, -0.5, 0.5, out=self.vel)
         self.pos = np.clip(self.pos + self.vel, 0.0, 1.0)
 
-    def run(self, fitness: Callable[[Dict[str, float]], float],
+    def run(self, fitness: Optional[Callable[[Dict[str, float]], float]] = None,
             iters: int = 10,
-            callback: Optional[Callable[[int, "PSOTuner"], None]] = None
+            callback: Optional[Callable[[int, "PSOTuner"], None]] = None,
+            *, batch_fitness: Optional[
+                Callable[[List[Dict[str, float]]], Sequence[float]]] = None
             ) -> TunerResult:
+        """Optimize; exactly one of ``fitness`` / ``batch_fitness`` is given.
+
+        ``batch_fitness(population) -> scores`` evaluates the whole
+        population at once (e.g. ``make_solve_many_fitness``: one batched
+        device program per tuner iteration instead of N solves).
+        """
+        if (fitness is None) == (batch_fitness is None):
+            raise ValueError("pass exactly one of fitness / batch_fitness")
         history: List[Tuple[int, float]] = []
         for it in range(iters):
-            fits = [fitness(p) for p in self.ask()]
+            pop = self.ask()
+            if batch_fitness is not None:
+                fits = list(batch_fitness(pop))
+            else:
+                fits = [fitness(p) for p in pop]
             self.tell(fits)
             history.append((it, self.gbest_fit))
             if callback:
@@ -114,3 +136,40 @@ class PSOTuner:
         return TunerResult(best_params=self._decode(self.gbest_pos),
                            best_fitness=self.gbest_fit,
                            history=history, evaluations=self.evaluations)
+
+
+PSO_COEFF_DIMS = (
+    SearchDim("w", 0.3, 1.0),
+    SearchDim("c1", 0.5, 2.5),
+    SearchDim("c2", 0.5, 2.5),
+)
+
+
+def make_solve_many_fitness(cfg: PSOConfig, seeds: Sequence[int],
+                            iters: int = 100, variant: str = "queue"):
+    """Batch-fitness scoring PSO coefficient candidates via ONE batched solve.
+
+    Each candidate ``{"w": ..., "c1": ..., "c2": ...}`` (missing keys fall
+    back to ``cfg``) is scored as the mean final ``gbest_fit`` over the probe
+    ``seeds``. The full population x seeds grid runs as a single
+    ``solve_many`` call with per-swarm coeffs — P*K swarms, one dispatch.
+    """
+    from .multi_swarm import solve_many
+
+    cfg = cfg.resolved()
+    seeds = np.asarray(seeds, dtype=np.int64)
+    k = len(seeds)
+
+    def batch_fitness(population: List[Dict[str, float]]) -> np.ndarray:
+        p = len(population)
+        all_seeds = np.tile(seeds, p)
+        w = np.repeat([c.get("w", cfg.w) for c in population], k)
+        c1 = np.repeat([c.get("c1", cfg.c1) for c in population], k)
+        c2 = np.repeat([c.get("c2", cfg.c2) for c in population], k)
+        batch = solve_many(cfg, all_seeds, iters=iters, variant=variant,
+                           coeffs=(w.astype(np.float32),
+                                   c1.astype(np.float32),
+                                   c2.astype(np.float32)))
+        return np.asarray(batch.gbest_fit).reshape(p, k).mean(axis=1)
+
+    return batch_fitness

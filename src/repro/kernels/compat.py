@@ -1,0 +1,15 @@
+"""jax version compatibility shims shared by the Pallas kernel modules."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x.
+_cp = getattr(pltpu, "CompilerParams",
+              getattr(pltpu, "TPUCompilerParams", None))
+if _cp is None:  # pragma: no cover - depends on installed jax
+    def _cp(*args, **kwargs):
+        raise ImportError(
+            "this jax version exposes neither pallas.tpu.CompilerParams nor "
+            "TPUCompilerParams; the Pallas kernels need one of them")
+
+CompilerParams = _cp

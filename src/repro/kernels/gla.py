@@ -32,6 +32,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams as _CompilerParams
+
 _CLAMP = 20.0
 
 
@@ -90,7 +92,7 @@ def gla_forward_call(bh: int, s: int, n: int, p: int, chunk: int, dtype,
         out_specs=mat(p),
         out_shape=jax.ShapeDtypeStruct((bh, s, p), dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY)),
         interpret=interpret,
         name="gla_chunked_fwd",

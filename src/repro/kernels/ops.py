@@ -17,8 +17,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.multi_swarm import SwarmBatch
 from repro.core.pso import PSOConfig, SwarmState
-from .pso_step import fused_call, pad_dim, queue_step_call, LANE
+from .pso_step import (fused_batch_call, fused_call, pad_dim,
+                       queue_step_call, LANE)
 
 
 def pick_block_n(n: int, target: int = 512) -> int:
@@ -120,6 +122,58 @@ def run_queue_lock_fused(cfg: PSOConfig, s: SwarmState, iters: int,
                       **_cfg_kwargs(cfg))
     pos, vel, pbp, pbf, gp, gf = call(scal, pos, vel, pbp, pbf, gp, gf)
     return kernel_to_state(s, d, pos, vel, pbp, pbf, gp, gf, iters)
+
+
+def pack_dmajor_batch(x, d: int):
+    """[S, N, D] -> [Dpad, S*N] (swarm s owns columns [s*N, (s+1)*N))."""
+    s_cnt, n, _ = x.shape
+    return pack_dmajor(x.reshape(s_cnt * n, d), d)
+
+
+def unpack_dmajor_batch(arr, s_cnt: int, d: int):
+    """[Dpad, S*N] -> [S, N, D]."""
+    n = arr.shape[1] // s_cnt
+    return unpack_dmajor(arr, d).reshape(s_cnt, n, d)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "iters", "block_n", "interpret"))
+def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
+                               block_n: Optional[int] = None,
+                               interpret: bool = True) -> SwarmBatch:
+    """S independent swarms x ``iters`` iterations in ONE pallas_call.
+
+    The multi-swarm analogue of ``run_queue_lock_fused``: per-swarm gbest
+    buffers and per-swarm ``(seed, iteration)`` RNG counters ride a third
+    (swarm-major) grid dimension, so row ``s`` of the batch is bit-identical
+    to ``run_queue_lock_fused`` on ``batch_row(batch, s)`` with the same
+    ``block_n`` — asserted in tests/test_multi_swarm.py. On TPU this is the
+    serving hot path: a whole request batch advances with zero host
+    round-trips and one kernel launch.
+    """
+    cfg = cfg.resolved()
+    s_cnt, n, d = batch.pos.shape
+    bn = block_n or pick_block_n(n)
+    seeds = batch.seed.astype(jnp.int32)
+    its = batch.iteration.astype(jnp.int32)
+    pos = pack_dmajor_batch(batch.pos, d)
+    vel = pack_dmajor_batch(batch.vel, d)
+    pbp = pack_dmajor_batch(batch.pbest_pos, d)
+    pbf = batch.pbest_fit.reshape(1, s_cnt * n)
+    gp = jnp.zeros((pad_dim(d), s_cnt), batch.pos.dtype).at[:d].set(
+        batch.gbest_pos.T)
+    gf = batch.gbest_fit
+    call = fused_batch_call(s_cnt, n, d, iters, bn, batch.pos.dtype,
+                            interpret=interpret, **_cfg_kwargs(cfg))
+    pos, vel, pbp, pbf, gp, gf = call(seeds, its, pos, vel, pbp, pbf, gp, gf)
+    pbf = pbf.reshape(s_cnt, n)
+    return batch._replace(
+        pos=unpack_dmajor_batch(pos, s_cnt, d),
+        vel=unpack_dmajor_batch(vel, s_cnt, d),
+        fit=pbf,  # kernels do not retain raw fit; pbest_fit >= fit
+        pbest_pos=unpack_dmajor_batch(pbp, s_cnt, d), pbest_fit=pbf,
+        gbest_pos=gp[:d].T, gbest_fit=gf,
+        iteration=batch.iteration + iters)
 
 
 def make_fused_local_step(iters_per_call: int = 1, block_n=None,

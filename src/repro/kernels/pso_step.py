@@ -21,6 +21,18 @@ Two kernels:
     D-dim position (paper §5.3): the position is gathered once, after the
     cross-block winner is known.
 
+``fused_batch`` (queue-lock, grid = (swarms, iterations, particle blocks))
+    The multi-swarm extension of ``fused``: one ``pallas_call`` advances S
+    *independent* swarms x iters. State is packed ``[Dpad, S*N]`` (swarm s
+    owns columns [s*N, (s+1)*N)); each swarm has its own gbest column in a
+    ``[Dpad, S]`` buffer, its own SMEM gbest_fit slot, and its own
+    ``(seed, iteration)`` RNG counters, so swarm s is bit-identical to a
+    standalone ``fused`` run with the same seed and block size. The grid is
+    swarm-major: a swarm's gbest buffers stay resident across all its
+    iterations before the next swarm is touched. This is the kernel behind
+    ``repro.kernels.ops.run_queue_lock_fused_batch`` and the Pallas leg of
+    ``repro.core.multi_swarm.solve_many``.
+
 ``fused`` (queue-lock, grid = (iterations, particle blocks))
     The paper's §4.2 fusion, strengthened: ONE ``pallas_call`` spans *all*
     iterations. The global best lives in output buffers whose block index is
@@ -50,6 +62,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import rng
 from repro.core.pso import STREAM_R1, STREAM_R2
+
+from .compat import CompilerParams as _CompilerParams
 
 SUBLANE = 8
 LANE = 128
@@ -280,8 +294,97 @@ def fused_call(n: int, d: int, iters: int, block_n: int, dtype, *,
             jax.ShapeDtypeStruct((1,), dtype),                # gbest_fit
         ],
         input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4, 6: 5},
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY)),
         interpret=interpret,
         name="cupso_fused_queue_lock",
+    )
+
+
+# --------------------------------------------------------------------------
+# Kernel 3: batched fused queue-lock — grid (swarms, iterations, blocks).
+# --------------------------------------------------------------------------
+
+def _fused_batch_kernel(seeds_ref, its_ref,
+                        pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,
+                        pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
+                        *, w, c1, c2, min_pos, max_pos, max_v, d_real,
+                        fitness):
+    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    b = pl.program_id(2)
+    bn = pos_ref.shape[1]
+    base = b * bn          # block base LOCAL to the swarm: RNG indices match
+    pos, vel, dmask, lane = _advance_block(  # a standalone swarm bit-for-bit
+        seeds_ref[s], its_ref[s] + t + 1,
+        pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
+        base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
+        max_v=max_v, d_real=d_real)
+    fit = _fitness_dmajor(fitness, pos, dmask, d_real)
+    pbf = pbf_ref[...]
+    imp = fit > pbf
+    pbf_ref[...] = jnp.where(imp, fit, pbf)
+    pbp_ref[...] = jnp.where(imp, pos, pbp_ref[...])
+    pos_ref[...] = pos
+    vel_ref[...] = vel
+    # --- per-swarm queue-lock publication (sequential grid = the lock).
+    gf = gf_ref[s]
+    q_mask = fit > gf
+
+    @pl.when(jnp.any(q_mask))
+    def _publish():
+        neg = jnp.full_like(fit, -jnp.inf)
+        q_fit = jnp.where(q_mask, fit, neg)
+        bf = jnp.max(q_fit)
+        lane_row = lax.broadcasted_iota(jnp.int32, fit.shape, 1)
+        bidx = jnp.min(jnp.where(q_fit >= bf, lane_row, _BIG_I32))
+        gf_ref[s] = bf
+        sel = (lane == bidx) & dmask
+        gp_ref[...] = jnp.sum(jnp.where(sel, pos, jnp.zeros_like(pos)),
+                              axis=1, keepdims=True)
+
+
+def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
+                     dtype, *, w, c1, c2, min_pos, max_pos, max_v, fitness,
+                     interpret=True):
+    """Build the batched fused queue-lock pallas_call (S swarms x iters).
+
+    Args (runtime): seeds[S]i32, iterations[S]i32,
+                    pos/vel/pbest_pos [Dpad, S*N], pbest_fit [1, S*N],
+                    gbest_pos [Dpad, S], gbest_fit [S]
+    Returns the same six state arrays after ``iters`` iterations of every
+    swarm. Swarm-major grid: the per-swarm gbest column and SMEM fitness
+    slot are revisited only within one swarm's iteration span.
+    """
+    assert n % block_n == 0, (n, block_n)
+    nb = n // block_n
+    dpad = pad_dim(d)
+    kern = functools.partial(
+        _fused_batch_kernel, w=w, c1=c1, c2=c2, min_pos=min_pos,
+        max_pos=max_pos, max_v=max_v, d_real=d, fitness=fitness)
+    mat = pl.BlockSpec((dpad, block_n), lambda s, t, b: (0, s * nb + b))
+    row = pl.BlockSpec((1, block_n), lambda s, t, b: (0, s * nb + b))
+    gpc = pl.BlockSpec((dpad, 1), lambda s, t, b: (0, s))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        kern,
+        grid=(s_cnt, iters, nb),
+        in_specs=[smem, smem,                                 # seeds, iters
+                  mat, mat, mat, row, gpc, smem],
+        out_specs=[mat, mat, mat, row, gpc, smem],
+        out_shape=[
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pos
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # vel
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pbest_pos
+            jax.ShapeDtypeStruct((1, s_cnt * n), dtype),      # pbest_fit
+            jax.ShapeDtypeStruct((dpad, s_cnt), dtype),       # gbest_pos
+            jax.ShapeDtypeStruct((s_cnt,), dtype),            # gbest_fit
+        ],
+        input_output_aliases={2: 0, 3: 1, 4: 2, 5: 3, 6: 4, 7: 5},
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY,
+                                 pltpu.ARBITRARY)),
+        interpret=interpret,
+        name="cupso_fused_queue_lock_batch",
     )

@@ -156,7 +156,7 @@ def run_pso_cell(dim: int, particles: int, multi_pod: bool):
     lowered = runner.lower(state_shape)
     compiled = lowered.compile()
     hlo = compiled.as_text()
-    cost = compiled.cost_analysis()
+    cost = ra.cost_analysis_dict(compiled)
     coll = ra.collective_bytes(hlo)
     mem = compiled.memory_analysis()
     # model flops: 100 iters × N × (~10 flops/dim update + fitness ~5/dim)

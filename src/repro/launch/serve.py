@@ -1,0 +1,200 @@
+"""Request-batching front end for PSO solves (the serving layer over
+``repro.core.multi_swarm``).
+
+A serving deployment receives a stream of independent solve requests —
+different seeds, and different problems. One device dispatch per request
+wastes the accelerator (the cuPSO paper's own motivation, one level up:
+amortize fixed costs across work). This module groups pending requests by
+their *compilation key* ``(dim, particle_cnt, fitness, iters, variant,
+dtype)``, pads each group to a bucketed batch size (so the jit cache stays
+small: one compiled program per (key, bucket), not per request count), and
+routes every group through a single ``solve_many`` — or through the batched
+fused Pallas kernel (``run_queue_lock_fused_batch``) for the
+``queue_lock`` variant with ``backend="kernel"``.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 24 --iters 200
+
+Padding rows reuse the group's first seed and are dropped before results
+are returned; they cost compute but never correctness. ``ServeStats``
+reports how much padding each flush paid.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import PSOConfig
+from repro.core.multi_swarm import init_batch, solve_many
+
+# Minimum bucket of 8: (a) fewer compiled programs per batch_key, (b) the
+# engine's bit-identity contract is validated for batches >= 8 — XLA CPU
+# picks shape-dependent vectorization/FMA contraction for tiny odd batches
+# (observed at S=4) that can perturb trajectories by 1 ulp/iteration.
+BUCKETS = (8, 16, 32, 64, 128)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One independent PSO solve."""
+
+    dim: int = 1
+    particle_cnt: int = 1024
+    fitness: str = "cubic"
+    seed: int = 0
+    iters: int = 1000
+    variant: str = "queue"
+    dtype: str = "float32"
+
+    @property
+    def batch_key(self) -> Tuple:
+        """Everything that forces a distinct compiled program."""
+        return (self.dim, self.particle_cnt, self.fitness, self.iters,
+                self.variant, self.dtype)
+
+    def config(self) -> PSOConfig:
+        return PSOConfig(dim=self.dim, particle_cnt=self.particle_cnt,
+                         fitness=self.fitness, dtype=self.dtype)
+
+
+@dataclasses.dataclass
+class SolveResult:
+    request: SolveRequest
+    gbest_fit: float
+    gbest_pos: np.ndarray
+    batch_size: int          # padded batch the request rode in
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests: int = 0
+    dispatches: int = 0      # batched device programs launched
+    padded_rows: int = 0     # wasted swarm slots from bucket padding
+
+
+def bucket_size(k: int, max_batch: int = BUCKETS[-1]) -> int:
+    """Smallest bucket >= k (capped): bounds the jit cache per batch_key."""
+    for b in BUCKETS:
+        if b >= min(k, max_batch):
+            return min(b, max_batch)
+    return max_batch
+
+
+class SolveServer:
+    """Collects solve requests and dispatches them as padded batches.
+
+    ``backend="jnp"`` runs every variant through the vmapped ``solve_many``;
+    ``backend="kernel"`` routes ``queue_lock`` requests through the batched
+    fused Pallas kernel (interpret mode off-TPU) and everything else through
+    the jnp path.
+    """
+
+    def __init__(self, max_batch: int = 64, backend: str = "jnp",
+                 interpret: bool = True, block_n: Optional[int] = None):
+        if backend not in ("jnp", "kernel"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if max_batch < BUCKETS[0]:
+            # sub-8 dispatches land exactly in the regime where XLA:CPU
+            # batch-shape codegen breaks the bit-identity contract (see
+            # module docstring / core.multi_swarm)
+            raise ValueError(
+                f"max_batch={max_batch} < minimum bucket {BUCKETS[0]}")
+        self.max_batch = max_batch
+        self.backend = backend
+        self.interpret = interpret
+        self.block_n = block_n
+        self.stats = ServeStats()
+        self._pending: List[Tuple[int, SolveRequest]] = []
+        self._ticket = 0
+
+    def submit(self, req: SolveRequest) -> int:
+        """Enqueue a request; returns a ticket resolved by ``flush()``."""
+        t = self._ticket
+        self._ticket += 1
+        self._pending.append((t, req))
+        return t
+
+    def _solve_group(self, reqs: List[SolveRequest]) -> List[SolveResult]:
+        """One compilation group -> one (or a few, if > max_batch) dispatches."""
+        out: List[SolveResult] = []
+        for lo in range(0, len(reqs), self.max_batch):
+            chunk = reqs[lo:lo + self.max_batch]
+            k = len(chunk)
+            padded = bucket_size(k, self.max_batch)
+            seeds = np.array([r.seed for r in chunk]
+                             + [chunk[0].seed] * (padded - k), dtype=np.int64)
+            cfg = chunk[0].config()
+            if self.backend == "kernel" and chunk[0].variant == "queue_lock":
+                from repro.kernels.ops import run_queue_lock_fused_batch
+                batch = run_queue_lock_fused_batch(
+                    cfg, init_batch(cfg, seeds), iters=chunk[0].iters,
+                    block_n=self.block_n, interpret=self.interpret)
+            else:
+                batch = solve_many(cfg, seeds, iters=chunk[0].iters,
+                                   variant=chunk[0].variant)
+            gf = np.asarray(batch.gbest_fit)
+            gp = np.asarray(batch.gbest_pos)
+            self.stats.dispatches += 1
+            self.stats.padded_rows += padded - k
+            out.extend(SolveResult(request=r, gbest_fit=float(gf[i]),
+                                   gbest_pos=gp[i], batch_size=padded)
+                       for i, r in enumerate(chunk))
+        return out
+
+    def flush(self) -> Dict[int, SolveResult]:
+        """Dispatch all pending requests; returns {ticket: result}."""
+        groups: Dict[Tuple, List[Tuple[int, SolveRequest]]] = defaultdict(list)
+        for t, r in self._pending:
+            groups[r.batch_key].append((t, r))
+        self._pending.clear()
+        results: Dict[int, SolveResult] = {}
+        for _, members in sorted(groups.items(), key=lambda kv: repr(kv[0])):
+            tickets = [t for t, _ in members]
+            solved = self._solve_group([r for _, r in members])
+            results.update(zip(tickets, solved))
+            self.stats.requests += len(members)
+        return results
+
+    def solve_all(self, requests: Sequence[SolveRequest]) -> List[SolveResult]:
+        """Convenience: submit + flush, results in request order."""
+        tickets = [self.submit(r) for r in requests]
+        resolved = self.flush()
+        return [resolved[t] for t in tickets]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "kernel"])
+    args = ap.parse_args()
+    # A mixed workload: two problem classes, heterogeneous seeds. The kernel
+    # backend routes queue_lock requests; use it when demoing that backend.
+    variant = "queue_lock" if args.backend == "kernel" else "queue"
+    reqs = [SolveRequest(dim=1, particle_cnt=256, fitness="cubic",
+                         seed=i, iters=args.iters, variant=variant)
+            if i % 2 == 0 else
+            SolveRequest(dim=10, particle_cnt=128, fitness="rastrigin",
+                         seed=i, iters=args.iters, variant=variant)
+            for i in range(args.requests)]
+    srv = SolveServer(max_batch=args.max_batch, backend=args.backend)
+    t0 = time.time()
+    results = srv.solve_all(reqs)
+    dt = time.time() - t0
+    for r in results[:4]:
+        print(f"req(dim={r.request.dim}, seed={r.request.seed}) "
+              f"gbest_fit={r.gbest_fit:.6g} (batch={r.batch_size})")
+    s = srv.stats
+    print(f"{s.requests} requests in {s.dispatches} dispatches "
+          f"({s.padded_rows} padded rows), wall={dt:.3f}s "
+          f"({s.requests / dt:.1f} solves/s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -43,6 +43,18 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a one-element list of dicts (per computation), newer
+    returns the dict directly; normalize to the dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _shape_bytes(shape_str: str) -> int:
     """Bytes of one 'bf16[8,128]{...}'-style shape (tuples: sum parts)."""
     total = 0
@@ -158,7 +170,7 @@ class Roofline:
 def analyze(arch: str, shape: str, mesh_name: str, chips: int,
             compiled, cfg, params_shape, kind: str, tokens: int,
             hlo_text: Optional[str] = None) -> Roofline:
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     # cost_analysis is per-device on the partitioned module
     flops_dev = float(cost.get("flops", 0.0))
     bytes_dev = float(cost.get("bytes accessed", 0.0))

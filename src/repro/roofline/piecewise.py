@@ -48,7 +48,7 @@ class PieceCost:
 def _measure(fn, in_shardings, args, name: str, trips: float) -> PieceCost:
     lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = ra.cost_analysis_dict(compiled)
     coll = ra.collective_bytes(compiled.as_text())
     return PieceCost(name=name, trips=trips,
                      flops=float(cost.get("flops", 0.0)),
@@ -173,7 +173,7 @@ def _train_layer_piece(cfg: ArchConfig, mesh, kind: str, window: int,
     with unroll_mod.unrolled():
         lowered = jfn.lower(lp_shape, x)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = ra.cost_analysis_dict(compiled)
     coll = ra.collective_bytes(compiled.as_text())
     return PieceCost(name=name, trips=trips,
                      flops=float(cost.get("flops", 0.0)) * scale,
@@ -250,7 +250,7 @@ def _encdec_layer_piece(cfg: ArchConfig, mesh, which: str, b: int, s: int,
                       out_shardings=(None, tuple(in_sh)))
     with unroll_mod.unrolled():
         compiled = jfn.lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = ra.cost_analysis_dict(compiled)
     coll = ra.collective_bytes(compiled.as_text())
     return PieceCost(name=f"{which}_layer", trips=trips,
                      flops=float(cost.get("flops", 0.0)),
@@ -292,7 +292,7 @@ def _head_piece(cfg: ArchConfig, mesh, b: int, s_text: int,
                       out_shardings=(None, (n_spec, w_spec, x_spec)))
     with unroll_mod.unrolled():
         compiled = jfn.lower(norm, w, x, labels).compile()
-    cost = compiled.cost_analysis()
+    cost = ra.cost_analysis_dict(compiled)
     coll = ra.collective_bytes(compiled.as_text())
     return PieceCost("head", 1.0, float(cost.get("flops", 0.0)),
                      float(cost.get("bytes accessed", 0.0)),
@@ -321,7 +321,7 @@ def _embed_piece(cfg: ArchConfig, mesh, b: int, s_text: int,
                       in_shardings=(e_spec, t_spec),
                       out_shardings=(None, e_spec))
     compiled = jfn.lower(emb, toks).compile()
-    cost = compiled.cost_analysis()
+    cost = ra.cost_analysis_dict(compiled)
     coll = ra.collective_bytes(compiled.as_text())
     return PieceCost("embed", 1.0, float(cost.get("flops", 0.0)),
                      float(cost.get("bytes accessed", 0.0)),
@@ -346,7 +346,7 @@ def _optimizer_piece(cfg: ArchConfig, mesh) -> PieceCost:
     jfn = jax.jit(fn, in_shardings=(pspecs, pspecs, ospecs),
                   out_shardings=(pspecs, ospecs))
     compiled = jfn.lower(params_shape, params_shape, opt_shape).compile()
-    cost = compiled.cost_analysis()
+    cost = ra.cost_analysis_dict(compiled)
     coll = ra.collective_bytes(compiled.as_text())
     return PieceCost("optimizer", 1.0, float(cost.get("flops", 0.0)),
                      float(cost.get("bytes accessed", 0.0)),
@@ -431,7 +431,7 @@ def _decode_layer_piece(cfg: ArchConfig, mesh, shape_name: str, kind: str,
     jfn = jax.jit(fn, in_shardings=(lp_spec, c_spec, bspec, None),
                   out_shardings=(bspec, c_spec))
     compiled = jfn.lower(lp_shape, sub, x, n).compile()
-    cost = compiled.cost_analysis()
+    cost = ra.cost_analysis_dict(compiled)
     coll = ra.collective_bytes(compiled.as_text())
     return PieceCost(name, trips, float(cost.get("flops", 0.0)),
                      float(cost.get("bytes accessed", 0.0)),
@@ -472,7 +472,7 @@ def _decode_top_piece(cfg: ArchConfig, mesh, b: int) -> PieceCost:
 
     jfn = jax.jit(fn, in_shardings=(e_spec, None, w_spec, None))
     compiled = jfn.lower(emb, norm, w, tok).compile()
-    cost = compiled.cost_analysis()
+    cost = ra.cost_analysis_dict(compiled)
     coll = ra.collective_bytes(compiled.as_text())
     return PieceCost("decode_top", 1.0, float(cost.get("flops", 0.0)),
                      float(cost.get("bytes accessed", 0.0)),

@@ -6,6 +6,27 @@ import pytest
 # Only launch/dryrun.py fakes 512 devices (and only in its own process).
 
 
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked slow (long-iteration PSO "
+                          "runs, LM-substrate smoke compiles)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test, excluded from tier-1 unless --runslow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow: run with --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
 @pytest.fixture(scope="session")
 def rng_np():
     return np.random.default_rng(0)

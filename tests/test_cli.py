@@ -1,8 +1,12 @@
-"""CLI entry-point integration tests (subprocess; fast settings)."""
+"""CLI entry-point integration tests (subprocess; fast settings).
+
+The LM train CLI is the heaviest subprocess and rides behind --runslow."""
 import json
 import os
 import subprocess
 import sys
+
+import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
@@ -28,6 +32,7 @@ def test_pso_run_cli_islands_with_checkpoint(tmp_path):
     assert "gbest_fit=" in r.stdout
 
 
+@pytest.mark.slow
 def test_train_cli_smoke():
     r = _run(["-m", "repro.launch.train", "--arch", "stablelm-3b",
               "--smoke", "--steps", "8", "--batch", "2", "--seq", "64",

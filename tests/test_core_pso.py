@@ -32,7 +32,8 @@ def test_queue_equals_reduction_trajectory():
     cfg = PSOConfig(dim=7, particle_cnt=128, fitness="rastrigin").resolved()
     s_q = init_swarm(cfg, 3)
     s_r = init_swarm(cfg, 3)
-    for _ in range(50):
+    # 20 eager (unjitted) steps: enough to cross several gbest publications
+    for _ in range(20):
         s_q = step_queue(cfg, s_q)
         s_r = step_reduction(cfg, s_r)
         assert float(s_q.gbest_fit) == float(s_r.gbest_fit)
@@ -44,7 +45,7 @@ def test_queue_lock_equals_queue_trajectory():
     cfg = PSOConfig(dim=4, particle_cnt=256, fitness="ackley").resolved()
     s_q = init_swarm(cfg, 5)
     s_l = init_swarm(cfg, 5)
-    for _ in range(50):
+    for _ in range(12):
         s_q = step_queue(cfg, s_q)
         s_l = step_queue_lock(cfg, s_l)
     np.testing.assert_allclose(float(s_q.gbest_fit), float(s_l.gbest_fit),
@@ -59,7 +60,7 @@ def test_gbest_monotone_and_bounds(variant):
     s = init_swarm(cfg, 11)
     step = STEP_FNS[variant]
     prev = float(s.gbest_fit)
-    for _ in range(30):
+    for _ in range(15):
         s = step(cfg, s)
         g = float(s.gbest_fit)
         assert g >= prev                       # gbest never regresses
@@ -102,12 +103,12 @@ def test_serial_spso_gbest_dominates():
 def test_run_fori_loop_equals_python_loop():
     cfg = PSOConfig(dim=6, particle_cnt=128, fitness="cubic").resolved()
     s_loop = init_swarm(cfg, 4)
-    for _ in range(17):
+    for _ in range(8):
         s_loop = step_queue(cfg, s_loop)
-    s_run = run(cfg, init_swarm(cfg, 4), 17, "queue")
+    s_run = run(cfg, init_swarm(cfg, 4), 8, "queue")
     np.testing.assert_allclose(np.asarray(s_loop.pos), np.asarray(s_run.pos),
                                rtol=1e-5, atol=1e-5)
-    assert int(s_run.iteration) == 17
+    assert int(s_run.iteration) == 8
 
 
 def test_float64_path():

@@ -8,13 +8,19 @@ import pytest
 from repro.models.attention import flash_attention
 from repro.models.flash_vjp import flash_attention_vjp
 
+_slow = pytest.mark.slow
 CASES = [
-    # (B, Sq, Sk, H, KH, hd, hdv, causal, window, qb, kb)
+    # (B, Sq, Sk, H, KH, hd, hdv, causal, window, qb, kb) — the plain causal
+    # case stays in tier-1; the config sweep rides behind --runslow.
     (2, 64, 64, 4, 4, 16, 16, True, 0, 32, 32),
-    (1, 128, 128, 8, 2, 16, 16, True, 0, 64, 32),    # GQA
-    (2, 96, 96, 4, 4, 16, 16, True, 32, 32, 32),     # sliding window
-    (1, 64, 64, 4, 2, 16, 8, True, 0, 32, 32),       # hd_qk != hd_v
-    (2, 64, 64, 4, 4, 16, 16, False, 0, 32, 32),     # non-causal
+    pytest.param((1, 128, 128, 8, 2, 16, 16, True, 0, 64, 32),
+                 marks=_slow),                       # GQA
+    pytest.param((2, 96, 96, 4, 4, 16, 16, True, 32, 32, 32),
+                 marks=_slow),                       # sliding window
+    pytest.param((1, 64, 64, 4, 2, 16, 8, True, 0, 32, 32),
+                 marks=_slow),                       # hd_qk != hd_v
+    pytest.param((2, 64, 64, 4, 4, 16, 16, False, 0, 32, 32),
+                 marks=_slow),                       # non-causal
 ]
 
 
@@ -38,6 +44,7 @@ def test_forward_matches(case):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("case", CASES)
 def test_grads_match(case):
     b, sq, sk, h, kh, hd, hdv, causal, window, qb, kb = case
@@ -60,6 +67,7 @@ def test_grads_match(case):
                                    err_msg=f"d{name} mismatch")
 
 
+@pytest.mark.slow
 def test_model_trains_with_custom_vjp():
     """End-to-end: smoke arch with flash_custom_vjp=True trains one step
     and matches the default path's loss."""

@@ -10,11 +10,13 @@ from repro.kernels.gla import gla_forward
 from repro.models.ssm import gla_chunked
 
 SWEEP = [
-    # (B, S, H, N, P, chunk)
+    # (B, S, H, N, P, chunk) — one representative stays in tier-1, the
+    # rest of the interpret-mode sweep rides behind --runslow
     (2, 64, 2, 16, 32, 16),
-    (1, 128, 4, 16, 16, 32),
-    (2, 96, 1, 8, 24, 32),     # S not a multiple of chunk (pad path)
-    (1, 256, 2, 32, 8, 128),
+    pytest.param((1, 128, 4, 16, 16, 32), marks=pytest.mark.slow),
+    pytest.param((2, 96, 1, 8, 24, 32),   # S not multiple of chunk (pad)
+                 marks=pytest.mark.slow),
+    pytest.param((1, 256, 2, 32, 8, 128), marks=pytest.mark.slow),
 ]
 
 
@@ -40,6 +42,7 @@ def test_kernel_matches_engine(case):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_kernel_chunk_invariance():
     """Different chunk sizes must give the same function values."""
     case = (1, 128, 2, 16, 16, 32)
@@ -65,6 +68,7 @@ def test_kernel_state_carry_across_chunks():
                            np.asarray(y_forget)[:, -16:], atol=1e-3)
 
 
+@pytest.mark.slow
 def test_kernel_mlstm_pattern():
     """mLSTM's v-augmentation (ones column as the normalizer)."""
     b, s, h, n = 1, 64, 2, 16

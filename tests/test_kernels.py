@@ -18,13 +18,15 @@ def _oracle_kwargs(cfg, dim):
 
 
 SHAPE_SWEEP = [
-    # (dim, n, block_n) — includes the paper's two regimes (1D, 120D)
+    # (dim, n, block_n) — includes the paper's two regimes (1D, 120D);
+    # the two largest interpret-mode shapes ride behind --runslow.
     (1, 128, 128),
-    (1, 1024, 256),
     (2, 256, 128),
     (120, 256, 128),
-    (120, 512, 512),
-    (33, 384, 128),      # non-aligned dim, odd block count
+    pytest.param(33, 384, 128,           # non-aligned dim, odd block count
+                 marks=pytest.mark.slow),
+    pytest.param(1, 1024, 256, marks=pytest.mark.slow),
+    pytest.param(120, 512, 512, marks=pytest.mark.slow),
 ]
 
 

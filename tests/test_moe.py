@@ -31,6 +31,7 @@ def _dense_reference(p, x, n_experts, top_k, act):
     return out.reshape(b, s, d).astype(x.dtype)
 
 
+@pytest.mark.slow
 def test_moe_matches_dense_reference_when_capacity_ample():
     d, ff, e, k = 16, 32, 4, 2
     key = jax.random.key(0)
@@ -45,6 +46,7 @@ def test_moe_matches_dense_reference_when_capacity_ample():
     assert float(aux) > 0.0
 
 
+@pytest.mark.slow
 def test_moe_drops_only_over_capacity():
     """With tight capacity, output norm shrinks but stays finite, and
     groups are independent."""
@@ -66,6 +68,7 @@ def test_capacity_rounding():
     assert _capacity(8, 128, 2, 1.25) == 8      # floor
 
 
+@pytest.mark.slow
 def test_moe_grads_flow_to_router_and_experts():
     d, ff, e, k = 8, 16, 4, 2
     p = init_moe(jax.random.key(0), d, ff, e, "silu", jnp.float32)

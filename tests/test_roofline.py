@@ -86,7 +86,7 @@ def test_scan_body_counted_once_documented():
         return jax.lax.scan(lambda c, _: (c @ c, None), a, None,
                             length=10)[0]
 
-    f1 = jax.jit(lambda a: a @ a).lower(x).compile().cost_analysis()["flops"]
-    fs = jax.jit(scan10).lower(x).compile().cost_analysis()["flops"]
+    f1 = ra.cost_analysis_dict(jax.jit(lambda a: a @ a).lower(x).compile())["flops"]
+    fs = ra.cost_analysis_dict(jax.jit(scan10).lower(x).compile())["flops"]
     # body counted once (+ O(1) loop bookkeeping), NOT 10x:
     assert fs < 1.5 * f1   # piecewise analysis must correct for trips
