@@ -7,6 +7,11 @@
   table5  — 120D speedup of Queue vs CPU serial (paper Table 5).
   multi_swarm — batched engine: S independent solves via ONE solve_many
             device program vs a Python loop of solve() (swarms/sec).
+  async_sweep — the enhanced (asynchronous) queue-lock: per-iteration cost
+            and solution quality vs the synchronous kernel across
+            sync_every ∈ {1, 4, 16, 64}. Fewer chunk boundaries = fewer
+            cross-block synchronization points = fewer grid steps; the
+            per-iteration cost must fall monotonically as sync_every grows.
   lm_bench— LM substrate micro-bench (tokens/s on the smoke configs).
 
 This container is CPU-only, so the "GPU" columns run the same JAX
@@ -20,10 +25,16 @@ the mapping onto the paper's GTX-1080Ti results.
 (DESIGN.md §2); the reduction variant is its closest analogue and is
 reported once.
 
-Output: ``name,us_per_call,derived`` CSV rows on stdout.
+Output: ``name,us_per_call,derived`` CSV rows on stdout, plus a
+machine-readable ``BENCH_pso.json`` (``--out``) with the same records and
+backend/interpret metadata, so the perf trajectory is tracked across PRs.
+``--smoke`` shrinks every benchmark to CI-sized iteration counts and skips
+the LM substrate.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -31,6 +42,25 @@ import numpy as np
 
 ITERS_1D = 2000           # paper uses 100k; scaled for CPU wall-time — the
 REPEATS = 3               # us/iter metric is iteration-count invariant
+
+# How this harness invokes the Pallas kernels. Recorded in the JSON meta so
+# interpret-mode and TPU-compiled timings can never be silently compared.
+KERNEL_INTERPRET = True
+
+# Machine-readable result records: [{"name": ..., "us_per_call": ...,
+# <derived k/v>}, ...], dumped to BENCH_pso.json by main().
+RESULTS = []
+
+
+def emit(name: str, us_per_call: float, **derived) -> None:
+    """Print the CSV row and record it for the JSON dump."""
+    tail = ",".join(f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in derived.items())
+    print(f"{name},{us_per_call:.3f}" + ("," + tail if tail else ""))
+    RESULTS.append({"name": name, "us_per_call": float(us_per_call),
+                    **{k: (float(v) if isinstance(v, (int, float, np.floating))
+                           and not isinstance(v, bool) else v)
+                       for k, v in derived.items()}})
 
 
 def _time(fn, repeats=REPEATS):
@@ -65,62 +95,131 @@ def _pso_variants(dim: int, particles: int, iters: int):
     return out
 
 
-def table3() -> None:
+def table3(smoke=False) -> None:
     """1D problem across particle counts (paper Table 3)."""
-    iters = ITERS_1D
-    for particles in (32, 64, 128, 256, 512, 1024, 2048):
+    iters = 200 if smoke else ITERS_1D
+    sweep = (64, 256) if smoke else (32, 64, 128, 256, 512, 1024, 2048)
+    for particles in sweep:
         res = _pso_variants(1, particles, iters)
         base = res["cpu_serial"]
         for name, t in res.items():
-            us = 1e6 * t / iters
-            print(f"table3/p{particles}/{name},{us:.3f},"
-                  f"speedup_vs_serial={base / t:.2f}")
+            emit(f"table3/p{particles}/{name}", 1e6 * t / iters,
+                 speedup_vs_serial=base / t)
 
 
-def table4() -> None:
+def table4(smoke=False) -> None:
     """Queue-Lock speedup scaling, 1D (paper Table 4)."""
     from repro.core import PSOConfig, init_swarm, run, run_serial_fast
-    iters = ITERS_1D // 2
-    for particles in (128, 512, 2048, 8192, 32768, 131072):
+    iters = 100 if smoke else ITERS_1D // 2
+    sweep = (128, 2048) if smoke else (128, 512, 2048, 8192, 32768, 131072)
+    for particles in sweep:
         cfg = PSOConfig(dim=1, particle_cnt=particles).resolved()
         s0 = init_swarm(cfg, 0)
         t_cpu = _time(lambda: run_serial_fast(cfg, 0, iters), repeats=1)
         t_ql = _time(lambda: jax.block_until_ready(
             run(cfg, s0, iters, "queue_lock").gbest_fit))
-        print(f"table4/p{particles}/queue_lock,{1e6*t_ql/iters:.3f},"
-              f"speedup={t_cpu/t_ql:.2f}")
+        emit(f"table4/p{particles}/queue_lock", 1e6 * t_ql / iters,
+             speedup=t_cpu / t_ql)
 
 
-def table5() -> None:
+def table5(smoke=False) -> None:
     """Queue speedup scaling, 120D (paper Table 5)."""
     from repro.core import PSOConfig, init_swarm, run, run_serial_fast
-    for particles, iters in ((128, 200), (1024, 150), (8192, 100),
-                             (32768, 50)):
+    sweep = (((128, 50), (1024, 25)) if smoke else
+             ((128, 200), (1024, 150), (8192, 100), (32768, 50)))
+    for particles, iters in sweep:
         cfg = PSOConfig(dim=120, particle_cnt=particles).resolved()
         s0 = init_swarm(cfg, 0)
         t_cpu = _time(lambda: run_serial_fast(cfg, 0, iters), repeats=1)
         t_q = _time(lambda: jax.block_until_ready(
             run(cfg, s0, iters, "queue").gbest_fit))
-        print(f"table5/p{particles}/queue,{1e6*t_q/iters:.3f},"
-              f"speedup={t_cpu/t_q:.2f}")
+        emit(f"table5/p{particles}/queue", 1e6 * t_q / iters,
+             speedup=t_cpu / t_q)
 
 
-def convergence_equivalence() -> None:
+def convergence_equivalence(smoke=False) -> None:
     """The queue variants must match reduction's answer (paper §4.1) —
     report final gbest per variant on the paper's two problems."""
     from repro.core import PSOConfig, solve
-    for dim, iters in ((1, 1000), (120, 500)):
+    sweep = ((1, 200),) if smoke else ((1, 1000), (120, 500))
+    for dim, iters in sweep:
         vals = {}
         for v in ("reduction", "queue", "queue_lock"):
             s = solve(PSOConfig(dim=dim, particle_cnt=1024), seed=0,
                       iters=iters, variant=v)
             vals[v] = float(s.gbest_fit)
         spread = max(vals.values()) - min(vals.values())
-        print(f"equiv/{dim}d/gbest_spread,{spread:.6g},"
-              f"gbest={vals['queue']:.6g}")
+        emit(f"equiv/{dim}d/gbest_spread", spread, gbest=vals["queue"])
 
 
-def multi_swarm() -> None:
+def async_sweep(smoke=False) -> None:
+    """Async queue-lock: cost and quality vs sync across sync_every.
+
+    Kernel leg (interpret mode): the grid has ``blocks * iters/sync_every``
+    steps, so per-iteration cost measures exactly what the async algorithm
+    removes — cross-block synchronization points (on TPU silicon: the
+    serialized gbest publication + state round-trips; in interpret mode:
+    the per-grid-step machinery standing in for them). It must fall
+    monotonically as sync_every grows. Timing protocol: the K values are
+    sampled round-robin (interleaved) and the per-K minimum is kept, so
+    shared-machine scheduling drift hits every K equally instead of
+    whichever K ran last. Library leg: final gbest quality of the relaxed
+    semantics vs the synchronous queue_lock on the same seed.
+    """
+    from repro.core import PSOConfig, init_swarm, run, run_async
+    from repro.kernels.ops import (run_queue_lock_fused,
+                                   run_queue_lock_fused_async)
+    dim, particles, block_n = 1, 4096, 64     # 64 particle blocks
+    iters = 128                                # long calls: stable us/iter
+    rounds = 6 if smoke else 10
+    sweep = (1, 4, 16, 64)
+    cfg = PSOConfig(dim=dim, particle_cnt=particles,
+                    fitness="rastrigin").resolved()
+    s0 = init_swarm(cfg, 0)
+
+    def async_call(k):
+        return run_queue_lock_fused_async(cfg, s0, iters=iters,
+                                          sync_every=k, block_n=block_n,
+                                          interpret=KERNEL_INTERPRET)
+
+    def sync_call():
+        return run_queue_lock_fused(cfg, s0, iters=iters, block_n=block_n,
+                                    interpret=KERNEL_INTERPRET)
+
+    fns = {k: (lambda k=k: jax.block_until_ready(async_call(k).gbest_fit))
+           for k in sweep}
+    fns["sync"] = lambda: jax.block_until_ready(sync_call().gbest_fit)
+    # warmup/compile; the calls are deterministic, so the warmup results
+    # double as the quality numbers (no re-execution after timing)
+    gbest = {k: float(fn()) for k, fn in fns.items()}
+    best = {k: float("inf") for k in fns}
+    for _ in range(rounds):                   # interleaved, keep the min
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            best[k] = min(best[k], time.perf_counter() - t0)
+    tag = f"async_sweep/d{dim}_n{particles}_b{block_n}"
+    emit(f"{tag}/sync_kernel", 1e6 * best["sync"] / iters,
+         gbest_fit=gbest["sync"])
+    for k in sweep:
+        emit(f"{tag}/sync_every_{k}", 1e6 * best[k] / iters,
+             speedup_vs_sync=best["sync"] / best[k],
+             gbest_fit=gbest[k],
+             gbest_gap_vs_sync=gbest["sync"] - gbest[k])
+    # library (jnp) leg: relaxed-consistency quality at production iteration
+    # counts — the async answer must stay in the sync answer's neighborhood.
+    qcfg = PSOConfig(dim=8, particle_cnt=256, fitness="rastrigin").resolved()
+    q0 = init_swarm(qcfg, 0)
+    jiters = 100 if smoke else 400
+    gf_ql = float(run(qcfg, q0, jiters, "queue_lock").gbest_fit)
+    for k in sweep:
+        st = run_async(qcfg, q0, jiters, sync_every=k, n_blocks=4)
+        emit(f"async_sweep/jnp_d8_n256/sync_every_{k}",
+             0.0, gbest_fit=float(st.gbest_fit),
+             gbest_gap_vs_queue_lock=gf_ql - float(st.gbest_fit))
+
+
+def multi_swarm(smoke=False) -> None:
     """Batched multi-swarm engine vs loop-of-solve (swarms/sec).
 
     The loop baseline compiles once (cfg/iters static) and pays per-solve
@@ -132,9 +231,9 @@ def multi_swarm() -> None:
     """
     import jax
     from repro.core import PSOConfig, solve, solve_many
-    for dim, particles, s_cnt, iters in ((10, 256, 8, 200),
-                                         (10, 256, 16, 200),
-                                         (10, 1024, 32, 100)):
+    sweep = (((10, 256, 8, 50),) if smoke else
+             ((10, 256, 8, 200), (10, 256, 16, 200), (10, 1024, 32, 100)))
+    for dim, particles, s_cnt, iters in sweep:
         cfg = PSOConfig(dim=dim, particle_cnt=particles, fitness="rastrigin")
         seeds = list(range(s_cnt))
         t_loop = _time(lambda: [jax.block_until_ready(
@@ -143,11 +242,11 @@ def multi_swarm() -> None:
         t_batch = _time(lambda: jax.block_until_ready(
             solve_many(cfg, seeds, iters, "queue").gbest_fit), repeats=1)
         tag = f"multi_swarm/d{dim}_n{particles}_s{s_cnt}"
-        print(f"{tag}/loop_of_solve,{1e6 * t_loop:.1f},"
-              f"swarms_per_s={s_cnt / t_loop:.2f}")
-        print(f"{tag}/solve_many,{1e6 * t_batch:.1f},"
-              f"swarms_per_s={s_cnt / t_batch:.2f},"
-              f"speedup_vs_loop={t_loop / t_batch:.2f}")
+        emit(f"{tag}/loop_of_solve", 1e6 * t_loop,
+             swarms_per_s=s_cnt / t_loop)
+        emit(f"{tag}/solve_many", 1e6 * t_batch,
+             swarms_per_s=s_cnt / t_batch,
+             speedup_vs_loop=t_loop / t_batch)
 
 
 def lm_bench() -> None:
@@ -167,17 +266,39 @@ def lm_bench() -> None:
         t = _time(lambda: jax.block_until_ready(
             jstep(params, opt, batch)[2]["loss"]))
         toks = b * s
-        print(f"lm/{arch}/train_step,{1e6*t:.1f},tokens_per_s={toks/t:.0f}")
+        emit(f"lm/{arch}/train_step", 1e6 * t, tokens_per_s=toks / t)
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized iteration counts; skips the LM substrate")
+    ap.add_argument("--out", default="BENCH_pso.json",
+                    help="machine-readable results path ('' disables)")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    convergence_equivalence()
-    table3()
-    table4()
-    table5()
-    multi_swarm()
-    lm_bench()
+    convergence_equivalence(args.smoke)
+    table3(args.smoke)
+    table4(args.smoke)
+    table5(args.smoke)
+    multi_swarm(args.smoke)
+    async_sweep(args.smoke)
+    if not args.smoke:
+        lm_bench()
+    if args.out:
+        doc = {
+            "meta": {
+                "backend": jax.default_backend(),
+                "jax_version": jax.__version__,
+                "pallas_interpret": KERNEL_INTERPRET,
+                "smoke": bool(args.smoke),
+            },
+            "benchmarks": RESULTS,
+        }
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(RESULTS)} records to {args.out}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """cuPSO core: the paper's contribution as a composable JAX module."""
 from .fitness import FITNESS_FNS, FITNESS_IDS, DEFAULT_BOUNDS
-from .pso import (PSOConfig, SwarmState, STEP_FNS, init_swarm, run, solve,
+from .pso import (ASYNC_SYNC_EVERY, PSOConfig, SwarmState, STEP_FNS,
+                  VARIANTS, init_async_locals, init_swarm,
+                  publish_async_locals, run, run_async, solve, step_async,
                   step_queue, step_queue_lock, step_reduction)
 from .multi_swarm import (SwarmBatch, batch_row, best_of_batch, init_batch,
                           run_many, solve_many, stack_states)
@@ -12,7 +14,9 @@ from .tuner import (PSO_COEFF_DIMS, PSOTuner, SearchDim, TunerResult,
 
 __all__ = [
     "FITNESS_FNS", "FITNESS_IDS", "DEFAULT_BOUNDS",
-    "PSOConfig", "SwarmState", "STEP_FNS", "init_swarm", "run", "solve",
+    "PSOConfig", "SwarmState", "STEP_FNS", "VARIANTS", "ASYNC_SYNC_EVERY",
+    "init_swarm", "run", "solve", "run_async", "step_async",
+    "init_async_locals", "publish_async_locals",
     "step_queue", "step_queue_lock", "step_reduction",
     "SwarmBatch", "init_batch", "batch_row", "stack_states", "run_many",
     "solve_many", "best_of_batch",

@@ -49,7 +49,8 @@ from typing import NamedTuple, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from .pso import PSOConfig, STEP_FNS, SwarmState, init_swarm
+from .pso import (ASYNC_SYNC_EVERY, PSOConfig, STEP_FNS, SwarmState,
+                  init_swarm, run_async)
 
 Array = jnp.ndarray
 
@@ -99,17 +100,26 @@ def stack_states(states: Sequence[SwarmState]) -> SwarmBatch:
     return SwarmBatch(*stacked)
 
 
-@partial(jax.jit, static_argnames=("cfg", "iters", "variant"))
-def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
-             variant: str = "queue",
-             coeffs: Optional[Tuple[Array, Array, Array]] = None
-             ) -> SwarmBatch:
-    """Advance every swarm of the batch ``iters`` iterations in lockstep.
+@partial(jax.jit, static_argnames=("cfg", "iters", "sync_every"))
+def _run_many_async(cfg: PSOConfig, batch: SwarmBatch, iters: int,
+                    sync_every: int,
+                    coeffs: Optional[Tuple[Array, Array, Array]] = None
+                    ) -> SwarmBatch:
+    if coeffs is None:
+        fn = jax.vmap(lambda s: run_async(
+            cfg, s, iters, sync_every=sync_every))
+        return SwarmBatch(*fn(SwarmState(*batch)))
+    w, c1, c2 = (jnp.asarray(c) for c in coeffs)
+    fn = jax.vmap(lambda s, w_, c1_, c2_: run_async(
+        cfg, s, iters, sync_every=sync_every, coeffs=(w_, c1_, c2_)))
+    return SwarmBatch(*fn(SwarmState(*batch), w, c1, c2))
 
-    One fori_loop over one vmapped step: a single compiled program, a single
-    dispatch, no host round-trips between iterations or between swarms.
-    """
-    cfg = cfg.resolved()
+
+@partial(jax.jit, static_argnames=("cfg", "iters", "variant"))
+def _run_many_stepped(cfg: PSOConfig, batch: SwarmBatch, iters: int,
+                      variant: str,
+                      coeffs: Optional[Tuple[Array, Array, Array]] = None
+                      ) -> SwarmBatch:
     step = STEP_FNS[variant]
     if coeffs is None:
         step_b = jax.vmap(lambda s: step(cfg, s))
@@ -127,20 +137,43 @@ def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
     return jax.lax.fori_loop(0, iters, body, batch)
 
 
+def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
+             variant: str = "queue",
+             coeffs: Optional[Tuple[Array, Array, Array]] = None,
+             sync_every: int = ASYNC_SYNC_EVERY) -> SwarmBatch:
+    """Advance every swarm of the batch ``iters`` iterations in lockstep.
+
+    One fori_loop over one vmapped step: a single compiled program, a single
+    dispatch, no host round-trips between iterations or between swarms.
+    ``variant="async"`` vmaps the whole ``run_async`` loop nest instead (it
+    carries block-local bests across iterations, so it cannot ride the
+    per-step registry); ``run_async`` is cond-free, so the vmap is a pure
+    scheduling transform and per-row bit-identity holds like the others.
+    A thin dispatcher over the jitted implementations, so synchronous
+    variants never key their jit cache on the (irrelevant) ``sync_every``.
+    """
+    cfg = cfg.resolved()
+    if variant == "async":
+        return _run_many_async(cfg, batch, iters, sync_every, coeffs)
+    return _run_many_stepped(cfg, batch, iters, variant, coeffs)
+
+
 def solve_many(cfg: PSOConfig, seeds, iters: int = 1000,
                variant: str = "queue",
-               coeffs: Optional[Tuple[Array, Array, Array]] = None
-               ) -> SwarmBatch:
+               coeffs: Optional[Tuple[Array, Array, Array]] = None,
+               sync_every: int = ASYNC_SYNC_EVERY) -> SwarmBatch:
     """Batched one-shot: init + run for S independent solves.
 
     ``seeds`` is any int sequence/array of length S; ``variant`` is one of
-    ``reduction | queue | queue_lock``; ``coeffs`` optionally supplies
-    per-swarm ``(w, c1, c2)`` arrays. Row ``s`` of the result is
+    ``reduction | queue | queue_lock | async``; ``coeffs`` optionally
+    supplies per-swarm ``(w, c1, c2)`` arrays; ``sync_every`` is the async
+    variant's publication interval. Row ``s`` of the result is
     bit-identical to ``solve(cfg, seeds[s], iters, variant)`` when
     ``coeffs`` is None.
     """
     cfg = cfg.resolved()
-    return run_many(cfg, init_batch(cfg, seeds), iters, variant, coeffs)
+    return run_many(cfg, init_batch(cfg, seeds), iters, variant, coeffs,
+                    sync_every)
 
 
 def best_of_batch(batch: SwarmBatch) -> Tuple[Array, Array, Array]:

@@ -14,6 +14,12 @@ Variants (paper §3.2, §4):
     ``repro.kernels``; the jnp fallback here additionally fuses the pbest and
     gbest conditionals into a single predicated block so that XLA emits one
     conditional region instead of two.
+  * ``step_async``/``run_async`` — the paper's *enhanced* queue-lock:
+    particle blocks run asynchronously against block-local bests and the
+    shared gbest is published/pulled only every ``sync_every`` iterations
+    (relaxed consistency: a block's view is at most ``sync_every``
+    iterations stale). The Pallas counterpart is
+    ``repro.kernels.ops.run_queue_lock_fused_async``.
 
 Semantics note: all parallel variants are *synchronous* PPSO — every particle
 sees the gbest of the previous iteration (the paper's Fig. 1 workflow). The
@@ -126,7 +132,8 @@ def init_swarm(cfg: PSOConfig, seed: int, n: Optional[int] = None,
 
 
 def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0,
-             coeffs: Optional[Tuple[Array, Array, Array]] = None
+             coeffs: Optional[Tuple[Array, Array, Array]] = None,
+             gbest_pos: Optional[Array] = None
              ) -> Tuple[Array, Array, Array]:
     """Steps 2–3 of Alg. 1: velocity/position update + fitness, vectorized.
 
@@ -136,19 +143,23 @@ def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0,
     the hook ``repro.core.multi_swarm.solve_many`` uses to vmap one compiled
     program over *per-swarm* hyper-parameters (meta-tuning). When ``None``
     the config's Python floats are used, producing the exact same jaxpr as
-    before the hook existed.
+    before the hook existed. ``gbest_pos`` optionally overrides the social
+    attractor (any shape broadcastable to [N, D]) — the hook ``step_async``
+    uses to steer each particle toward its *block's* local best instead of
+    the shared swarm best.
     """
     n, d = s.pos.shape
     dt = s.pos.dtype
     it = s.iteration + 1
     w, c1, c2 = coeffs if coeffs is not None else (cfg.w, cfg.c1, cfg.c2)
+    gbp = s.gbest_pos[None, :] if gbest_pos is None else gbest_pos
     idx = (jnp.arange(n * d, dtype=jnp.uint32).reshape(n, d)
            + jnp.uint32(index_offset * d))
     r1 = rng.uniform(s.seed, it, STREAM_R1, idx, dtype=dt)
     r2 = rng.uniform(s.seed, it, STREAM_R2, idx, dtype=dt)
     vel = (w * s.vel
            + c1 * r1 * (s.pbest_pos - s.pos)
-           + c2 * r2 * (s.gbest_pos[None, :] - s.pos))
+           + c2 * r2 * (gbp - s.pos))
     vel = jnp.clip(vel, -cfg.max_v, cfg.max_v)
     pos = jnp.clip(s.pos + vel, cfg.min_pos, cfg.max_pos)
     fit = cfg.fitness_fn(pos)
@@ -259,18 +270,155 @@ STEP_FNS = {
     "queue_lock": step_queue_lock,
 }
 
+# All aggregation variants accepted by run/solve/solve_many/serve. "async"
+# is not in STEP_FNS because it carries extra block-local state between
+# iterations (see run_async); run()/run_many() dispatch it explicitly.
+VARIANTS = ("reduction", "queue", "queue_lock", "async")
+
+# Default publication interval for the async variant (iterations between
+# cross-block gbest syncs). 8 keeps the staleness window small while
+# amortizing the reduction ~an order of magnitude.
+ASYNC_SYNC_EVERY = 8
+
+
+def init_async_locals(state: SwarmState, n_blocks: int
+                      ) -> Tuple[Array, Array]:
+    """Block-local bests seeded from the shared gbest: ([nb, D], [nb])."""
+    lbp = jnp.broadcast_to(state.gbest_pos[None, :],
+                           (n_blocks,) + state.gbest_pos.shape)
+    lbf = jnp.broadcast_to(state.gbest_fit, (n_blocks,))
+    return jnp.asarray(lbp), jnp.asarray(lbf)
+
+
+def step_async(cfg: PSOConfig, s: SwarmState,
+               local: Tuple[Array, Array],
+               coeffs: Optional[Tuple[Array, Array, Array]] = None
+               ) -> Tuple[SwarmState, Tuple[Array, Array]]:
+    """One ASYNC queue-lock iteration (paper's enhanced variant, §4.2).
+
+    Every block of ``n // nb`` particles advances against its *block-local*
+    best ``local = (lbp [nb, D], lbf [nb])`` — zero cross-block
+    communication. The iteration's per-block winner is folded into the local
+    best; the shared ``s.gbest_*`` fields are left untouched (stale) until
+    ``publish_async_locals`` syncs them, which ``run_async`` does every
+    ``sync_every`` iterations. Deliberately cond-free (pure where/argmax)
+    so it vmaps over a swarm axis without changing semantics.
+    """
+    lbp, lbf = local
+    n, d = s.pos.shape
+    nb = lbf.shape[0]
+    bn = n // nb
+    gb = jnp.repeat(lbp, bn, axis=0)              # particle -> its block best
+    pos, vel, fit = _advance(cfg, s, coeffs=coeffs, gbest_pos=gb)
+    pbest_pos, pbest_fit = _update_pbest(s, pos, fit)
+    fb = fit.reshape(nb, bn)
+    bi = jnp.argmax(fb, axis=1)                   # per-block iteration winner
+    bfit = jnp.take_along_axis(fb, bi[:, None], axis=1)[:, 0]
+    bpos = pos.reshape(nb, bn, d)[jnp.arange(nb), bi]
+    take = bfit > lbf
+    lbf = jnp.where(take, bfit, lbf)
+    lbp = jnp.where(take[:, None], bpos, lbp)
+    s = s._replace(pos=pos, vel=vel, fit=fit, pbest_pos=pbest_pos,
+                   pbest_fit=pbest_fit, iteration=s.iteration + 1)
+    return s, (lbp, lbf)
+
+
+def publish_async_locals(s: SwarmState, local: Tuple[Array, Array]
+                         ) -> Tuple[SwarmState, Tuple[Array, Array]]:
+    """The sync point: publish the best local into the shared gbest, then
+    pull the (new) shared gbest back into every block's local. After this,
+    every block sees the true swarm-wide best — staleness resets to zero."""
+    lbp, lbf = local
+    b = jnp.argmax(lbf)
+    take = lbf[b] > s.gbest_fit
+    gf = jnp.where(take, lbf[b], s.gbest_fit)
+    gp = jnp.where(take, lbp[b], s.gbest_pos)
+    lbf = jnp.broadcast_to(gf, lbf.shape)
+    lbp = jnp.broadcast_to(gp[None, :], lbp.shape)
+    return s._replace(gbest_pos=gp, gbest_fit=gf), (lbp, lbf)
+
+
+def _default_async_blocks(n: int, target: int = 512) -> int:
+    """Block count giving the largest block size ≤ target that divides n
+    (the library mirror of ``repro.kernels.ops.pick_block_n``)."""
+    for bn in range(min(n, target), 0, -1):
+        if n % bn == 0:
+            return n // bn
+    return 1
+
+
+@partial(jax.jit,
+         static_argnames=("cfg", "iters", "sync_every", "n_blocks"))
+def run_async(cfg: PSOConfig, state: SwarmState, iters: int,
+              sync_every: int = ASYNC_SYNC_EVERY,
+              n_blocks: Optional[int] = None,
+              coeffs: Optional[Tuple[Array, Array, Array]] = None
+              ) -> SwarmState:
+    """``iters`` iterations of relaxed-consistency async PSO (jnp fallback).
+
+    The library-level mirror of the Pallas async queue-lock: particle
+    blocks run against block-local bests and the shared gbest is
+    published/pulled only every ``sync_every`` iterations, so any block's
+    view of the swarm best is at most ``sync_every`` iterations stale. A
+    final sync always runs before returning: the result's ``gbest_fit``
+    equals ``max(pbest_fit)`` exactly. With ``sync_every=1`` every
+    iteration syncs — the synchronous queue-lock semantics as a special
+    case. vmap-clean (no lax.cond anywhere) for ``multi_swarm.solve_many``.
+    """
+    cfg = cfg.resolved()
+    n, _ = state.pos.shape
+    nb = n_blocks or _default_async_blocks(n)
+    if n % nb:
+        raise ValueError(f"n_blocks={nb} does not divide particle_cnt={n}")
+    sync_every = max(1, min(sync_every, iters)) if iters else 1
+    local = init_async_locals(state, nb)
+
+    def one(carry):
+        s, local = carry
+        return step_async(cfg, s, local, coeffs=coeffs)
+
+    def chunk(span):
+        def body(_, carry):
+            s, local = carry
+            s, local = jax.lax.fori_loop(
+                0, span, lambda _, c: one(c), (s, local))
+            return publish_async_locals(s, local)
+        return body
+
+    chunks, rem = divmod(iters, sync_every)
+    carry = (state, local)
+    if chunks:
+        carry = jax.lax.fori_loop(0, chunks, chunk(sync_every), carry)
+    if rem:
+        carry = chunk(rem)(0, carry)
+    return carry[0]
+
 
 @partial(jax.jit, static_argnames=("cfg", "iters", "variant"))
-def run(cfg: PSOConfig, state: SwarmState, iters: int,
-        variant: str = "queue") -> SwarmState:
-    """Run ``iters`` PSO iterations with the chosen aggregation variant."""
-    cfg = cfg.resolved()
+def _run_stepped(cfg: PSOConfig, state: SwarmState, iters: int,
+                 variant: str) -> SwarmState:
     step = STEP_FNS[variant]
     return jax.lax.fori_loop(0, iters, lambda _, s: step(cfg, s), state)
 
 
+def run(cfg: PSOConfig, state: SwarmState, iters: int,
+        variant: str = "queue",
+        sync_every: int = ASYNC_SYNC_EVERY) -> SwarmState:
+    """Run ``iters`` PSO iterations with the chosen aggregation variant.
+
+    ``sync_every`` only affects ``variant="async"`` (publication interval).
+    A thin dispatcher over the jitted implementations, so synchronous
+    variants never key their jit cache on the (irrelevant) ``sync_every``.
+    """
+    cfg = cfg.resolved()
+    if variant == "async":
+        return run_async(cfg, state, iters, sync_every=sync_every)
+    return _run_stepped(cfg, state, iters, variant)
+
+
 def solve(cfg: PSOConfig, seed: int = 0, iters: int = 1000,
-          variant: str = "queue") -> SwarmState:
+          variant: str = "queue",
+          sync_every: int = ASYNC_SYNC_EVERY) -> SwarmState:
     """Convenience one-shot: init + run."""
     cfg = cfg.resolved()
-    return run(cfg, init_swarm(cfg, seed), iters, variant)
+    return run(cfg, init_swarm(cfg, seed), iters, variant, sync_every)

@@ -18,23 +18,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.multi_swarm import SwarmBatch
-from repro.core.pso import PSOConfig, SwarmState
-from .pso_step import (fused_batch_call, fused_call, pad_dim,
+from repro.core.pso import ASYNC_SYNC_EVERY, PSOConfig, SwarmState
+from .pso_step import (fused_async_batch_call, fused_async_call,
+                       fused_batch_call, fused_call, pad_dim,
                        queue_step_call, LANE)
 
 
 def pick_block_n(n: int, target: int = 512) -> int:
-    """Largest divisor of n that is ≤ target and lane-aligned if possible."""
-    best = n
+    """Largest divisor of n that is ≤ target, preferring lane-aligned ones.
+
+    One descending pass: the first lane-aligned (multiple-of-128) divisor
+    wins outright; otherwise the first (i.e. largest) divisor of any kind is
+    remembered as the fallback. A prime n larger than ``target`` has no
+    divisor ≤ target except 1.
+    """
+    best = 1
     for bn in range(min(n, target), 0, -1):
         if n % bn == 0:
             if bn % LANE == 0:
                 return bn
-            best = min(best, bn) if best == n else best
-    for bn in range(min(n, target), 0, -1):  # fall back: any divisor
-        if n % bn == 0:
-            return bn
-    return n
+            if best == 1:
+                best = bn
+    return best
 
 
 def pack_dmajor(pos, d: int):
@@ -166,6 +171,110 @@ def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
     call = fused_batch_call(s_cnt, n, d, iters, bn, batch.pos.dtype,
                             interpret=interpret, **_cfg_kwargs(cfg))
     pos, vel, pbp, pbf, gp, gf = call(seeds, its, pos, vel, pbp, pbf, gp, gf)
+    pbf = pbf.reshape(s_cnt, n)
+    return batch._replace(
+        pos=unpack_dmajor_batch(pos, s_cnt, d),
+        vel=unpack_dmajor_batch(vel, s_cnt, d),
+        fit=pbf,  # kernels do not retain raw fit; pbest_fit >= fit
+        pbest_pos=unpack_dmajor_batch(pbp, s_cnt, d), pbest_fit=pbf,
+        gbest_pos=gp[:d].T, gbest_fit=gf,
+        iteration=batch.iteration + iters)
+
+
+def _async_spans(iters: int, sync_every: int):
+    """Split ``iters`` into (offset, span, chunk) phases for the async kernel.
+
+    The kernel requires span % chunk == 0, so a non-multiple ``iters`` runs
+    as a main phase of full ``sync_every`` chunks plus one remainder phase
+    (a single shorter chunk). RNG counters chain across phases, and the
+    block-local bests ride along, so the split is semantics-preserving
+    (mirrored by ``ref.run_fused_async_oracle``). Degenerate inputs clamp
+    the same way the jnp ``run_async`` does: ``iters <= 0`` is a no-op and
+    ``sync_every`` is forced into [1, iters].
+    """
+    if iters <= 0:
+        return []
+    sync_every = max(1, min(sync_every, iters))
+    main = (iters // sync_every) * sync_every
+    phases = [(0, main, sync_every)]
+    if iters - main:
+        phases.append((main, iters - main, iters - main))
+    return phases
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "iters", "sync_every", "block_n",
+                                    "interpret"))
+def run_queue_lock_fused_async(cfg: PSOConfig, s: SwarmState, iters: int,
+                               sync_every: int = ASYNC_SYNC_EVERY,
+                               block_n: Optional[int] = None,
+                               interpret: bool = True) -> SwarmState:
+    """``iters`` iterations of the ASYNC queue-lock in one pallas_call.
+
+    The paper's enhanced algorithm: the grid is block-major
+    ``(blocks, iter_chunks)`` — each particle block stays resident for its
+    whole iteration span and runs ``sync_every`` iterations per grid step
+    against a block-local best, touching the shared gbest buffers only at
+    chunk boundaries (pull on entry, predicated publish on exit). Each
+    block's view of the swarm best is therefore at most ``sync_every``
+    iterations stale. With ``block_n == n`` (a single block — the default
+    pick for n ≤ 512) the local best IS the global best and the result is
+    bit-identical to ``run_queue_lock_fused`` for every ``sync_every``;
+    the synchronous kernel is the ``sync_every=1`` single-block special
+    case of this one.
+    """
+    cfg = cfg.resolved()
+    n, d = s.pos.shape
+    bn = block_n or pick_block_n(n)
+    nb = n // bn
+    scal, pos, vel, pbp, pbf, gp, gf = state_to_kernel(s, d)
+    lp = jnp.tile(gp, (1, nb))                 # local bests seeded from gbest
+    lf = jnp.tile(gf, nb)
+    for off, span, chunk in _async_spans(iters, sync_every):
+        call = fused_async_call(n, d, span, bn, chunk, s.pos.dtype,
+                                interpret=interpret, **_cfg_kwargs(cfg))
+        pos, vel, pbp, pbf, gp, gf, lp, lf = call(
+            scal + jnp.array([0, off], jnp.int32),
+            pos, vel, pbp, pbf, gp, gf, lp, lf)
+    return kernel_to_state(s, d, pos, vel, pbp, pbf, gp, gf, iters)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "iters", "sync_every", "block_n",
+                                    "interpret"))
+def run_queue_lock_fused_async_batch(cfg: PSOConfig, batch: SwarmBatch,
+                                     iters: int,
+                                     sync_every: int = ASYNC_SYNC_EVERY,
+                                     block_n: Optional[int] = None,
+                                     interpret: bool = True) -> SwarmBatch:
+    """S independent swarms through the async queue-lock in one pallas_call.
+
+    Grid ``(swarms, blocks, iter_chunks)``: per-swarm gbest buffers and
+    per-(swarm, block) local-best slots, so row ``s`` is bit-identical to
+    ``run_queue_lock_fused_async`` on ``batch_row(batch, s)`` with the same
+    ``block_n``/``sync_every``. The serving hot path for ``variant="async"``.
+    """
+    cfg = cfg.resolved()
+    s_cnt, n, d = batch.pos.shape
+    bn = block_n or pick_block_n(n)
+    nb = n // bn
+    seeds = batch.seed.astype(jnp.int32)
+    its = batch.iteration.astype(jnp.int32)
+    pos = pack_dmajor_batch(batch.pos, d)
+    vel = pack_dmajor_batch(batch.vel, d)
+    pbp = pack_dmajor_batch(batch.pbest_pos, d)
+    pbf = batch.pbest_fit.reshape(1, s_cnt * n)
+    gp = jnp.zeros((pad_dim(d), s_cnt), batch.pos.dtype).at[:d].set(
+        batch.gbest_pos.T)
+    gf = batch.gbest_fit
+    lp = jnp.repeat(gp, nb, axis=1)            # [Dpad, S*nb], swarm-major
+    lf = jnp.repeat(gf, nb)
+    for off, span, chunk in _async_spans(iters, sync_every):
+        call = fused_async_batch_call(s_cnt, n, d, span, bn, chunk,
+                                      batch.pos.dtype, interpret=interpret,
+                                      **_cfg_kwargs(cfg))
+        pos, vel, pbp, pbf, gp, gf, lp, lf = call(
+            seeds, its + jnp.int32(off), pos, vel, pbp, pbf, gp, gf, lp, lf)
     pbf = pbf.reshape(s_cnt, n)
     return batch._replace(
         pos=unpack_dmajor_batch(pos, s_cnt, d),

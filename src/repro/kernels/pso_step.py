@@ -45,8 +45,34 @@ Two kernels:
     blocks 0..b-1 of iteration t (fresher than synchronous PPSO; mirrored
     exactly by ``ref.run_fused_oracle``).
 
+``fused_async`` (async queue-lock, grid = (particle blocks, iter chunks))
+    The paper's *enhanced* queue-lock: thread groups run asynchronously and
+    update the shared best only occasionally. The grid is the TRANSPOSE of
+    ``fused`` — block-major — so each particle block stays resident (state
+    tile fetched/flushed once for its entire iteration span, not per
+    iteration) and runs ``sync_every`` iterations per grid step against a
+    *block-local* best carried in the fori-loop registers and persisted in
+    small ``[Dpad, nb]``/SMEM ``[nb]`` side buffers. The shared ``[Dpad,1]``
+    + SMEM gbest is touched only at chunk boundaries: a pull (read) at chunk
+    entry and a predicated publish (write) at chunk exit — the lock
+    acquisition shrinks from every (iteration x block) to every
+    ``sync_every`` iterations, and the rare-improvement predicate usually
+    skips the write entirely.
+
+    Consistency model: a block's view of the swarm-wide best is at most
+    ``sync_every`` iterations stale, and (block-major order) block b
+    additionally inherits everything blocks 0..b-1 published during their
+    whole span. With a single block the local best IS the global best, so
+    the trajectory is bit-identical to ``fused`` for every ``sync_every``
+    (the sync kernel is the async kernel's special case); with several
+    blocks the schedule is genuinely relaxed and is mirrored bit-exactly by
+    ``ref.run_fused_async_oracle``. ``fused_async_batch`` adds the leading
+    swarm axis (grid (swarms, blocks, chunks)) with per-swarm gbest buffers
+    and per-(swarm, block) local-best slots.
+
 Validated in ``interpret=True`` mode against ``ref.py`` (same counter RNG ⇒
-bit-exact trajectories) over shape/dtype sweeps in tests/test_kernels.py.
+bit-exact trajectories) over shape/dtype sweeps in tests/test_kernels.py
+and tests/test_async.py.
 """
 from __future__ import annotations
 
@@ -102,10 +128,24 @@ def _fitness_dmajor(name: str, pos, dmask, d_real: int):
         c = jnp.cos(2.0 * jnp.pi * pos)
         s2 = jnp.sum(jnp.where(dmask, c, zero), axis=0, keepdims=True) / d_real
         return -(-20.0 * jnp.exp(-0.2 * s1) - jnp.exp(s2) + 20.0 + jnp.e)
+    if name == "rosenbrock":
+        if d_real == 1:          # library convention: degenerates to -(1-x)^2
+            v = (1.0 - pos) * (1.0 - pos)
+            return -jnp.sum(jnp.where(dmask, v, zero), axis=0, keepdims=True)
+        # Coupled-dim sum over pairs (x_i, x_{i+1}): shift the sublane axis
+        # down by one so every row i also sees row i+1. The wrapped row is
+        # masked out (pairs exist only for i < d_real - 1).
+        nxt = jnp.concatenate([pos[1:], pos[:1]], axis=0)
+        dsub = lax.broadcasted_iota(jnp.int32, pos.shape, 0)
+        pair_mask = dsub < (d_real - 1)
+        v = (100.0 * (nxt - pos * pos) * (nxt - pos * pos)
+             + (1.0 - pos) * (1.0 - pos))
+        return -jnp.sum(jnp.where(pair_mask, v, zero), axis=0, keepdims=True)
     raise NotImplementedError(f"kernel fitness {name!r}")
 
 
-KERNEL_FITNESS = ("cubic", "sphere", "rastrigin", "griewank", "ackley")
+KERNEL_FITNESS = ("cubic", "sphere", "rastrigin", "griewank", "ackley",
+                  "rosenbrock")
 
 
 def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
@@ -387,4 +427,234 @@ def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
                                  pltpu.ARBITRARY)),
         interpret=interpret,
         name="cupso_fused_queue_lock_batch",
+    )
+
+
+# --------------------------------------------------------------------------
+# Kernel 4: async queue-lock — grid (blocks, iteration chunks), block-major.
+# --------------------------------------------------------------------------
+
+def _async_chunk_body(scal0, it_base, sync_every, base,
+                      pos, vel, pbp, pbf, lp, lf, *,
+                      w, c1, c2, min_pos, max_pos, max_v, d_real, fitness):
+    """``sync_every`` iterations of one block against its block-local best.
+
+    Pure value-level fori_loop (no ref writes inside the loop) shared by
+    the single and batched async kernels. The local-best update applies
+    exactly the fused kernel's publication rule (masked max, first-lane
+    tie-break, masked-sum position gather), but into the loop carry instead
+    of the shared SMEM/VMEM gbest buffers — so with a single block the
+    trajectory is bit-identical to the synchronous fused kernel.
+    """
+    def body(tl, carry):
+        pos, vel, pbp, pbf, lp, lf = carry
+        pos, vel, dmask, lane = _advance_block(
+            scal0, it_base + tl + 1, pos, vel, pbp, lp, base,
+            w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
+            max_v=max_v, d_real=d_real)
+        fit = _fitness_dmajor(fitness, pos, dmask, d_real)
+        imp = fit > pbf
+        pbf = jnp.where(imp, fit, pbf)
+        pbp = jnp.where(imp, pos, pbp)
+        # Block-local queue: same rule as the fused kernel's _publish, as
+        # unconditional where-folds (a fori carry cannot be predicated).
+        q_mask = fit > lf
+        neg = jnp.full_like(fit, -jnp.inf)
+        q_fit = jnp.where(q_mask, fit, neg)
+        bf = jnp.max(q_fit)                    # -inf when the queue is empty
+        lane_row = lax.broadcasted_iota(jnp.int32, fit.shape, 1)
+        bidx = jnp.min(jnp.where(q_fit >= bf, lane_row, _BIG_I32))
+        sel = (lane == bidx) & dmask
+        cand = jnp.sum(jnp.where(sel, pos, jnp.zeros_like(pos)),
+                       axis=1, keepdims=True)
+        anyq = bf > lf                         # == jnp.any(q_mask)
+        lf = jnp.where(anyq, bf, lf)
+        lp = jnp.where(anyq, cand, lp)
+        return pos, vel, pbp, pbf, lp, lf
+
+    return lax.fori_loop(0, sync_every, body, (pos, vel, pbp, pbf, lp, lf))
+
+
+def _fused_async_kernel(scal_ref,
+                        pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,
+                        lp_in, lf_in,
+                        pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
+                        lp_ref, lf_ref,
+                        *, sync_every, w, c1, c2, min_pos, max_pos, max_v,
+                        d_real, fitness):
+    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in, lp_in, lf_in
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    bn = pos_ref.shape[1]
+    base = b * bn
+    # --- chunk entry: pull the shared gbest into the local best (the read
+    # half of the paper's lock). A no-op for the first grid block and for
+    # nb == 1; later blocks inherit everything earlier blocks published.
+    lf = lf_ref[b]
+    lp = lp_ref[...]
+    gf0 = gf_ref[0]
+    pull = gf0 > lf
+    lf = jnp.where(pull, gf0, lf)
+    lp = jnp.where(pull, gp_ref[...], lp)
+    pos, vel, pbp, pbf, lp, lf = _async_chunk_body(
+        scal_ref[0], scal_ref[1] + c * sync_every, sync_every, base,
+        pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf,
+        w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v,
+        d_real=d_real, fitness=fitness)
+    pos_ref[...] = pos
+    vel_ref[...] = vel
+    pbp_ref[...] = pbp
+    pbf_ref[...] = pbf
+    lp_ref[...] = lp
+    lf_ref[b] = lf
+
+    # --- chunk boundary: the ONLY cross-block write, and only on the rare
+    # improvement (the paper's occasional lock acquisition).
+    @pl.when(lf > gf_ref[0])
+    def _publish():
+        gf_ref[0] = lf
+        gp_ref[...] = lp
+
+
+def fused_async_call(n: int, d: int, iters: int, block_n: int,
+                     sync_every: int, dtype, *, w, c1, c2, min_pos, max_pos,
+                     max_v, fitness, interpret=True):
+    """Build the asynchronous queue-lock pallas_call (grid (blocks, chunks)).
+
+    Args (runtime): scal[2]i32, pos/vel/pbest_pos [Dpad,N], pbest_fit [1,N],
+                    gbest_pos [Dpad,1], gbest_fit [1],
+                    local_pos [Dpad,nb], local_fit [nb]
+    Returns the same eight state arrays after ``iters`` iterations. The
+    caller seeds local_pos/local_fit from the shared gbest (one column/slot
+    per block); ``iters`` must be a multiple of ``sync_every`` (the ops
+    wrapper splits a remainder into a second call).
+    """
+    assert n % block_n == 0, (n, block_n)
+    assert iters % sync_every == 0, (iters, sync_every)
+    nb = n // block_n
+    chunks = iters // sync_every
+    dpad = pad_dim(d)
+    kern = functools.partial(
+        _fused_async_kernel, sync_every=sync_every, w=w, c1=c1, c2=c2,
+        min_pos=min_pos, max_pos=max_pos, max_v=max_v, d_real=d,
+        fitness=fitness)
+    mat = pl.BlockSpec((dpad, block_n), lambda b, c: (0, b))
+    row = pl.BlockSpec((1, block_n), lambda b, c: (0, b))
+    gpc = pl.BlockSpec((dpad, 1), lambda b, c: (0, 0))
+    lpc = pl.BlockSpec((dpad, 1), lambda b, c: (0, b))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        kern,
+        grid=(nb, chunks),
+        in_specs=[smem,                                       # scal
+                  mat, mat, mat, row, gpc, smem, lpc, smem],
+        out_specs=[mat, mat, mat, row, gpc, smem, lpc, smem],
+        out_shape=[
+            jax.ShapeDtypeStruct((dpad, n), dtype),           # pos
+            jax.ShapeDtypeStruct((dpad, n), dtype),           # vel
+            jax.ShapeDtypeStruct((dpad, n), dtype),           # pbest_pos
+            jax.ShapeDtypeStruct((1, n), dtype),              # pbest_fit
+            jax.ShapeDtypeStruct((dpad, 1), dtype),           # gbest_pos
+            jax.ShapeDtypeStruct((1,), dtype),                # gbest_fit
+            jax.ShapeDtypeStruct((dpad, nb), dtype),          # local_pos
+            jax.ShapeDtypeStruct((nb,), dtype),               # local_fit
+        ],
+        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4, 6: 5,
+                              7: 6, 8: 7},
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY)),
+        interpret=interpret,
+        name="cupso_fused_queue_lock_async",
+    )
+
+
+def _fused_async_batch_kernel(seeds_ref, its_ref,
+                              pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,
+                              lp_in, lf_in,
+                              pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref,
+                              gf_ref, lp_ref, lf_ref,
+                              *, nb, sync_every, w, c1, c2, min_pos, max_pos,
+                              max_v, d_real, fitness):
+    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in, lp_in, lf_in
+    s = pl.program_id(0)
+    b = pl.program_id(1)
+    c = pl.program_id(2)
+    bn = pos_ref.shape[1]
+    base = b * bn                  # swarm-local: RNG matches standalone run
+    slot = s * nb + b
+    lf = lf_ref[slot]
+    lp = lp_ref[...]
+    gf0 = gf_ref[s]
+    pull = gf0 > lf
+    lf = jnp.where(pull, gf0, lf)
+    lp = jnp.where(pull, gp_ref[...], lp)
+    pos, vel, pbp, pbf, lp, lf = _async_chunk_body(
+        seeds_ref[s], its_ref[s] + c * sync_every, sync_every, base,
+        pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf,
+        w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v,
+        d_real=d_real, fitness=fitness)
+    pos_ref[...] = pos
+    vel_ref[...] = vel
+    pbp_ref[...] = pbp
+    pbf_ref[...] = pbf
+    lp_ref[...] = lp
+    lf_ref[slot] = lf
+
+    @pl.when(lf > gf_ref[s])
+    def _publish():
+        gf_ref[s] = lf
+        gp_ref[...] = lp
+
+
+def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
+                           block_n: int, sync_every: int, dtype, *,
+                           w, c1, c2, min_pos, max_pos, max_v, fitness,
+                           interpret=True):
+    """Batched async queue-lock: grid (swarms, blocks, chunks).
+
+    Args (runtime): seeds[S]i32, iterations[S]i32,
+                    pos/vel/pbest_pos [Dpad, S*N], pbest_fit [1, S*N],
+                    gbest_pos [Dpad, S], gbest_fit [S],
+                    local_pos [Dpad, S*nb], local_fit [S*nb]
+    Swarm-major then block-major: swarm s's block b runs its whole iteration
+    span while resident, exactly like a standalone ``fused_async_call`` —
+    row s is bit-identical to the single-swarm async kernel.
+    """
+    assert n % block_n == 0, (n, block_n)
+    assert iters % sync_every == 0, (iters, sync_every)
+    nb = n // block_n
+    chunks = iters // sync_every
+    dpad = pad_dim(d)
+    kern = functools.partial(
+        _fused_async_batch_kernel, nb=nb, sync_every=sync_every, w=w, c1=c1,
+        c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v, d_real=d,
+        fitness=fitness)
+    mat = pl.BlockSpec((dpad, block_n), lambda s, b, c: (0, s * nb + b))
+    row = pl.BlockSpec((1, block_n), lambda s, b, c: (0, s * nb + b))
+    gpc = pl.BlockSpec((dpad, 1), lambda s, b, c: (0, s))
+    lpc = pl.BlockSpec((dpad, 1), lambda s, b, c: (0, s * nb + b))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        kern,
+        grid=(s_cnt, nb, chunks),
+        in_specs=[smem, smem,                                 # seeds, iters
+                  mat, mat, mat, row, gpc, smem, lpc, smem],
+        out_specs=[mat, mat, mat, row, gpc, smem, lpc, smem],
+        out_shape=[
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pos
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # vel
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pbest_pos
+            jax.ShapeDtypeStruct((1, s_cnt * n), dtype),      # pbest_fit
+            jax.ShapeDtypeStruct((dpad, s_cnt), dtype),       # gbest_pos
+            jax.ShapeDtypeStruct((s_cnt,), dtype),            # gbest_fit
+            jax.ShapeDtypeStruct((dpad, s_cnt * nb), dtype),  # local_pos
+            jax.ShapeDtypeStruct((s_cnt * nb,), dtype),       # local_fit
+        ],
+        input_output_aliases={2: 0, 3: 1, 4: 2, 5: 3, 6: 4, 7: 5,
+                              8: 6, 9: 7},
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY,
+                                 pltpu.ARBITRARY)),
+        interpret=interpret,
+        name="cupso_fused_queue_lock_async_batch",
     )

@@ -115,3 +115,75 @@ def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                              axis=1, keepdims=True)
     return (jnp.asarray(pos), jnp.asarray(vel), jnp.asarray(pbp),
             jnp.asarray(pbf), gp, gf)
+
+
+def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
+                           iters: int, block_n: int, sync_every: int, *,
+                           w, c1, c2, min_pos, max_pos, max_v, d_real: int,
+                           fitness: str):
+    """The async queue-lock kernel's exact semantics, eagerly.
+
+    Block-major: block b runs its ENTIRE iteration span (all chunks of
+    ``sync_every`` iterations) before block b+1 starts, maintaining a
+    block-local best; the shared gbest is pulled at chunk entry and
+    conditionally published at chunk exit — mirroring the kernel's
+    (blocks, chunks) grid order bit-for-bit, including the ops-wrapper
+    behaviour of running a trailing ``iters % sync_every`` remainder as a
+    second block-major phase over all blocks.
+    """
+    dpad, n = pos.shape
+    nb = n // block_n
+    pos, vel, pbp, pbf, gp = map(jnp.asarray, (pos, vel, pbp, pbf, gp))
+    gf = jnp.asarray(gf)
+    pos, vel, pbp, pbf = (np.array(pos), np.array(vel), np.array(pbp),
+                          np.array(pbf))
+    # Local bests seeded from the shared gbest, one slot per block — exactly
+    # what ops.run_queue_lock_fused_async hands the kernel. The phase split
+    # (and its degenerate-input clamps) is the wrapper's own, not a copy.
+    from .ops import _async_spans
+    lp = [jnp.array(gp) for _ in range(nb)]      # each [Dpad, 1]
+    lf = [jnp.asarray(gf) for _ in range(nb)]
+    for it_off, span, k in _async_spans(iters, sync_every):
+        for b in range(nb):
+            sl = slice(b * block_n, (b + 1) * block_n)
+            for c in range(span // k):
+                # chunk entry: pull shared into local
+                if float(gf) > float(lf[b]):
+                    lf[b] = gf
+                    lp[b] = gp
+                for tl in range(k):
+                    it = base_iter + it_off + c * k + tl + 1
+                    p, v, dmask, lane = _advance_block(
+                        seed, it,
+                        jnp.asarray(pos[:, sl]), jnp.asarray(vel[:, sl]),
+                        jnp.asarray(pbp[:, sl]), lp[b], b * block_n,
+                        w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
+                        max_v=max_v, d_real=d_real)
+                    fit = _fitness_dmajor(fitness, p, dmask, d_real)
+                    bf_ = jnp.asarray(pbf[:, sl])
+                    imp = fit > bf_
+                    pbf[:, sl] = np.array(jnp.where(imp, fit, bf_))
+                    pbp[:, sl] = np.array(
+                        jnp.where(imp, p, jnp.asarray(pbp[:, sl])))
+                    pos[:, sl] = np.array(p)
+                    vel[:, sl] = np.array(v)
+                    q_mask = fit > lf[b]
+                    if bool(jnp.any(q_mask)):    # local publication
+                        q = jnp.where(q_mask, fit, -jnp.inf)
+                        best = jnp.max(q)
+                        lane_row = jnp.broadcast_to(
+                            jnp.arange(block_n)[None, :], q.shape)
+                        bidx = int(jnp.min(jnp.where(q >= best, lane_row,
+                                                     _BIG)))
+                        lf[b] = best
+                        sel = (lane == bidx) & dmask
+                        lp[b] = jnp.sum(jnp.where(sel, p, jnp.zeros_like(p)),
+                                        axis=1, keepdims=True)
+                # chunk exit: rare cross-block publication
+                if float(lf[b]) > float(gf):
+                    gf = lf[b]
+                    gp = lp[b]
+    lp_arr = jnp.concatenate(lp, axis=1)
+    lf_arr = jnp.stack([jnp.asarray(x).reshape(()) for x in lf])
+    return (jnp.asarray(pos), jnp.asarray(vel), jnp.asarray(pbp),
+            jnp.asarray(pbf), gp, gf, lp_arr, lf_arr)

@@ -17,7 +17,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import PSOConfig, init_swarm, run
+from repro.core import ASYNC_SYNC_EVERY, PSOConfig, init_swarm, run
 from repro.core.distributed import (gather_swarm, init_sharded_swarm,
                                     make_distributed_run)
 from repro.runtime import RunnerConfig, StepRunner
@@ -31,7 +31,9 @@ def main():
     ap.add_argument("--iters", type=int, default=1000)
     ap.add_argument("--fitness", default="cubic")
     ap.add_argument("--variant", default="queue",
-                    choices=["reduction", "queue", "queue_lock"])
+                    choices=["reduction", "queue", "queue_lock", "async"])
+    ap.add_argument("--sync-every", type=int, default=ASYNC_SYNC_EVERY,
+                    help="async variant: iterations between gbest syncs")
     ap.add_argument("--kernel", action="store_true",
                     help="use the fused Pallas kernel for local steps")
     ap.add_argument("--islands", type=int, default=0,
@@ -46,6 +48,16 @@ def main():
 
     cfg = PSOConfig(dim=args.dim, particle_cnt=args.particles,
                     fitness=args.fitness).resolved()
+    if args.islands and args.variant == "async":
+        # follow-on tracked in ROADMAP: async gbest exchange needs a
+        # relaxed multi-device ring in core/distributed.py
+        ap.error("--variant async does not support --islands yet")
+    if args.kernel and not args.islands and args.variant not in (
+            "queue_lock", "async"):
+        # only the fused queue-lock kernels exist; don't silently run
+        # queue_lock semantics under a reduction/queue label
+        ap.error(f"--kernel implements queue_lock/async, not "
+                 f"{args.variant!r}")
     t0 = time.time()
     if args.islands:
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
@@ -61,12 +73,19 @@ def main():
     else:
         state = init_swarm(cfg, args.seed)
         if args.kernel:
-            from repro.kernels.ops import run_queue_lock_fused
+            from repro.kernels.ops import (run_queue_lock_fused,
+                                           run_queue_lock_fused_async)
+            if args.variant == "async":
+                step_chunk = lambda st, k: run_queue_lock_fused_async(
+                    cfg, st, iters=k, sync_every=args.sync_every)
+            else:
+                step_chunk = lambda st, k: run_queue_lock_fused(
+                    cfg, st, iters=k)
             chunk = args.ckpt_every or args.iters
             done = 0
             while done < args.iters:
                 n = min(chunk, args.iters - done)
-                state = run_queue_lock_fused(cfg, state, iters=n)
+                state = step_chunk(state, n)
                 done += n
                 if args.ckpt_dir:
                     ckpt.save(args.ckpt_dir, done, gather_swarm(state))
@@ -75,7 +94,8 @@ def main():
             done = 0
             while done < args.iters:
                 n = min(chunk, args.iters - done)
-                state = run(cfg, state, n, args.variant)
+                state = run(cfg, state, n, args.variant,
+                            sync_every=args.sync_every)
                 done += n
                 if args.ckpt_dir:
                     ckpt.save(args.ckpt_dir, done, gather_swarm(state))

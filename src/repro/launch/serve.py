@@ -6,11 +6,12 @@ different seeds, and different problems. One device dispatch per request
 wastes the accelerator (the cuPSO paper's own motivation, one level up:
 amortize fixed costs across work). This module groups pending requests by
 their *compilation key* ``(dim, particle_cnt, fitness, iters, variant,
-dtype)``, pads each group to a bucketed batch size (so the jit cache stays
-small: one compiled program per (key, bucket), not per request count), and
-routes every group through a single ``solve_many`` — or through the batched
-fused Pallas kernel (``run_queue_lock_fused_batch``) for the
-``queue_lock`` variant with ``backend="kernel"``.
+dtype, sync_every)``, pads each group to a bucketed batch size (so the jit
+cache stays small: one compiled program per (key, bucket), not per request
+count), and routes every group through a single ``solve_many`` — or through
+the batched fused Pallas kernels (``run_queue_lock_fused_batch`` /
+``run_queue_lock_fused_async_batch``) for the ``queue_lock`` and ``async``
+variants with ``backend="kernel"``.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 24 --iters 200
 
@@ -28,7 +29,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import PSOConfig
+from repro.core import ASYNC_SYNC_EVERY, PSOConfig
 from repro.core.multi_swarm import init_batch, solve_many
 
 # Minimum bucket of 8: (a) fewer compiled programs per batch_key, (b) the
@@ -40,7 +41,13 @@ BUCKETS = (8, 16, 32, 64, 128)
 
 @dataclasses.dataclass(frozen=True)
 class SolveRequest:
-    """One independent PSO solve."""
+    """One independent PSO solve.
+
+    ``sync_every`` is the ``variant="async"`` publication interval. It only
+    enters the compile key for async requests — the synchronous variants
+    ignore it, and keying on it would split otherwise-identical requests
+    into separate batches and duplicate compiled programs.
+    """
 
     dim: int = 1
     particle_cnt: int = 1024
@@ -49,12 +56,14 @@ class SolveRequest:
     iters: int = 1000
     variant: str = "queue"
     dtype: str = "float32"
+    sync_every: int = ASYNC_SYNC_EVERY
 
     @property
     def batch_key(self) -> Tuple:
         """Everything that forces a distinct compiled program."""
         return (self.dim, self.particle_cnt, self.fitness, self.iters,
-                self.variant, self.dtype)
+                self.variant, self.dtype,
+                self.sync_every if self.variant == "async" else 0)
 
     def config(self) -> PSOConfig:
         return PSOConfig(dim=self.dim, particle_cnt=self.particle_cnt,
@@ -133,9 +142,16 @@ class SolveServer:
                 batch = run_queue_lock_fused_batch(
                     cfg, init_batch(cfg, seeds), iters=chunk[0].iters,
                     block_n=self.block_n, interpret=self.interpret)
+            elif self.backend == "kernel" and chunk[0].variant == "async":
+                from repro.kernels.ops import run_queue_lock_fused_async_batch
+                batch = run_queue_lock_fused_async_batch(
+                    cfg, init_batch(cfg, seeds), iters=chunk[0].iters,
+                    sync_every=chunk[0].sync_every,
+                    block_n=self.block_n, interpret=self.interpret)
             else:
                 batch = solve_many(cfg, seeds, iters=chunk[0].iters,
-                                   variant=chunk[0].variant)
+                                   variant=chunk[0].variant,
+                                   sync_every=chunk[0].sync_every)
             gf = np.asarray(batch.gbest_fit)
             gp = np.asarray(batch.gbest_pos)
             self.stats.dispatches += 1
@@ -172,15 +188,25 @@ def main() -> int:
     ap.add_argument("--iters", type=int, default=200)
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--backend", default="jnp", choices=["jnp", "kernel"])
+    ap.add_argument("--variant", default="auto",
+                    choices=["auto", "reduction", "queue", "queue_lock",
+                             "async"])
+    ap.add_argument("--sync-every", type=int, default=ASYNC_SYNC_EVERY,
+                    help="async variant publication interval")
     args = ap.parse_args()
     # A mixed workload: two problem classes, heterogeneous seeds. The kernel
-    # backend routes queue_lock requests; use it when demoing that backend.
-    variant = "queue_lock" if args.backend == "kernel" else "queue"
+    # backend routes queue_lock/async requests; use it when demoing it.
+    if args.variant == "auto":
+        variant = "queue_lock" if args.backend == "kernel" else "queue"
+    else:
+        variant = args.variant
     reqs = [SolveRequest(dim=1, particle_cnt=256, fitness="cubic",
-                         seed=i, iters=args.iters, variant=variant)
+                         seed=i, iters=args.iters, variant=variant,
+                         sync_every=args.sync_every)
             if i % 2 == 0 else
             SolveRequest(dim=10, particle_cnt=128, fitness="rastrigin",
-                         seed=i, iters=args.iters, variant=variant)
+                         seed=i, iters=args.iters, variant=variant,
+                         sync_every=args.sync_every)
             for i in range(args.requests)]
     srv = SolveServer(max_batch=args.max_batch, backend=args.backend)
     t0 = time.time()
