@@ -1,0 +1,90 @@
+"""Diff two BENCH_pso.json artifacts (benchmarks/run.py output).
+
+Matches records by ``name``, reports the per-record ``us_per_call`` delta,
+and exits nonzero when any shared record regressed beyond ``--threshold``
+(fractional; 0.3 = 30% slower). Records with ``us_per_call == 0`` are
+quality-only (e.g. the async_sweep jnp leg) and are compared on their
+derived values informationally, never gated.
+
+    python benchmarks/compare.py OLD.json NEW.json [--threshold 0.3]
+        [--warn-only] [--top 20]
+
+``--warn-only`` prints the same report but always exits 0 — the CI trend
+step runs in this mode against the committed baseline (ROADMAP: BENCH
+trend tracking), since the baseline may come from different hardware or a
+non-smoke run; the hard gate is reserved for same-machine A/B comparisons.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    recs = {r["name"]: r for r in doc.get("benchmarks", [])}
+    return doc.get("meta", {}), recs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old", help="baseline BENCH_pso.json")
+    ap.add_argument("new", help="candidate BENCH_pso.json")
+    ap.add_argument("--threshold", type=float, default=0.3,
+                    help="max tolerated fractional us/call regression")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report but always exit 0")
+    ap.add_argument("--top", type=int, default=20,
+                    help="show at most this many rows (worst first)")
+    args = ap.parse_args()
+
+    old_meta, old = load(args.old)
+    new_meta, new = load(args.new)
+    for side, meta in (("old", old_meta), ("new", new_meta)):
+        print(f"# {side}: backend={meta.get('backend')} "
+              f"jax={meta.get('jax_version')} smoke={meta.get('smoke')} "
+              f"interpret={meta.get('pallas_interpret')}")
+    if old_meta.get("smoke") != new_meta.get("smoke"):
+        print("# note: smoke flags differ — deltas are indicative only")
+
+    shared = sorted(set(old) & set(new))
+    added = sorted(set(new) - set(old))
+    removed = sorted(set(old) - set(new))
+    rows = []
+    for name in shared:
+        a, b = old[name]["us_per_call"], new[name]["us_per_call"]
+        if a <= 0 or b <= 0:
+            continue                      # quality-only record
+        rows.append((b / a - 1.0, name, a, b))
+    rows.sort(reverse=True)
+
+    print(f"\n{'delta':>8s}  {'old us':>12s}  {'new us':>12s}  name")
+    for delta, name, a, b in rows[:args.top]:
+        flag = " <-- REGRESSION" if delta > args.threshold else ""
+        print(f"{100 * delta:+7.1f}%  {a:12.3f}  {b:12.3f}  {name}{flag}")
+    if len(rows) > args.top:
+        print(f"... ({len(rows) - args.top} more)")
+    if added:
+        print(f"# {len(added)} new records: {', '.join(added[:6])}"
+              + (" ..." if len(added) > 6 else ""))
+    if removed:
+        print(f"# {len(removed)} removed records: {', '.join(removed[:6])}"
+              + (" ..." if len(removed) > 6 else ""))
+
+    worst = [r for r in rows if r[0] > args.threshold]
+    if worst:
+        print(f"\n{len(worst)}/{len(rows)} records regressed more than "
+              f"{100 * args.threshold:.0f}%")
+        if not args.warn_only:
+            return 1
+        print("(warn-only mode: exiting 0)")
+    else:
+        print(f"\nno record regressed more than "
+              f"{100 * args.threshold:.0f}% ({len(rows)} compared)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,14 @@
             sync_every ∈ {1, 4, 16, 64}. Fewer chunk boundaries = fewer
             cross-block synchronization points = fewer grid steps; the
             per-iteration cost must fall monotonically as sync_every grows.
+  custom_objective — Problem-API adapter overhead: a user-written cubic
+            lowered by the generic d-major adapter vs the hand-tuned
+            kernel form, through the fused queue-lock kernel.
   lm_bench— LM substrate micro-bench (tokens/s on the smoke configs).
+
+Cross-PR trend: ``compare.py OLD.json NEW.json`` diffs two artifacts
+(per-record us/call delta; nonzero exit above --threshold). CI runs it
+warning-only against the committed benchmarks/BENCH_pso.json baseline.
 
 This container is CPU-only, so the "GPU" columns run the same JAX
 algorithms on the CPU backend, jit-compiled, and the Pallas kernels run in
@@ -249,6 +256,48 @@ def multi_swarm(smoke=False) -> None:
              speedup_vs_loop=t_loop / t_batch)
 
 
+def custom_objective(smoke=False) -> None:
+    """Problem-API adapter overhead: the generic d-major adapter
+    (``repro.kernels.pso_step.dmajor_adapter`` — transpose + sliced user
+    fn + hoisted consts + pinned advance) vs the hand-tuned ``cubic``
+    kernel form, same landscape, same fused queue-lock kernel. The
+    ``overhead_vs_hand_tuned`` ratio is the price of a user-defined
+    objective on the kernel path; the gbest gap must be ~0 (identical
+    landscape, same seed)."""
+    import jax.numpy as jnp
+    from repro.core import PSOConfig, init_swarm
+    from repro.core.problem import Problem
+    from repro.kernels.ops import run_queue_lock_fused
+
+    def cubic_user(x):      # the paper's Eq. 3, as a user would write it
+        return jnp.sum(x * x * x - 0.8 * (x * x) - 1000.0 * x + 8000.0,
+                       axis=-1)
+
+    custom = Problem(name="cubic_user", fn=cubic_user, lo=-100.0, hi=100.0)
+    dim, particles, iters = 8, 1024, (10 if smoke else 40)
+    results = {}
+    for label, fitness in (("hand_tuned", "cubic"), ("adapter", custom)):
+        cfg = PSOConfig(dim=dim, particle_cnt=particles,
+                        fitness=fitness).resolved()
+        s0 = init_swarm(cfg, 0)
+        last = {}
+
+        def call(cfg=cfg, s0=s0, last=last):
+            out = run_queue_lock_fused(cfg, s0, iters=iters,
+                                       interpret=KERNEL_INTERPRET)
+            last["gbest"] = float(jax.block_until_ready(out.gbest_fit))
+
+        t = _time(call, repeats=1)  # deterministic: timed runs = quality run
+        results[label] = (t, last["gbest"])
+    tag = f"custom_objective/d{dim}_n{particles}"
+    t_hand, g_hand = results["hand_tuned"]
+    t_adpt, g_adpt = results["adapter"]
+    emit(f"{tag}/hand_tuned", 1e6 * t_hand / iters, gbest_fit=g_hand)
+    emit(f"{tag}/adapter", 1e6 * t_adpt / iters,
+         overhead_vs_hand_tuned=t_adpt / t_hand,
+         gbest_fit=g_adpt, gbest_gap_vs_hand_tuned=g_hand - g_adpt)
+
+
 def lm_bench() -> None:
     """LM substrate: smoke-config train-step tokens/s per arch family."""
     from repro.configs import get_arch
@@ -283,6 +332,7 @@ def main() -> None:
     table5(args.smoke)
     multi_swarm(args.smoke)
     async_sweep(args.smoke)
+    custom_objective(args.smoke)
     if not args.smoke:
         lm_bench()
     if args.out:

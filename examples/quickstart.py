@@ -1,52 +1,63 @@
-"""Quickstart: solve the paper's two benchmark problems (1D and 120D cubic)
-with all four aggregation variants + the fused Pallas kernels, and verify
-they agree — the paper's §4.1 claim that queueing is an optimization, not
-an approximation, extended to the enhanced (asynchronous) queue-lock whose
-relaxed consistency is likewise answer-preserving.
+"""Quickstart: the unified solve facade.
+
+One entry point — ``repro.solve(problem, ...)`` — covers everything that
+used to be scattered across ``core.pso.solve``, ``core.multi_swarm.
+solve_many`` and the ``repro.kernels.ops`` wrappers: pick a problem (a
+registered benchmark name or your own ``repro.Problem``), a ``Method``
+(aggregation variant + jnp/kernel backend), and go.
+
+Here: the paper's two benchmark workloads (1D and 120D cubic) through all
+four aggregation variants, the fused/async Pallas kernels (interpret mode
+off-TPU), and a batched multi-seed solve — verifying the paper's §4.1 claim
+that queueing is an optimization, not an approximation.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import time
 
-import jax
-
-from repro.core import PSOConfig, init_swarm, run, solve
-from repro.kernels.ops import run_queue_lock_fused, run_queue_lock_fused_async
+import repro
+from repro import Method
 
 
 def solve_and_report(dim: int, particles: int, iters: int):
     print(f"\n=== cubic, dim={dim}, particles={particles}, iters={iters} ===")
-    print(f"{'variant':28s} {'gbest_fit':>14s} {'wall_s':>8s}")
-    cfg = PSOConfig(dim=dim, particle_cnt=particles, fitness="cubic")
+    print(f"{'method':32s} {'best_fit':>14s} {'wall_s':>8s}")
     for variant in ("reduction", "queue", "queue_lock", "async"):
         t0 = time.time()
-        s = solve(cfg, seed=0, iters=iters, variant=variant)
-        jax.block_until_ready(s.gbest_fit)
-        print(f"{variant:28s} {float(s.gbest_fit):14.4f} "
+        res = repro.solve("cubic", dim=dim, particles=particles, iters=iters,
+                          seed=0, variant=variant)
+        print(f"{variant + ' (jnp)':32s} {res.best_fit:14.4f} "
               f"{time.time() - t0:8.3f}")
-    # fused Pallas kernels (TPU target; interpret mode here)
-    s0 = init_swarm(cfg.resolved(), 0)
-    k_iters = min(iters, 100)             # interpret mode = python loop
-    for name, fn in (
-            ("queue_lock pallas (interp)",
-             lambda: run_queue_lock_fused(cfg.resolved(), s0,
-                                          iters=k_iters)),
-            ("async pallas (interp)",
-             lambda: run_queue_lock_fused_async(cfg.resolved(), s0,
-                                                iters=k_iters,
-                                                sync_every=10))):
+    # Fused Pallas kernels (TPU target; interpret mode here => slow, so few
+    # iters). backend="kernel" exists for the queue_lock and async variants.
+    k_iters = min(iters, 100)
+    for variant, extra in (("queue_lock", {}), ("async", {"sync_every": 10})):
         t0 = time.time()
-        s = fn()
-        jax.block_until_ready(s.gbest_fit)
-        print(f"{name:28s} {float(s.gbest_fit):14.4f} "
+        res = repro.solve("cubic", dim=dim, particles=particles,
+                          iters=k_iters, seed=0,
+                          method=Method(variant=variant, backend="kernel",
+                                        **extra))
+        print(f"{variant + ' (pallas interp)':32s} {res.best_fit:14.4f} "
               f"{time.time() - t0:8.3f}  ({k_iters} iters)")
     ideal = dim * 900000.0
-    print(f"{'analytic optimum f(100)*d':28s} {ideal:14.4f}")
+    print(f"{'analytic optimum f(100)*d':32s} {ideal:14.4f}")
+
+
+def batched_demo():
+    """Many independent solves in ONE device program (the serving primitive)."""
+    t0 = time.time()
+    results = repro.solve_many("rastrigin", seeds=range(8), dim=10,
+                               particles=256, iters=200, variant="queue")
+    best = repro.best(results)
+    print(f"\n=== batched: 8 seeds of 10D rastrigin in one dispatch ===")
+    print(f"best seed result {best.best_fit:.4f}  "
+          f"(8 solves, wall={time.time() - t0:.3f}s)")
 
 
 def main():
     solve_and_report(dim=1, particles=1024, iters=1000)
     solve_and_report(dim=120, particles=2048, iters=500)
+    batched_demo()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,44 @@
+"""repro — cuPSO (arXiv 2205.01313) grown into a jax_pallas serving system.
+
+Top-level surface (lazily imported so ``import repro`` stays cheap):
+
+    repro.solve(problem, ...) -> Result       # the unified facade
+    repro.solve_many(problem, seeds, ...)     # batched facade
+    repro.Method / repro.Result               # method spec / result
+    repro.Problem / repro.register_problem    # first-class objectives
+    repro.get_problem / repro.list_problems
+    repro.PSOConfig
+
+See ``repro.api`` and ``repro.core.problem`` for the full documentation,
+``examples/quickstart.py`` and ``examples/custom_objective.py`` for usage.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "solve": "repro.api",
+    "solve_many": "repro.api",
+    "best": "repro.api",
+    "Method": "repro.api",
+    "Result": "repro.api",
+    "Problem": "repro.core.problem",
+    "register_problem": "repro.core.problem",
+    "get_problem": "repro.core.problem",
+    "list_problems": "repro.core.problem",
+    "resolve_problem": "repro.core.problem",
+    "PSOConfig": "repro.core.pso",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

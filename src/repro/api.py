@@ -1,0 +1,226 @@
+"""The unified solve facade: ``repro.solve(problem, ...) -> Result``.
+
+One entry point over the previously scattered surfaces (``core.pso.solve``,
+``core.multi_swarm.solve_many``, ``kernels.ops.run_queue_lock_fused{,_batch,
+_async,_async_batch}`` and the serving backend plumbing):
+
+    import repro
+
+    res = repro.solve("cubic", dim=120, particles=2048, iters=500)
+    res = repro.solve(my_problem, iters=1000,
+                      method=repro.Method(variant="async", backend="kernel"))
+
+``problem`` is a registered name, a ``repro.Problem`` (user objective with
+per-dimension bounds and min/max sense), or a bare pure-jnp callable.
+``Method`` picks the aggregation variant and execution backend:
+
+* ``variant``: ``reduction | queue | queue_lock | async`` (paper §3.2/§4).
+* ``backend``: ``jnp`` (vmap-able XLA step functions), ``kernel`` (the
+  fused/async Pallas TPU kernels; only ``queue_lock``/``async`` exist as
+  kernels), or ``auto`` — kernel on a TPU backend for the two fused
+  variants, jnp everywhere else.
+* ``interpret``: Pallas interpret mode; ``None`` means auto (False only on
+  an actual TPU backend).
+
+Results are reported in the problem's OWN sense: for a ``sense="min"``
+problem ``Result.best_fit`` is the minimized objective value (the engine
+maximizes internally; see ``repro.core.problem``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.multi_swarm import (SwarmBatch, batch_row, init_batch,
+                                    run_many)
+from repro.core.problem import Problem, resolve_problem
+from repro.core.pso import (ASYNC_SYNC_EVERY, PSOConfig, SwarmState,
+                            VARIANTS, init_swarm, run)
+
+_KERNEL_VARIANTS = ("queue_lock", "async")
+
+
+def _default_backend() -> str:
+    import jax
+    return "tpu" if jax.default_backend() == "tpu" else "cpu-like"
+
+
+@dataclasses.dataclass(frozen=True)
+class Method:
+    """How to run a solve: aggregation variant + execution backend."""
+
+    variant: str = "queue"
+    backend: str = "auto"                 # auto | jnp | kernel
+    sync_every: int = ASYNC_SYNC_EVERY    # async variant publication interval
+    block_n: Optional[int] = None         # kernel particle-block size
+    interpret: Optional[bool] = None      # None: False only on real TPU
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(
+                f"unknown variant {self.variant!r}; one of {VARIANTS}")
+        if self.backend not in ("auto", "jnp", "kernel"):
+            raise ValueError(
+                f"unknown backend {self.backend!r}; one of auto|jnp|kernel")
+        if self.backend == "kernel" and self.variant not in _KERNEL_VARIANTS:
+            raise ValueError(
+                f"backend='kernel' implements {_KERNEL_VARIANTS}, not "
+                f"{self.variant!r}")
+
+    def resolve_backend(self) -> str:
+        if self.backend != "auto":
+            return self.backend
+        if self.variant in _KERNEL_VARIANTS and _default_backend() == "tpu":
+            return "kernel"
+        return "jnp"
+
+    def resolve_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return _default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Result:
+    """A finished solve. ``best_fit``/``best_pos`` are in the problem's own
+    sense; ``state`` is the raw (canonical-max) SwarmState for resuming."""
+
+    problem: Problem
+    config: PSOConfig
+    method: Method
+    iters: int
+    state: SwarmState
+
+    @property
+    def best_fit(self) -> float:
+        return float(self.problem.user_value(self.state.gbest_fit))
+
+    @property
+    def best_pos(self) -> np.ndarray:
+        return np.asarray(self.state.gbest_pos)
+
+    @property
+    def gbest_fit(self) -> float:
+        """Canonical (maximized) fitness, as the engine tracks it."""
+        return float(self.state.gbest_fit)
+
+
+def _make_method(method: Optional[Method], variant, backend, sync_every,
+                 block_n, interpret) -> Method:
+    explicit = dict(variant=variant, backend=backend, sync_every=sync_every,
+                    block_n=block_n, interpret=interpret)
+    given = {k: v for k, v in explicit.items() if v is not None}
+    if method is not None:
+        if given:
+            raise ValueError(
+                f"pass either method= or the loose kwargs {sorted(given)}, "
+                f"not both")
+        return method
+    return Method(**{**dict(variant="queue"), **given})
+
+
+def _make_config(problem: Problem, dim, particles, w, c1, c2, dtype,
+                 min_pos, max_pos, max_v) -> PSOConfig:
+    if dim is None:
+        dim = problem.ndim or 1
+    kw = dict(dim=dim, particle_cnt=particles, fitness=problem, dtype=dtype,
+              min_pos=min_pos, max_pos=max_pos, max_v=max_v)
+    for k, v in (("w", w), ("c1", c1), ("c2", c2)):
+        if v is not None:
+            kw[k] = v
+    return PSOConfig(**kw).resolved()
+
+
+def solve(problem: Union[str, Problem], *,
+          dim: Optional[int] = None, particles: int = 1024,
+          iters: int = 1000, seed: int = 0,
+          method: Optional[Method] = None,
+          variant: Optional[str] = None, backend: Optional[str] = None,
+          sync_every: Optional[int] = None, block_n: Optional[int] = None,
+          interpret: Optional[bool] = None,
+          w: Optional[float] = None, c1: Optional[float] = None,
+          c2: Optional[float] = None, dtype: str = "float32",
+          min_pos=None, max_pos=None, max_v=None) -> Result:
+    """Solve ``problem`` with ``particles`` particles for ``iters``
+    iterations. Either pass a full ``method=Method(...)`` or the loose
+    ``variant=``/``backend=``/... kwargs (not both). ``dim`` defaults to
+    the problem's per-dimension bound length (else 1).
+    """
+    prob = resolve_problem(problem)
+    m = _make_method(method, variant, backend, sync_every, block_n,
+                     interpret)
+    cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
+                       min_pos, max_pos, max_v)
+    state = init_swarm(cfg, seed)
+    state = _run_state(cfg, state, iters, m)
+    return Result(problem=prob, config=cfg, method=m, iters=iters,
+                  state=state)
+
+
+def _run_state(cfg: PSOConfig, state: SwarmState, iters: int,
+               m: Method) -> SwarmState:
+    if m.resolve_backend() == "kernel":
+        from repro.kernels.ops import (run_queue_lock_fused,
+                                       run_queue_lock_fused_async)
+        if m.variant == "async":
+            return run_queue_lock_fused_async(
+                cfg, state, iters, sync_every=m.sync_every,
+                block_n=m.block_n, interpret=m.resolve_interpret())
+        return run_queue_lock_fused(cfg, state, iters, block_n=m.block_n,
+                                    interpret=m.resolve_interpret())
+    return run(cfg, state, iters, m.variant, sync_every=m.sync_every)
+
+
+def solve_many(problem: Union[str, Problem], seeds: Sequence[int], *,
+               dim: Optional[int] = None, particles: int = 1024,
+               iters: int = 1000,
+               method: Optional[Method] = None,
+               variant: Optional[str] = None, backend: Optional[str] = None,
+               sync_every: Optional[int] = None,
+               block_n: Optional[int] = None,
+               interpret: Optional[bool] = None,
+               coeffs: Optional[Tuple] = None,
+               w: Optional[float] = None, c1: Optional[float] = None,
+               c2: Optional[float] = None, dtype: str = "float32",
+               min_pos=None, max_pos=None, max_v=None) -> List[Result]:
+    """Batched facade: one independent solve per entry of ``seeds``, all in
+    ONE device program (vmapped jnp engine, or the batched fused/async
+    Pallas kernels for ``backend="kernel"``). Row ``s`` is bit-identical to
+    ``solve(problem, seed=seeds[s], ...)`` with the same method when
+    ``coeffs`` is None. Returns one ``Result`` per seed.
+    """
+    prob = resolve_problem(problem)
+    m = _make_method(method, variant, backend, sync_every, block_n,
+                     interpret)
+    cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
+                       min_pos, max_pos, max_v)
+    batch = init_batch(cfg, np.asarray(seeds, dtype=np.int64))
+    batch = _run_batch(cfg, batch, iters, m, coeffs)
+    return [Result(problem=prob, config=cfg, method=m, iters=iters,
+                   state=batch_row(batch, s))
+            for s in range(batch.swarm_cnt)]
+
+
+def _run_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int, m: Method,
+               coeffs) -> SwarmBatch:
+    if m.resolve_backend() == "kernel":
+        if coeffs is not None:
+            raise ValueError("per-swarm coeffs are a jnp-backend feature")
+        from repro.kernels.ops import (run_queue_lock_fused_batch,
+                                       run_queue_lock_fused_async_batch)
+        if m.variant == "async":
+            return run_queue_lock_fused_async_batch(
+                cfg, batch, iters, sync_every=m.sync_every,
+                block_n=m.block_n, interpret=m.resolve_interpret())
+        return run_queue_lock_fused_batch(
+            cfg, batch, iters, block_n=m.block_n,
+            interpret=m.resolve_interpret())
+    return run_many(cfg, batch, iters, m.variant, coeffs,
+                    sync_every=m.sync_every)
+
+
+def best(results: Sequence[Result]) -> Result:
+    """The best Result of a batch, in the problem's own sense."""
+    return max(results, key=lambda r: r.gbest_fit)

@@ -1,5 +1,9 @@
 """cuPSO core: the paper's contribution as a composable JAX module."""
-from .fitness import FITNESS_FNS, FITNESS_IDS, DEFAULT_BOUNDS
+from .blocking import LANE, pick_block_n
+from .fitness import (BUILTIN_PROBLEMS, FITNESS_FNS, FITNESS_IDS,
+                      DEFAULT_BOUNDS)
+from .problem import (Problem, get_problem, list_problems, register_problem,
+                      resolve_problem)
 from .pso import (ASYNC_SYNC_EVERY, PSOConfig, SwarmState, STEP_FNS,
                   VARIANTS, init_async_locals, init_swarm,
                   publish_async_locals, run, run_async, solve, step_async,
@@ -13,7 +17,9 @@ from .tuner import (PSO_COEFF_DIMS, PSOTuner, SearchDim, TunerResult,
                     make_solve_many_fitness)
 
 __all__ = [
-    "FITNESS_FNS", "FITNESS_IDS", "DEFAULT_BOUNDS",
+    "FITNESS_FNS", "FITNESS_IDS", "DEFAULT_BOUNDS", "BUILTIN_PROBLEMS",
+    "Problem", "register_problem", "get_problem", "list_problems",
+    "resolve_problem", "LANE", "pick_block_n",
     "PSOConfig", "SwarmState", "STEP_FNS", "VARIANTS", "ASYNC_SYNC_EVERY",
     "init_swarm", "run", "solve", "run_async", "step_async",
     "init_async_locals", "publish_async_locals",

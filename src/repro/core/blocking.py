@@ -1,0 +1,39 @@
+"""Particle-block sizing, shared by the Pallas kernels and the jnp async
+fallback (ROADMAP: previously duplicated between ``kernels/ops.py`` and
+``core/pso.py._default_async_blocks``; unified here).
+
+``LANE`` is the TPU vector lane width: kernel block sizes want to be a
+multiple of it so a block fills whole [8, 128] tiles. The jnp fallback has
+no tile constraint and calls with ``lane=1`` (largest divisor wins,
+alignment ignored) — which preserves its pre-unification block choices
+bit-for-bit.
+"""
+from __future__ import annotations
+
+LANE = 128
+
+
+def pick_block_n(n: int, target: int = 512, lane: int = LANE) -> int:
+    """Largest divisor of ``n`` that is <= ``target``, preferring
+    ``lane``-aligned ones.
+
+    One descending pass: the first ``lane``-aligned (multiple-of-``lane``)
+    divisor wins outright; otherwise the first (i.e. largest) divisor of any
+    kind is the fallback. With ``lane=1`` every divisor is "aligned", so the
+    largest divisor <= target wins unconditionally. A prime ``n`` larger
+    than ``target`` has no divisor <= target except 1.
+    """
+    best = 1
+    for bn in range(min(n, target), 0, -1):
+        if n % bn == 0:
+            if bn % lane == 0:
+                return bn
+            if best == 1:
+                best = bn
+    return best
+
+
+def default_block_count(n: int, target: int = 512) -> int:
+    """Block COUNT for the jnp async fallback: the largest block size <=
+    ``target`` that divides ``n``, alignment-free (``lane=1``)."""
+    return n // pick_block_n(n, target, lane=1)

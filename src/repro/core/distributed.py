@@ -22,6 +22,12 @@ Design (DESIGN.md §3):
 Elasticity: ``init_sharded_swarm`` builds shard-local particles from global
 indices, so a checkpoint taken on 256 chips restores bit-identically on 64 or
 1024 (tests/test_distributed.py::test_elastic_reshard_equivalence).
+
+Problems: ``cfg.fitness`` may be a registered name or a first-class
+``repro.core.problem.Problem`` — the shard-local step functions evaluate
+``cfg.fitness_fn`` (canonical-max form, per-dimension bounds included)
+inside shard_map unchanged, so user objectives distribute for free
+(tests/test_problem.py::test_distributed_custom_problem).
 """
 from __future__ import annotations
 

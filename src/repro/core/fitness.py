@@ -7,15 +7,25 @@ All functions here follow that convention; classical minimization benchmarks
 
 Every function maps ``pos[..., D] -> fit[...]`` and is pure jnp so it can be
 used inside jit, grad (not needed for PSO, but free), shard_map and the
-Pallas reference oracle. ``FITNESS_FNS`` is the registry used by configs and
-the benchmark harness; ``FITNESS_IDS`` gives each function a stable integer
-id so the Pallas kernel can select it at trace time.
+Pallas reference oracle.
+
+Each benchmark is registered as a first-class ``repro.core.problem.Problem``
+(the negation is baked into ``fn`` itself, so every built-in registers with
+``sense="max"`` — exactly the seed convention). The legacy views
+``FITNESS_FNS`` / ``FITNESS_IDS`` / ``DEFAULT_BOUNDS`` are derived from the
+registered Problems and carry the *same function objects and float bounds*
+as before the registry existed, so string-configured runs are bit-identical
+to seed behavior (tests/test_problem.py pins this with trajectory digests).
+The hand-tuned d-major kernel forms live in
+``repro.kernels.pso_step._fitness_dmajor`` and are selected by name.
 """
 from __future__ import annotations
 
 from typing import Callable, Dict
 
 import jax.numpy as jnp
+
+from .problem import Problem, register_problem
 
 Array = jnp.ndarray
 
@@ -63,24 +73,24 @@ def ackley(pos: Array) -> Array:
     return -(-20.0 * jnp.exp(-0.2 * s1) - jnp.exp(s2) + 20.0 + jnp.e)
 
 
+# The six built-ins as registered Problems (paper: cubic on [-100, 100]).
+# Declaration order fixes FITNESS_IDS, so keep it stable.
+BUILTIN_PROBLEMS = tuple(register_problem(p) for p in (
+    Problem(name="cubic", fn=cubic, lo=-100.0, hi=100.0),
+    Problem(name="sphere", fn=sphere, lo=-100.0, hi=100.0),
+    Problem(name="rosenbrock", fn=rosenbrock, lo=-30.0, hi=30.0),
+    Problem(name="griewank", fn=griewank, lo=-600.0, hi=600.0),
+    Problem(name="rastrigin", fn=rastrigin, lo=-5.12, hi=5.12),
+    Problem(name="ackley", fn=ackley, lo=-32.0, hi=32.0),
+))
+
+# Legacy views, derived from the registry (same objects/values as the seed).
 FITNESS_FNS: Dict[str, Callable[[Array], Array]] = {
-    "cubic": cubic,
-    "sphere": sphere,
-    "rosenbrock": rosenbrock,
-    "griewank": griewank,
-    "rastrigin": rastrigin,
-    "ackley": ackley,
-}
+    p.name: p.fn for p in BUILTIN_PROBLEMS}
 
 # Stable integer ids for kernel-side selection (compile-time static).
 FITNESS_IDS: Dict[str, int] = {name: i for i, name in enumerate(FITNESS_FNS)}
 
-# Search-domain defaults per function (paper: cubic on [-100, 100]).
+# Search-domain defaults per function.
 DEFAULT_BOUNDS: Dict[str, tuple] = {
-    "cubic": (-100.0, 100.0),
-    "sphere": (-100.0, 100.0),
-    "rosenbrock": (-30.0, 30.0),
-    "griewank": (-600.0, 600.0),
-    "rastrigin": (-5.12, 5.12),
-    "ackley": (-32.0, 32.0),
-}
+    p.name: (p.lo, p.hi) for p in BUILTIN_PROBLEMS}

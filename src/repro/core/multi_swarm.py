@@ -40,6 +40,14 @@ population of PSO hyper-parameter candidates as one batched solve.
 
 The Pallas counterpart (one ``pallas_call`` advancing S swarms x iters with
 per-swarm gbest buffers) is ``repro.kernels.ops.run_queue_lock_fused_batch``.
+
+Problems: ``cfg.fitness`` may be a registered benchmark name or a
+first-class ``repro.core.problem.Problem`` (user objective, per-dimension
+bounds, min/max sense) — the vmapped step functions and the batched Pallas
+kernels both resolve it through the same registry/adapter machinery, so a
+batch of custom-objective solves is one device program too. The serving
+front end (``repro.launch.serve``) relies on this plus content-hashed
+compile keys to batch identical custom objectives safely.
 """
 from __future__ import annotations
 

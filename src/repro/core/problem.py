@@ -1,0 +1,281 @@
+"""First-class optimization problems: user-defined objectives as data.
+
+The paper treats the fitness as a pluggable device function evaluated inside
+the update kernel (cuPSO §5.1); a registry of six benchmark names can never
+enumerate the time-critical, application-specific objectives real workloads
+bring (Low-Complexity PSO, arXiv 1401.0546). ``Problem`` makes an objective a
+frozen, hashable value that travels through every layer — configs (it is a
+valid jit static argument), the jnp step variants, the fused/async/batched
+Pallas kernels (via the generic d-major adapter in ``repro.kernels.pso_step``
+or a hand-tuned ``kernel_fn``), the serving front end (content-hashed compile
+keys), the tuner and the distributed runner.
+
+Conventions
+-----------
+* ``fn`` is pure jnp, maps ``pos[..., D] -> fit[...]``, and must be safe
+  under jit/vmap/shard_map (no Python side effects, shapes static).
+* The engine always MAXIMIZES. ``sense="max"`` (default) uses ``fn`` as-is;
+  ``sense="min"`` canonicalizes internally (``max_fn`` negates), and
+  user-facing results convert back via ``user_value``. The six built-ins in
+  ``repro.core.fitness`` bake their negation into ``fn`` itself (legacy
+  convention) and therefore register with ``sense="max"``.
+* ``lo``/``hi`` bounds are a scalar (every dimension shares the box, the
+  seed behavior) or a length-D tuple (per-dimension boxes). Tuples keep the
+  Problem hashable; arrays/lists are normalized in ``__post_init__``.
+* ``kernel_fn``, when given, is a hand-tuned d-major form
+  ``(pos [Dpad, bn], dmask, d_real) -> fit [1, bn]`` in CANONICAL (max)
+  convention with padded sublanes masked/ignored — the same contract as
+  ``repro.kernels.pso_step._fitness_dmajor``. Without it, custom objectives
+  are lowered automatically by ``repro.kernels.pso_step.dmajor_adapter``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import types
+from typing import Callable, Dict, Optional, Tuple, Union
+
+Bound = Union[float, Tuple[float, ...]]
+
+
+def _norm_bound(v) -> Bound:
+    """Normalize a bound to a hashable float or tuple-of-floats."""
+    if isinstance(v, (int, float)):
+        return float(v)
+    try:
+        return tuple(float(x) for x in v)
+    except TypeError:
+        raise TypeError(f"bound must be a scalar or a sequence, got {v!r}")
+
+
+def broadcast_bounds(lo: Bound, hi: Bound) -> Tuple[Bound, Bound]:
+    """Make a (lo, hi) pair rank-consistent: if exactly one side is
+    per-dimension, broadcast the scalar side to match."""
+    if isinstance(lo, tuple) and not isinstance(hi, tuple):
+        hi = (float(hi),) * len(lo)
+    elif isinstance(hi, tuple) and not isinstance(lo, tuple):
+        lo = (float(lo),) * len(hi)
+    return lo, hi
+
+
+# --- content hashing helpers (cache_key) ----------------------------------
+# repr() is NOT a faithful serialization: numpy/jax truncate array reprs at
+# ~1000 elements and 8 significant digits, so two behaviourally different
+# objectives could collide — and the serving layer would then silently solve
+# one request against the other's landscape. Hash raw array bytes and
+# recurse into nested functions/code objects instead.
+
+def _hash_value(h, v, depth: int = 0) -> None:
+    import numpy as np
+    if depth > 6:
+        h.update(b"<deep>")
+        return
+    if v is None or isinstance(v, (str, bytes, int, float, bool, complex)):
+        h.update(repr(v).encode())
+    elif isinstance(v, (tuple, list)):
+        h.update(b"(")
+        for x in v:
+            _hash_value(h, x, depth + 1)
+        h.update(b")")
+    elif isinstance(v, types.CodeType):
+        _hash_code(h, v, depth + 1)
+    elif callable(v):
+        _hash_fn(h, v, depth + 1)
+    else:
+        try:
+            arr = np.asarray(v)
+            if arr.dtype != object:
+                h.update(str(arr.dtype).encode())
+                h.update(repr(arr.shape).encode())
+                h.update(arr.tobytes())
+                return
+        except Exception:
+            pass
+        h.update(repr(v).encode())
+
+
+def _hash_code(h, code: types.CodeType, depth: int) -> None:
+    h.update(code.co_code)
+    h.update(repr(code.co_names).encode())
+    _hash_value(h, code.co_consts, depth)      # may nest code objects
+
+
+def _hash_fn(h, fn, depth: int = 0) -> None:
+    if isinstance(fn, functools.partial):
+        _hash_fn(h, fn.func, depth)
+        _hash_value(h, fn.args, depth)
+        _hash_value(h, tuple(sorted(fn.keywords.items())), depth)
+        return
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        h.update(repr(fn).encode())
+        return
+    _hash_code(h, code, depth)
+    _hash_value(h, getattr(fn, "__defaults__", None), depth)
+    try:
+        cells = tuple(c.cell_contents for c in (fn.__closure__ or ()))
+    except ValueError:                          # unfilled cell
+        h.update(b"<cell>")
+        return
+    _hash_value(h, cells, depth)
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """A named objective with bounds and sense — hashable, jit-static.
+
+    ``lo``/``hi`` may be scalars or length-D tuples (per-dimension boxes);
+    a ``bounds=(lo, hi)`` pair may be passed instead of the two fields.
+    Equality/hash follow dataclass semantics (``fn`` by identity), which is
+    what jit caching needs; the serving layer uses the *content* hash
+    ``cache_key()`` so two distinct objectives never share a compile key
+    even if they collide on ``name``.
+    """
+
+    name: str
+    fn: Callable
+    lo: Bound = -100.0
+    hi: Bound = 100.0
+    sense: str = "max"
+    kernel_fn: Optional[Callable] = None
+    bounds: dataclasses.InitVar[Optional[Tuple[Bound, Bound]]] = None
+
+    def __post_init__(self, bounds):
+        if bounds is not None:
+            lo, hi = bounds
+        else:
+            lo, hi = self.lo, self.hi
+        lo, hi = broadcast_bounds(_norm_bound(lo), _norm_bound(hi))
+        if isinstance(lo, tuple):
+            if len(lo) != len(hi):
+                raise ValueError(
+                    f"lo/hi lengths differ: {len(lo)} vs {len(hi)}")
+            bad = not all(l < h for l, h in zip(lo, hi))
+        else:
+            bad = not lo < hi
+        if bad:
+            raise ValueError(f"need lo < hi elementwise, got {lo} / {hi}")
+        if self.sense not in ("min", "max"):
+            raise ValueError(f"sense must be 'min' or 'max', got {self.sense!r}")
+        if not (isinstance(self.name, str) and self.name):
+            raise ValueError("Problem.name must be a non-empty string")
+        if not callable(self.fn):
+            raise TypeError("Problem.fn must be callable")
+        object.__setattr__(self, "lo", lo)
+        object.__setattr__(self, "hi", hi)
+
+    # -- canonical (maximization) view -------------------------------------
+    @property
+    def max_fn(self) -> Callable:
+        """``fn`` in the engine's canonical maximization convention.
+
+        The negation wrapper is cached on the instance (not in a global
+        cache, which would pin every one-off serving objective — and its
+        closed-over arrays — in memory forever), so repeated accesses
+        return the same object and jit tracing stays stable.
+        """
+        if self.sense == "max":
+            return self.fn
+        cached = self.__dict__.get("_max_fn")
+        if cached is None:
+            fn = self.fn
+
+            def neg(pos):
+                return -fn(pos)
+
+            neg.__name__ = f"neg_{getattr(fn, '__name__', 'fn')}"
+            object.__setattr__(self, "_max_fn", neg)
+            cached = neg
+        return cached
+
+    def user_value(self, canonical_fit):
+        """Map a canonical (maximized) fitness back to the user's sense."""
+        return -canonical_fit if self.sense == "min" else canonical_fit
+
+    @property
+    def ndim(self) -> Optional[int]:
+        """Dimensionality pinned by per-dimension bounds (None if scalar)."""
+        return len(self.lo) if isinstance(self.lo, tuple) else None
+
+    # -- content identity ---------------------------------------------------
+    def cache_key(self) -> str:
+        """Content hash for serving/compile-cache keys.
+
+        Hashes the objective's *code* (bytecode, consts — raw array bytes,
+        never truncated reprs — closure values, defaults, nested
+        functions), bounds and sense — not the Python object identity — so
+        two requests carrying behaviourally different objectives under the
+        same ``name`` can never be batched into one compiled program, while
+        re-constructed but identical Problems still share one. Memoized on
+        the (frozen) instance: the serving layer recomputes batch keys per
+        flush, and hashing a large closed-over array every time would sit
+        on the request hot path.
+        """
+        cached = self.__dict__.get("_cache_key")
+        if cached is None:
+            h = hashlib.sha1()
+            _hash_value(h, (self.name, self.sense, self.lo, self.hi))
+            for fn in (self.fn, self.kernel_fn):
+                _hash_value(h, fn)
+            cached = h.hexdigest()[:16]
+            object.__setattr__(self, "_cache_key", cached)
+        return cached
+
+
+# --------------------------------------------------------------------------
+# Registry: the legacy string path ("cubic", ...) resolves through here.
+# --------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Problem] = {}
+
+
+def register_problem(problem: Union[Problem, str], fn: Callable = None, *,
+                     overwrite: bool = False, **kwargs) -> Problem:
+    """Register a Problem under its name.
+
+    Two forms::
+
+        register_problem(Problem(name="mine", fn=f, lo=-1.0, hi=1.0))
+        register_problem("mine", f, lo=-1.0, hi=1.0, sense="min")
+
+    Re-registering an identical Problem is a no-op; a *different* Problem
+    under an existing name raises unless ``overwrite=True`` (silent
+    replacement would re-route every config already holding the string).
+    """
+    if isinstance(problem, str):
+        problem = Problem(name=problem, fn=fn, **kwargs)
+    elif fn is not None or kwargs:
+        raise TypeError("pass either a Problem or (name, fn, **fields)")
+    old = _REGISTRY.get(problem.name)
+    if old is not None and old != problem and not overwrite:
+        raise ValueError(
+            f"problem {problem.name!r} already registered with different "
+            f"content; pass overwrite=True to replace it")
+    _REGISTRY[problem.name] = problem
+    return problem
+
+
+def get_problem(name: str) -> Problem:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown problem {name!r}; registered: "
+            f"{', '.join(sorted(_REGISTRY)) or '<none>'}") from None
+
+
+def list_problems() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_problem(obj: Union[str, Problem, Callable]) -> Problem:
+    """str -> registry lookup; Problem -> itself; bare callable -> an
+    anonymous max-sense Problem with the default [-100, 100] box."""
+    if isinstance(obj, Problem):
+        return obj
+    if isinstance(obj, str):
+        return get_problem(obj)
+    if callable(obj):
+        return Problem(name=getattr(obj, "__name__", "anonymous"), fn=obj)
+    raise TypeError(f"cannot resolve {obj!r} to a Problem")

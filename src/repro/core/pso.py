@@ -37,42 +37,89 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from . import rng
-from .fitness import DEFAULT_BOUNDS, FITNESS_FNS
+from .blocking import default_block_count
+from .fitness import DEFAULT_BOUNDS, FITNESS_FNS  # noqa: F401 (legacy API)
+from .problem import Bound, Problem, broadcast_bounds, resolve_problem
 
 Array = jnp.ndarray
 
 
+def _bound_operand(v, dt):
+    """Bound -> jnp operand: scalars stay Python floats (weak-typed, the
+    seed arithmetic, bit-for-bit); per-dimension tuples become [D] arrays
+    that broadcast against [N, D] / [S, N, D] state."""
+    return v if not isinstance(v, tuple) else jnp.asarray(v, dt)
+
+
 @dataclasses.dataclass(frozen=True)
 class PSOConfig:
-    """Static PSO problem configuration (paper Table 1)."""
+    """Static PSO problem configuration (paper Table 1).
+
+    ``fitness`` is a registered problem name (the legacy string path, e.g.
+    ``"cubic"``) or a first-class ``repro.core.problem.Problem`` carrying a
+    user-defined pure-jnp objective, bounds and sense. ``min_pos``/``max_pos``
+    /``max_v`` override the problem's domain; each is a scalar or a
+    length-``dim`` tuple (per-dimension boxes). The config stays hashable —
+    it is a jit static argument everywhere.
+    """
 
     dim: int = 1
     particle_cnt: int = 1024
     w: float = 1.0          # inertia (paper §6.1: w = 1)
     c1: float = 2.0         # cognitive coefficient
     c2: float = 2.0         # social coefficient
-    fitness: str = "cubic"
-    min_pos: Optional[float] = None   # default: fitness-specific domain
-    max_pos: Optional[float] = None
-    max_v: Optional[float] = None     # default: half the position range
+    fitness: Union[str, Problem] = "cubic"
+    min_pos: Optional[Bound] = None   # default: fitness-specific domain
+    max_pos: Optional[Bound] = None
+    max_v: Optional[Bound] = None     # default: half the position range
     dtype: str = "float32"
 
+    def __post_init__(self):
+        # Normalize any sequence bound to a tuple so the config stays
+        # hashable (lists/arrays would break jit static hashing).
+        for f in ("min_pos", "max_pos", "max_v"):
+            v = getattr(self, f)
+            if v is not None and not isinstance(v, (int, float, tuple)):
+                object.__setattr__(self, f, tuple(float(x) for x in v))
+
+    @property
+    def problem(self) -> Problem:
+        return resolve_problem(self.fitness)
+
     def resolved(self) -> "PSOConfig":
-        lo, hi = DEFAULT_BOUNDS[self.fitness]
+        prob = self.problem
+        lo, hi = prob.lo, prob.hi
         min_pos = lo if self.min_pos is None else self.min_pos
         max_pos = hi if self.max_pos is None else self.max_pos
-        max_v = 0.5 * (max_pos - min_pos) if self.max_v is None else self.max_v
+        min_pos, max_pos = broadcast_bounds(min_pos, max_pos)
+        for name, v in (("min_pos", min_pos), ("max_pos", max_pos)):
+            if isinstance(v, tuple) and len(v) != self.dim:
+                raise ValueError(
+                    f"{name} has {len(v)} entries but dim={self.dim}")
+        if self.max_v is None:
+            if isinstance(min_pos, tuple):
+                max_v: Bound = tuple(0.5 * (h - l)
+                                     for l, h in zip(min_pos, max_pos))
+            else:
+                max_v = 0.5 * (max_pos - min_pos)
+        else:
+            max_v = self.max_v
+            if isinstance(max_v, tuple) and len(max_v) != self.dim:
+                raise ValueError(
+                    f"max_v has {len(max_v)} entries but dim={self.dim}")
         return dataclasses.replace(self, min_pos=min_pos, max_pos=max_pos, max_v=max_v)
 
     @property
     def fitness_fn(self) -> Callable[[Array], Array]:
-        return FITNESS_FNS[self.fitness]
+        """The objective in canonical (maximization) form. For legacy string
+        configs this is the exact ``FITNESS_FNS`` function object."""
+        return self.problem.max_fn
 
     @property
     def jnp_dtype(self):
@@ -117,9 +164,12 @@ def init_swarm(cfg: PSOConfig, seed: int, n: Optional[int] = None,
            + jnp.uint32(index_offset * d))
     u_pos = rng.uniform(seed, 0, STREAM_INIT_POS, idx, dtype=dt)
     u_vel = rng.uniform(seed, 0, STREAM_INIT_VEL, idx, dtype=dt)
-    span = cfg.max_pos - cfg.min_pos
-    pos = cfg.min_pos + span * u_pos
-    vel = -cfg.max_v + 2.0 * cfg.max_v * u_vel
+    lo = _bound_operand(cfg.min_pos, dt)
+    hi = _bound_operand(cfg.max_pos, dt)
+    mv = _bound_operand(cfg.max_v, dt)
+    span = hi - lo
+    pos = lo + span * u_pos
+    vel = -mv + 2.0 * mv * u_vel
     fit = cfg.fitness_fn(pos)
     best = jnp.argmax(fit)
     return SwarmState(
@@ -160,8 +210,10 @@ def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0,
     vel = (w * s.vel
            + c1 * r1 * (s.pbest_pos - s.pos)
            + c2 * r2 * (gbp - s.pos))
-    vel = jnp.clip(vel, -cfg.max_v, cfg.max_v)
-    pos = jnp.clip(s.pos + vel, cfg.min_pos, cfg.max_pos)
+    mv = _bound_operand(cfg.max_v, dt)
+    vel = jnp.clip(vel, -mv, mv)
+    pos = jnp.clip(s.pos + vel, _bound_operand(cfg.min_pos, dt),
+                   _bound_operand(cfg.max_pos, dt))
     fit = cfg.fitness_fn(pos)
     return pos, vel, fit
 
@@ -339,12 +391,12 @@ def publish_async_locals(s: SwarmState, local: Tuple[Array, Array]
 
 
 def _default_async_blocks(n: int, target: int = 512) -> int:
-    """Block count giving the largest block size ≤ target that divides n
-    (the library mirror of ``repro.kernels.ops.pick_block_n``)."""
-    for bn in range(min(n, target), 0, -1):
-        if n % bn == 0:
-            return n // bn
-    return 1
+    """Block count giving the largest block size ≤ target that divides n.
+
+    Shares ``repro.core.blocking.pick_block_n`` with the Pallas kernels
+    (``lane=1``: the jnp fallback has no tile-alignment constraint, which
+    keeps its pre-unification block choices bit-for-bit)."""
+    return default_block_count(n, target)
 
 
 @partial(jax.jit,

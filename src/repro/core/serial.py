@@ -54,11 +54,22 @@ def _uniform(seed, iteration, stream, index, dtype=np.float32):
     return (bits >> _U32(8)).astype(dtype) * dtype.type(1.0 / (1 << 24))
 
 
+def _np_bound(v, dt):
+    """Bound -> numpy operand: scalars stay Python floats (bit-identical
+    seed arithmetic); per-dimension tuples become [D] arrays."""
+    return v if isinstance(v, (int, float)) else np.asarray(v, dt)
+
+
 def _fitness(cfg: PSOConfig, pos: np.ndarray) -> np.ndarray:
     """Pure-numpy fitness (mirrors repro.core.fitness; numpy to keep the
-    serial baseline free of JAX dispatch overhead)."""
+    serial baseline free of JAX dispatch overhead). A first-class Problem
+    (user objective) falls back to evaluating its canonical-max jnp ``fn``
+    — correctness over speed; the serial path is a baseline, not a hot
+    path."""
     x = pos
     name = cfg.fitness
+    if not isinstance(name, str):
+        return np.asarray(name.max_fn(pos))
     if name == "cubic":
         return np.sum(x * x * x - 0.8 * (x * x) - 1000.0 * x + 8000.0, axis=-1)
     if name == "sphere":
@@ -94,9 +105,11 @@ class SerialSwarm:
         n, d = cfg.particle_cnt, cfg.dim
         dt = np.dtype(cfg.dtype)
         idx = np.arange(n * d, dtype=_U32).reshape(n, d)
-        span = cfg.max_pos - cfg.min_pos
-        self.pos = (cfg.min_pos + span * _uniform(seed, 0, STREAM_INIT_POS, idx, dt))
-        self.vel = (-cfg.max_v + 2 * cfg.max_v * _uniform(seed, 0, STREAM_INIT_VEL, idx, dt))
+        lo, hi = _np_bound(cfg.min_pos, dt), _np_bound(cfg.max_pos, dt)
+        mv = _np_bound(cfg.max_v, dt)
+        span = hi - lo
+        self.pos = (lo + span * _uniform(seed, 0, STREAM_INIT_POS, idx, dt))
+        self.vel = (-mv + 2 * mv * _uniform(seed, 0, STREAM_INIT_VEL, idx, dt))
         self.fit = _fitness(cfg, self.pos)
         self.pbest_pos = self.pos.copy()
         self.pbest_fit = self.fit.copy()
@@ -117,8 +130,10 @@ class SerialSwarm:
             v = (cfg.w * self.vel[i]
                  + cfg.c1 * r1[i] * (self.pbest_pos[i] - self.pos[i])
                  + cfg.c2 * r2[i] * (self.gbest_pos - self.pos[i]))
-            v = np.clip(v, -cfg.max_v, cfg.max_v)
-            p = np.clip(self.pos[i] + v, cfg.min_pos, cfg.max_pos)
+            mv = _np_bound(cfg.max_v, v.dtype)
+            v = np.clip(v, -mv, mv)
+            p = np.clip(self.pos[i] + v, _np_bound(cfg.min_pos, v.dtype),
+                        _np_bound(cfg.max_pos, v.dtype))
             f = float(_fitness(cfg, p[None])[0])
             self.vel[i] = v
             self.pos[i] = p
@@ -150,9 +165,11 @@ def run_serial_fast(cfg: PSOConfig, seed: int, iters: int) -> Tuple[float, np.nd
     n, d = cfg.particle_cnt, cfg.dim
     dt = np.dtype(cfg.dtype)
     idx = np.arange(n * d, dtype=_U32).reshape(n, d)
-    span = cfg.max_pos - cfg.min_pos
-    pos = cfg.min_pos + span * _uniform(seed, 0, STREAM_INIT_POS, idx, dt)
-    vel = -cfg.max_v + 2 * cfg.max_v * _uniform(seed, 0, STREAM_INIT_VEL, idx, dt)
+    lo, hi = _np_bound(cfg.min_pos, dt), _np_bound(cfg.max_pos, dt)
+    mv = _np_bound(cfg.max_v, dt)
+    span = hi - lo
+    pos = lo + span * _uniform(seed, 0, STREAM_INIT_POS, idx, dt)
+    vel = -mv + 2 * mv * _uniform(seed, 0, STREAM_INIT_VEL, idx, dt)
     fit = _fitness(cfg, pos)
     pbest_pos, pbest_fit = pos.copy(), fit.copy()
     b = int(np.argmax(fit))
@@ -162,8 +179,8 @@ def run_serial_fast(cfg: PSOConfig, seed: int, iters: int) -> Tuple[float, np.nd
         r2 = _uniform(seed, it, STREAM_R2, idx, dt)
         vel = (cfg.w * vel + cfg.c1 * r1 * (pbest_pos - pos)
                + cfg.c2 * r2 * (gbest_pos[None] - pos))
-        np.clip(vel, -cfg.max_v, cfg.max_v, out=vel)
-        pos = np.clip(pos + vel, cfg.min_pos, cfg.max_pos)
+        np.clip(vel, -mv, mv, out=vel)
+        pos = np.clip(pos + vel, lo, hi)
         fit = _fitness(cfg, pos)
         m = fit > pbest_fit
         pbest_fit = np.where(m, fit, pbest_fit)

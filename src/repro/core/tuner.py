@@ -146,16 +146,28 @@ PSO_COEFF_DIMS = (
 
 
 def make_solve_many_fitness(cfg: PSOConfig, seeds: Sequence[int],
-                            iters: int = 100, variant: str = "queue"):
+                            iters: int = 100, variant: str = "queue",
+                            sync_every: Optional[int] = None):
     """Batch-fitness scoring PSO coefficient candidates via ONE batched solve.
 
     Each candidate ``{"w": ..., "c1": ..., "c2": ...}`` (missing keys fall
     back to ``cfg``) is scored as the mean final ``gbest_fit`` over the probe
     ``seeds``. The full population x seeds grid runs as a single
     ``solve_many`` call with per-swarm coeffs — P*K swarms, one dispatch.
+
+    ``cfg.fitness`` may be a registered name or a first-class
+    ``repro.core.problem.Problem`` — tuning PSO coefficients *for a user
+    objective* is just ``make_solve_many_fitness(PSOConfig(fitness=prob),
+    ...)``; scores stay in the engine's canonical maximization convention
+    (a sense="min" problem's scores are its negated objective, which orders
+    candidates correctly). ``sync_every`` forwards to the ``async``
+    variant's publication interval.
     """
     from .multi_swarm import solve_many
+    from .pso import ASYNC_SYNC_EVERY
 
+    if sync_every is None:
+        sync_every = ASYNC_SYNC_EVERY
     cfg = cfg.resolved()
     seeds = np.asarray(seeds, dtype=np.int64)
     k = len(seeds)
@@ -167,6 +179,7 @@ def make_solve_many_fitness(cfg: PSOConfig, seeds: Sequence[int],
         c1 = np.repeat([c.get("c1", cfg.c1) for c in population], k)
         c2 = np.repeat([c.get("c2", cfg.c2) for c in population], k)
         batch = solve_many(cfg, all_seeds, iters=iters, variant=variant,
+                           sync_every=sync_every,
                            coeffs=(w.astype(np.float32),
                                    c1.astype(np.float32),
                                    c2.astype(np.float32)))

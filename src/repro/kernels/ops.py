@@ -17,29 +17,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.blocking import LANE, pick_block_n  # noqa: F401 (re-export:
+# pick_block_n is the shared block-sizing helper in repro.core.blocking,
+# also used by core.pso._default_async_blocks with lane=1)
 from repro.core.multi_swarm import SwarmBatch
 from repro.core.pso import ASYNC_SYNC_EVERY, PSOConfig, SwarmState
 from .pso_step import (fused_async_batch_call, fused_async_call,
                        fused_batch_call, fused_call, pad_dim,
-                       queue_step_call, LANE)
-
-
-def pick_block_n(n: int, target: int = 512) -> int:
-    """Largest divisor of n that is ≤ target, preferring lane-aligned ones.
-
-    One descending pass: the first lane-aligned (multiple-of-128) divisor
-    wins outright; otherwise the first (i.e. largest) divisor of any kind is
-    remembered as the fallback. A prime n larger than ``target`` has no
-    divisor ≤ target except 1.
-    """
-    best = 1
-    for bn in range(min(n, target), 0, -1):
-        if n % bn == 0:
-            if bn % LANE == 0:
-                return bn
-            if best == 1:
-                best = bn
-    return best
+                       queue_step_call)
 
 
 def pack_dmajor(pos, d: int):
@@ -56,6 +41,10 @@ def unpack_dmajor(arr, d: int):
 
 
 def _cfg_kwargs(cfg: PSOConfig):
+    """Static kernel parameters from a config. ``fitness`` stays a
+    str | Problem (resolved to the d-major callable by the call builders
+    via ``pso_step.kernel_fitness``); bounds stay scalars or per-dimension
+    tuples (lowered to [Dpad, 1] columns by ``pso_step._advance_block``)."""
     cfg = cfg.resolved()
     return dict(w=cfg.w, c1=cfg.c1, c2=cfg.c2, min_pos=cfg.min_pos,
                 max_pos=cfg.max_pos, max_v=cfg.max_v, fitness=cfg.fitness)

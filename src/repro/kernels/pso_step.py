@@ -70,9 +70,21 @@ Two kernels:
     swarm axis (grid (swarms, blocks, chunks)) with per-swarm gbest buffers
     and per-(swarm, block) local-best slots.
 
+Objectives: every kernel takes ``fitness`` as a registered name or a
+``repro.core.problem.Problem``. Names and built-in Problems select the
+hand-tuned ``_fitness_dmajor`` forms below (bit-identical to the
+pre-Problem-API kernels); any other Problem is lowered automatically by
+``dmajor_adapter`` (transpose into the user's ``[bn, d]`` view) with its
+captured array constants hoisted into explicit pallas_call operands by
+``lower_statics`` — Pallas forbids captured consts — and its advance
+outputs pinned via ``optimization_barrier`` so interpret-mode runs stay
+bit-comparable to the eager oracles (see ``_resolve_statics``).
+Per-dimension bounds ride the same const-threading as ``[Dpad, 1]``
+columns.
+
 Validated in ``interpret=True`` mode against ``ref.py`` (same counter RNG ⇒
 bit-exact trajectories) over shape/dtype sweeps in tests/test_kernels.py
-and tests/test_async.py.
+and tests/test_async.py; custom-objective parity in tests/test_problem.py.
 """
 from __future__ import annotations
 
@@ -87,12 +99,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import rng
+from repro.core.blocking import LANE
 from repro.core.pso import STREAM_R1, STREAM_R2
+from repro.core.problem import Problem
 
 from .compat import CompilerParams as _CompilerParams
 
 SUBLANE = 8
-LANE = 128
 _BIG_I32 = np.int32(2 ** 30)
 
 
@@ -148,6 +161,183 @@ KERNEL_FITNESS = ("cubic", "sphere", "rastrigin", "griewank", "ackley",
                   "rosenbrock")
 
 
+def dmajor_adapter(fn):
+    """Lift a pure-jnp objective ``fn(pos[..., D]) -> fit[...]`` into the
+    masked d-major kernel layout ``(pos [Dpad, bn], dmask, d_real) ->
+    fit [1, bn]``.
+
+    The padded sublanes are removed by a static slice (they are already
+    zero-masked by ``_advance_block``, but slicing means ``fn`` never sees
+    them at all — no masking contract is imposed on user objectives), then
+    the tile is transposed so ``fn`` receives its documented particle-major
+    ``[bn, d]`` view. This is what lets ANY registered/user Problem run
+    inside the fused, async and batched Pallas kernels without a
+    hand-written d-major form; the six built-ins keep their hand-tuned
+    ``_fitness_dmajor`` forms as fast paths (transpose-free), parity-tested
+    against this adapter in tests/test_problem.py.
+    """
+    def lifted(pos, dmask, d_real):
+        del dmask
+        return fn(pos[:d_real, :].T)[None, :]
+    lifted.__name__ = f"dmajor[{getattr(fn, '__name__', 'fn')}]"
+    return lifted
+
+
+def kernel_fitness(fitness):
+    """Resolve a config's ``fitness`` (str | Problem) to the in-kernel
+    d-major callable ``(pos, dmask, d_real) -> [1, bn]`` in canonical
+    (maximization) form.
+
+    Strings and built-in Problems take the hand-tuned ``_fitness_dmajor``
+    fast path (bit-identical to the pre-Problem-API kernels); a Problem
+    with a user ``kernel_fn`` uses it verbatim (it must already be
+    canonical-max, see ``repro.core.problem``); any other Problem is
+    lowered by ``dmajor_adapter``.
+    """
+    if isinstance(fitness, str):
+        return functools.partial(_fitness_dmajor, fitness)
+    if not isinstance(fitness, Problem):
+        raise TypeError(f"fitness must be str or Problem, got {fitness!r}")
+    if fitness.kernel_fn is not None:
+        return fitness.kernel_fn
+    from repro.core.fitness import FITNESS_FNS
+    if (fitness.sense == "max" and fitness.name in KERNEL_FITNESS
+            and fitness.fn is FITNESS_FNS.get(fitness.name)):
+        return functools.partial(_fitness_dmajor, fitness.name)
+    return dmajor_adapter(fitness.max_fn)
+
+
+def is_converted(fitness) -> bool:
+    """True when ``kernel_fitness`` lowers ``fitness`` by conversion (the
+    d-major adapter or a user ``kernel_fn``) rather than the hand-tuned
+    ``_fitness_dmajor`` forms. Converted kernels pin their advance outputs
+    (see ``_resolve_statics``); ``ref.py`` keys its matching behavior on
+    this predicate."""
+    return getattr(kernel_fitness(fitness), "func", None) is not _fitness_dmajor
+
+
+def _bound_col(v, dpad, dtype):
+    """Bound -> kernel operand: scalars stay Python floats (the seed
+    arithmetic, bit-for-bit); per-dimension tuples become a [Dpad, 1]
+    constant column (padded sublanes get 0 — their lanes are re-masked
+    after the clip anyway) broadcasting over the lane axis."""
+    if not isinstance(v, tuple):
+        return v
+    col = np.zeros((dpad, 1), np.dtype(dtype))
+    col[:len(v), 0] = v
+    return jnp.asarray(col)
+
+
+# --------------------------------------------------------------------------
+# Static lowering: objectives + per-dim bounds as pallas-legal operands.
+#
+# Pallas forbids kernels that capture array constants, but a user objective
+# is free to close over weight/target vectors (and per-dimension bounds ARE
+# [Dpad, 1] columns). ``lower_statics`` closure-converts the resolved
+# fitness (jax.closure_convert hoists every captured array into an explicit
+# argument) and collects bound columns, returning a ``consts`` tuple the
+# call builders append as extra pallas_call inputs; ``_resolve_statics``
+# rebuilds the operands inside the kernel from the fetched const values.
+# The legacy path (string fitness, scalar bounds) produces ZERO consts and
+# bypasses closure conversion entirely — its kernels are the seed kernels,
+# bit-for-bit.
+# --------------------------------------------------------------------------
+
+class _Slot:
+    """Marker: the operand lives in the kernel's const inputs at ``index``."""
+    __slots__ = ("index",)
+
+    def __init__(self, index: int):
+        self.index = index
+
+
+def lower_statics(fitness, *, d, dpad, bn, dtype,
+                  min_pos, max_pos, max_v):
+    """Lower (fitness, bounds) statics to (statics dict, const arrays).
+
+    ``consts`` must be appended, in order, to the pallas_call operands
+    (specs from ``_const_specs``). ``statics`` entries are Python scalars,
+    ``_Slot`` markers pointing into the const values, and the fitness
+    callable (plus its own const slots when closure conversion ran).
+    """
+    consts = []
+
+    def slot(arr):
+        consts.append(arr)
+        return _Slot(len(consts) - 1)
+
+    st = {}
+    for name, v in (("min_pos", min_pos), ("max_pos", max_pos),
+                    ("max_v", max_v)):
+        st[name] = slot(_bound_col(v, dpad, dtype)) if isinstance(v, tuple) \
+            else v
+    fitfn = kernel_fitness(fitness)
+    if not is_converted(fitness):
+        # Hand-tuned forms are const-free by construction: skip conversion
+        # so the legacy jaxpr (and its compiled bits) are untouched.
+        st["fit"] = fitfn
+        st["fit_slots"] = None
+    else:
+        # Trace once to hoist every array constant the objective bakes in
+        # (weight/target vectors etc. — jax.closure_convert only hoists
+        # closed-over *tracers*, so pull the jaxpr consts out ourselves).
+        closed = jax.make_jaxpr(lambda p, m: fitfn(p, m, d))(
+            jax.ShapeDtypeStruct((dpad, bn), dtype),
+            jax.ShapeDtypeStruct((dpad, bn), jnp.bool_))
+
+        def pure(p, m, *cvals, _jaxpr=closed.jaxpr):
+            out = jax.core.eval_jaxpr(_jaxpr, cvals, p, m)
+            if len(out) != 1:
+                raise ValueError("objective must return a single array")
+            return out[0]
+
+        st["fit"] = pure
+        st["fit_slots"] = tuple(slot(jnp.asarray(c)) for c in closed.consts)
+    st["n_consts"] = len(consts)
+    return st, tuple(consts)
+
+
+def _resolve_statics(st, const_vals):
+    """Kernel-side inverse of ``lower_statics``: returns
+    (min_pos, max_pos, max_v, fitfn, pin) with fitfn(pos, dmask, d_real).
+
+    ``pin`` is True for converted (non-hand-tuned) objectives: the kernel
+    body must pass the advance outputs through ``_pin`` before storing or
+    evaluating fitness. Without it, XLA:CPU fuses the user objective into
+    the velocity/position chain and re-derives a differently-rounded ``pos``
+    per consumer, drifting 1 ulp from the eager ``ref.py`` oracles and
+    breaking the bit-exact validation contract. The barrier is a no-op
+    eagerly and is skipped entirely for the hand-tuned built-in forms,
+    whose jaxprs (and compiled bits) stay exactly the seed kernels'.
+    """
+    def get(v):
+        return const_vals[v.index] if isinstance(v, _Slot) else v
+
+    if st["fit_slots"] is None:
+        fit = st["fit"]
+    else:
+        pure = st["fit"]
+        extra = tuple(const_vals[s.index] for s in st["fit_slots"])
+
+        def fit(pos, dmask, d_real, _pure=pure, _extra=extra):
+            del d_real  # baked in at closure-conversion time
+            return _pure(pos, dmask, *_extra)
+
+    return (get(st["min_pos"]), get(st["max_pos"]), get(st["max_v"]), fit,
+            st["fit_slots"] is not None)
+
+
+def _pin(pin, pos, vel):
+    """Materialize the advance outputs (see ``_resolve_statics``)."""
+    return lax.optimization_barrier((pos, vel)) if pin else (pos, vel)
+
+
+def _const_specs(consts):
+    """Whole-array BlockSpecs for the const inputs (grid-invariant)."""
+    return [pl.BlockSpec(c.shape, lambda *g, _r=c.ndim: (0,) * _r)
+            for c in consts]
+
+
 def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
                    w, c1, c2, min_pos, max_pos, max_v, d_real):
     """Paper Alg. 1 steps 2–3 for one [Dpad, bn] tile.
@@ -156,9 +346,13 @@ def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
     interpret-mode validation isolates the *pallas orchestration* (grid,
     aliasing, blocking, predication); the math itself is validated against
     the independent ``repro.core.pso`` implementation in tests.
-    Returns (pos, vel, dmask, lane).
+    ``min_pos``/``max_pos``/``max_v`` are scalars or per-dimension tuples
+    (lowered to constant [Dpad, 1] columns). Returns (pos, vel, dmask, lane).
     """
     dpad, bn = pos.shape
+    min_pos = _bound_col(min_pos, dpad, pos.dtype)
+    max_pos = _bound_col(max_pos, dpad, pos.dtype)
+    max_v = _bound_col(max_v, dpad, pos.dtype)
     dsub = lax.broadcasted_iota(jnp.int32, (dpad, bn), 0)
     lane = lax.broadcasted_iota(jnp.int32, (dpad, bn), 1)
     dmask = dsub < d_real
@@ -180,10 +374,15 @@ def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
 
 def _queue_kernel(scal_ref, gp_ref, gf_ref,
                   pos_in, vel_in, pbp_in, pbf_in,          # aliased inputs
-                  pos_ref, vel_ref, pbp_ref, pbf_ref,
-                  aux_fit_ref, aux_idx_ref,
-                  *, w, c1, c2, min_pos, max_pos, max_v, d_real, fitness):
+                  *rest,                 # const inputs, then output refs
+                  w, c1, c2, d_real, statics):
     del pos_in, vel_in, pbp_in, pbf_in
+    nc = statics["n_consts"]
+    const_vals = tuple(r[...] for r in rest[:nc])
+    (pos_ref, vel_ref, pbp_ref, pbf_ref,
+     aux_fit_ref, aux_idx_ref) = rest[nc:]
+    min_pos, max_pos, max_v, fitness, pin = _resolve_statics(
+        statics, const_vals)
     b = pl.program_id(0)
     bn = pos_ref.shape[1]
     base = b * bn
@@ -192,7 +391,8 @@ def _queue_kernel(scal_ref, gp_ref, gf_ref,
         pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
         base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
         max_v=max_v, d_real=d_real)
-    fit = _fitness_dmajor(fitness, pos, dmask, d_real)      # [1, bn]
+    pos, vel = _pin(pin, pos, vel)
+    fit = fitness(pos, dmask, d_real)                        # [1, bn]
     pbf = pbf_ref[...]
     imp = fit > pbf                                          # Alg. 1 step 4
     pbf_ref[...] = jnp.where(imp, fit, pbf)
@@ -223,12 +423,14 @@ def queue_step_call(n: int, d: int, block_n: int, dtype, *,
     assert n % block_n == 0, (n, block_n)
     nb = n // block_n
     dpad = pad_dim(d)
-    kern = functools.partial(
-        _queue_kernel, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-        max_v=max_v, d_real=d, fitness=fitness)
+    st, consts = lower_statics(fitness, d=d, dpad=dpad, bn=block_n,
+                               dtype=dtype, min_pos=min_pos,
+                               max_pos=max_pos, max_v=max_v)
+    kern = functools.partial(_queue_kernel, w=w, c1=c1, c2=c2, d_real=d,
+                             statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda b: (0, b))
     row = pl.BlockSpec((1, block_n), lambda b: (0, b))
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kern,
         grid=(nb,),
         in_specs=[
@@ -236,7 +438,7 @@ def queue_step_call(n: int, d: int, block_n: int, dtype, *,
             pl.BlockSpec((dpad, 1), lambda b: (0, 0)),        # gbest_pos
             pl.BlockSpec(memory_space=pltpu.SMEM),            # gbest_fit
             mat, mat, mat, row,                               # pos vel pbp pbf
-        ],
+        ] + _const_specs(consts),
         out_specs=[
             mat, mat, mat, row,
             pl.BlockSpec((1,), lambda b: (b,), memory_space=pltpu.SMEM),
@@ -254,6 +456,7 @@ def queue_step_call(n: int, d: int, block_n: int, dtype, *,
         interpret=interpret,
         name="cupso_queue_step",
     )
+    return lambda *args: call(*args, *consts)
 
 
 # --------------------------------------------------------------------------
@@ -262,9 +465,14 @@ def queue_step_call(n: int, d: int, block_n: int, dtype, *,
 
 def _fused_kernel(scal_ref,
                   pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,   # aliased
-                  pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
-                  *, w, c1, c2, min_pos, max_pos, max_v, d_real, fitness):
+                  *rest,                 # const inputs, then output refs
+                  w, c1, c2, d_real, statics):
     del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in
+    nc = statics["n_consts"]
+    const_vals = tuple(r[...] for r in rest[:nc])
+    pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest[nc:]
+    min_pos, max_pos, max_v, fitness, pin = _resolve_statics(
+        statics, const_vals)
     t = pl.program_id(0)
     b = pl.program_id(1)
     bn = pos_ref.shape[1]
@@ -274,7 +482,8 @@ def _fused_kernel(scal_ref,
         pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
         base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
         max_v=max_v, d_real=d_real)
-    fit = _fitness_dmajor(fitness, pos, dmask, d_real)
+    pos, vel = _pin(pin, pos, vel)
+    fit = fitness(pos, dmask, d_real)
     pbf = pbf_ref[...]
     imp = fit > pbf
     pbf_ref[...] = jnp.where(imp, fit, pbf)
@@ -312,18 +521,20 @@ def fused_call(n: int, d: int, iters: int, block_n: int, dtype, *,
     assert n % block_n == 0, (n, block_n)
     nb = n // block_n
     dpad = pad_dim(d)
-    kern = functools.partial(
-        _fused_kernel, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-        max_v=max_v, d_real=d, fitness=fitness)
+    st, consts = lower_statics(fitness, d=d, dpad=dpad, bn=block_n,
+                               dtype=dtype, min_pos=min_pos,
+                               max_pos=max_pos, max_v=max_v)
+    kern = functools.partial(_fused_kernel, w=w, c1=c1, c2=c2, d_real=d,
+                             statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda t, b: (0, b))
     row = pl.BlockSpec((1, block_n), lambda t, b: (0, b))
     gpc = pl.BlockSpec((dpad, 1), lambda t, b: (0, 0))
     gfs = pl.BlockSpec(memory_space=pltpu.SMEM)
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kern,
         grid=(iters, nb),
         in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),      # scal
-                  mat, mat, mat, row, gpc, gfs],
+                  mat, mat, mat, row, gpc, gfs] + _const_specs(consts),
         out_specs=[mat, mat, mat, row, gpc, gfs],
         out_shape=[
             jax.ShapeDtypeStruct((dpad, n), dtype),           # pos
@@ -339,6 +550,7 @@ def fused_call(n: int, d: int, iters: int, block_n: int, dtype, *,
         interpret=interpret,
         name="cupso_fused_queue_lock",
     )
+    return lambda *args: call(*args, *consts)
 
 
 # --------------------------------------------------------------------------
@@ -347,10 +559,14 @@ def fused_call(n: int, d: int, iters: int, block_n: int, dtype, *,
 
 def _fused_batch_kernel(seeds_ref, its_ref,
                         pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,
-                        pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
-                        *, w, c1, c2, min_pos, max_pos, max_v, d_real,
-                        fitness):
+                        *rest,           # const inputs, then output refs
+                        w, c1, c2, d_real, statics):
     del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in
+    nc = statics["n_consts"]
+    const_vals = tuple(r[...] for r in rest[:nc])
+    pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest[nc:]
+    min_pos, max_pos, max_v, fitness, pin = _resolve_statics(
+        statics, const_vals)
     s = pl.program_id(0)
     t = pl.program_id(1)
     b = pl.program_id(2)
@@ -361,7 +577,8 @@ def _fused_batch_kernel(seeds_ref, its_ref,
         pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
         base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
         max_v=max_v, d_real=d_real)
-    fit = _fitness_dmajor(fitness, pos, dmask, d_real)
+    pos, vel = _pin(pin, pos, vel)
+    fit = fitness(pos, dmask, d_real)
     pbf = pbf_ref[...]
     imp = fit > pbf
     pbf_ref[...] = jnp.where(imp, fit, pbf)
@@ -400,18 +617,20 @@ def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
     assert n % block_n == 0, (n, block_n)
     nb = n // block_n
     dpad = pad_dim(d)
-    kern = functools.partial(
-        _fused_batch_kernel, w=w, c1=c1, c2=c2, min_pos=min_pos,
-        max_pos=max_pos, max_v=max_v, d_real=d, fitness=fitness)
+    st, consts = lower_statics(fitness, d=d, dpad=dpad, bn=block_n,
+                               dtype=dtype, min_pos=min_pos,
+                               max_pos=max_pos, max_v=max_v)
+    kern = functools.partial(_fused_batch_kernel, w=w, c1=c1, c2=c2,
+                             d_real=d, statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda s, t, b: (0, s * nb + b))
     row = pl.BlockSpec((1, block_n), lambda s, t, b: (0, s * nb + b))
     gpc = pl.BlockSpec((dpad, 1), lambda s, t, b: (0, s))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kern,
         grid=(s_cnt, iters, nb),
         in_specs=[smem, smem,                                 # seeds, iters
-                  mat, mat, mat, row, gpc, smem],
+                  mat, mat, mat, row, gpc, smem] + _const_specs(consts),
         out_specs=[mat, mat, mat, row, gpc, smem],
         out_shape=[
             jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pos
@@ -428,6 +647,7 @@ def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
         interpret=interpret,
         name="cupso_fused_queue_lock_batch",
     )
+    return lambda *args: call(*args, *consts)
 
 
 # --------------------------------------------------------------------------
@@ -436,7 +656,8 @@ def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
 
 def _async_chunk_body(scal0, it_base, sync_every, base,
                       pos, vel, pbp, pbf, lp, lf, *,
-                      w, c1, c2, min_pos, max_pos, max_v, d_real, fitness):
+                      w, c1, c2, min_pos, max_pos, max_v, d_real, fitness,
+                      pin=False):
     """``sync_every`` iterations of one block against its block-local best.
 
     Pure value-level fori_loop (no ref writes inside the loop) shared by
@@ -452,7 +673,8 @@ def _async_chunk_body(scal0, it_base, sync_every, base,
             scal0, it_base + tl + 1, pos, vel, pbp, lp, base,
             w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
             max_v=max_v, d_real=d_real)
-        fit = _fitness_dmajor(fitness, pos, dmask, d_real)
+        pos, vel = _pin(pin, pos, vel)
+        fit = fitness(pos, dmask, d_real)
         imp = fit > pbf
         pbf = jnp.where(imp, fit, pbf)
         pbp = jnp.where(imp, pos, pbp)
@@ -478,11 +700,15 @@ def _async_chunk_body(scal0, it_base, sync_every, base,
 def _fused_async_kernel(scal_ref,
                         pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,
                         lp_in, lf_in,
-                        pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
-                        lp_ref, lf_ref,
-                        *, sync_every, w, c1, c2, min_pos, max_pos, max_v,
-                        d_real, fitness):
+                        *rest,           # const inputs, then output refs
+                        sync_every, w, c1, c2, d_real, statics):
     del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in, lp_in, lf_in
+    nc = statics["n_consts"]
+    const_vals = tuple(r[...] for r in rest[:nc])
+    (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
+     lp_ref, lf_ref) = rest[nc:]
+    min_pos, max_pos, max_v, fitness, pin = _resolve_statics(
+        statics, const_vals)
     b = pl.program_id(0)
     c = pl.program_id(1)
     bn = pos_ref.shape[1]
@@ -500,7 +726,7 @@ def _fused_async_kernel(scal_ref,
         scal_ref[0], scal_ref[1] + c * sync_every, sync_every, base,
         pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf,
         w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v,
-        d_real=d_real, fitness=fitness)
+        d_real=d_real, fitness=fitness, pin=pin)
     pos_ref[...] = pos
     vel_ref[...] = vel
     pbp_ref[...] = pbp
@@ -534,20 +760,22 @@ def fused_async_call(n: int, d: int, iters: int, block_n: int,
     nb = n // block_n
     chunks = iters // sync_every
     dpad = pad_dim(d)
-    kern = functools.partial(
-        _fused_async_kernel, sync_every=sync_every, w=w, c1=c1, c2=c2,
-        min_pos=min_pos, max_pos=max_pos, max_v=max_v, d_real=d,
-        fitness=fitness)
+    st, consts = lower_statics(fitness, d=d, dpad=dpad, bn=block_n,
+                               dtype=dtype, min_pos=min_pos,
+                               max_pos=max_pos, max_v=max_v)
+    kern = functools.partial(_fused_async_kernel, sync_every=sync_every,
+                             w=w, c1=c1, c2=c2, d_real=d, statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda b, c: (0, b))
     row = pl.BlockSpec((1, block_n), lambda b, c: (0, b))
     gpc = pl.BlockSpec((dpad, 1), lambda b, c: (0, 0))
     lpc = pl.BlockSpec((dpad, 1), lambda b, c: (0, b))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kern,
         grid=(nb, chunks),
         in_specs=[smem,                                       # scal
-                  mat, mat, mat, row, gpc, smem, lpc, smem],
+                  mat, mat, mat, row, gpc, smem, lpc, smem]
+                 + _const_specs(consts),
         out_specs=[mat, mat, mat, row, gpc, smem, lpc, smem],
         out_shape=[
             jax.ShapeDtypeStruct((dpad, n), dtype),           # pos
@@ -566,16 +794,21 @@ def fused_async_call(n: int, d: int, iters: int, block_n: int,
         interpret=interpret,
         name="cupso_fused_queue_lock_async",
     )
+    return lambda *args: call(*args, *consts)
 
 
 def _fused_async_batch_kernel(seeds_ref, its_ref,
                               pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,
                               lp_in, lf_in,
-                              pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref,
-                              gf_ref, lp_ref, lf_ref,
-                              *, nb, sync_every, w, c1, c2, min_pos, max_pos,
-                              max_v, d_real, fitness):
+                              *rest,     # const inputs, then output refs
+                              nb, sync_every, w, c1, c2, d_real, statics):
     del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in, lp_in, lf_in
+    nc = statics["n_consts"]
+    const_vals = tuple(r[...] for r in rest[:nc])
+    (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref,
+     gf_ref, lp_ref, lf_ref) = rest[nc:]
+    min_pos, max_pos, max_v, fitness, pin = _resolve_statics(
+        statics, const_vals)
     s = pl.program_id(0)
     b = pl.program_id(1)
     c = pl.program_id(2)
@@ -592,7 +825,7 @@ def _fused_async_batch_kernel(seeds_ref, its_ref,
         seeds_ref[s], its_ref[s] + c * sync_every, sync_every, base,
         pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf,
         w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v,
-        d_real=d_real, fitness=fitness)
+        d_real=d_real, fitness=fitness, pin=pin)
     pos_ref[...] = pos
     vel_ref[...] = vel
     pbp_ref[...] = pbp
@@ -625,20 +858,23 @@ def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
     nb = n // block_n
     chunks = iters // sync_every
     dpad = pad_dim(d)
-    kern = functools.partial(
-        _fused_async_batch_kernel, nb=nb, sync_every=sync_every, w=w, c1=c1,
-        c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v, d_real=d,
-        fitness=fitness)
+    st, consts = lower_statics(fitness, d=d, dpad=dpad, bn=block_n,
+                               dtype=dtype, min_pos=min_pos,
+                               max_pos=max_pos, max_v=max_v)
+    kern = functools.partial(_fused_async_batch_kernel, nb=nb,
+                             sync_every=sync_every, w=w, c1=c1, c2=c2,
+                             d_real=d, statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda s, b, c: (0, s * nb + b))
     row = pl.BlockSpec((1, block_n), lambda s, b, c: (0, s * nb + b))
     gpc = pl.BlockSpec((dpad, 1), lambda s, b, c: (0, s))
     lpc = pl.BlockSpec((dpad, 1), lambda s, b, c: (0, s * nb + b))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kern,
         grid=(s_cnt, nb, chunks),
         in_specs=[smem, smem,                                 # seeds, iters
-                  mat, mat, mat, row, gpc, smem, lpc, smem],
+                  mat, mat, mat, row, gpc, smem, lpc, smem]
+                 + _const_specs(consts),
         out_specs=[mat, mat, mat, row, gpc, smem, lpc, smem],
         out_shape=[
             jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pos
@@ -658,3 +894,4 @@ def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
         interpret=interpret,
         name="cupso_fused_queue_lock_async_batch",
     )
+    return lambda *args: call(*args, *consts)

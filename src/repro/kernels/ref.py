@@ -9,6 +9,10 @@ isolate the pallas orchestration; the math itself is independently checked
 against ``repro.core.pso`` in tests/test_kernels.py.
 
 All oracles work on the packed D-major layout (see ops.py for pack/unpack).
+``fitness`` accepts a registered name or a ``repro.core.problem.Problem``;
+it resolves through the SAME ``pso_step.kernel_fitness`` (hand-tuned fast
+path or generic d-major adapter) as the kernels, so custom-objective runs
+compare bit-for-bit too.
 """
 from __future__ import annotations
 
@@ -17,7 +21,36 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .pso_step import _advance_block, _fitness_dmajor, pad_dim
+import functools
+
+import jax
+
+from .pso_step import (_advance_block, _pin, is_converted, kernel_fitness,
+                       pad_dim)
+
+
+def _advance_fn(fitness, **kw):
+    """The oracles' advance step.
+
+    Hand-tuned (built-in) objectives: the plain eager ``_advance_block`` —
+    the seed oracle, bit-for-bit. Converted objectives (d-major adapter /
+    user kernel_fn): the kernels pin their advance outputs with an
+    optimization barrier (see ``pso_step._resolve_statics``), and XLA:CPU
+    rounds that pinned advance cluster differently from op-by-op eager
+    execution — so the oracle runs the SAME pinned subgraph under jit,
+    keeping custom-objective validation bit-exact too.
+    """
+    adv = functools.partial(_advance_block, **kw)
+    if not is_converted(fitness):
+        return adv
+
+    @jax.jit
+    def stepped(seed, it, pos, vel, pbp, gp, base):
+        p, v, dmask, lane = adv(seed, it, pos, vel, pbp, gp, base)
+        p, v = _pin(True, p, v)
+        return p, v, dmask, lane
+
+    return stepped
 
 _BIG = np.int32(2 ** 30)
 
@@ -28,7 +61,7 @@ def _block_views(arrs, b, bn):
 
 def queue_step_oracle(seed, iteration, pos, vel, pbp, pbf, gp, gf,
                       block_n: int, *, w, c1, c2, min_pos, max_pos, max_v,
-                      d_real: int, fitness: str):
+                      d_real: int, fitness):
     """One queue-algorithm iteration (kernel 1 + the jnp 2nd stage).
 
     Inputs in D-major layout: pos/vel/pbp [Dpad, N], pbf [1, N],
@@ -36,17 +69,18 @@ def queue_step_oracle(seed, iteration, pos, vel, pbp, pbf, gp, gf,
     """
     dpad, n = pos.shape
     nb = n // block_n
+    fitfn = kernel_fitness(fitness)
+    adv = _advance_fn(fitness, w=w, c1=c1, c2=c2, min_pos=min_pos,
+                      max_pos=max_pos, max_v=max_v, d_real=d_real)
     pos, vel, pbp, pbf = map(jnp.asarray, (pos, vel, pbp, pbf))
     aux_fit = []
     aux_idx = []
     new = {k: [] for k in ("pos", "vel", "pbp", "pbf")}
     for b in range(nb):
         p, v, bp, bf_ = _block_views((pos, vel, pbp, pbf), b, block_n)
-        p, v, dmask, lane = _advance_block(
-            seed, iteration + 1, p, v, bp, gp, b * block_n,
-            w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-            max_v=max_v, d_real=d_real)
-        fit = _fitness_dmajor(fitness, p, dmask, d_real)
+        p, v, dmask, lane = adv(seed, iteration + 1, p, v, bp, gp,
+                                b * block_n)
+        fit = fitfn(p, dmask, d_real)
         imp = fit > bf_
         bf_ = jnp.where(imp, fit, bf_)
         bp = jnp.where(imp, p, bp)
@@ -74,7 +108,7 @@ def queue_step_oracle(seed, iteration, pos, vel, pbp, pbf, gp, gf,
 
 def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                      iters: int, block_n: int, *, w, c1, c2, min_pos,
-                     max_pos, max_v, d_real: int, fitness: str):
+                     max_pos, max_v, d_real: int, fitness):
     """The fused queue-lock kernel's exact semantics, eagerly.
 
     Sequential (t, b) loop; gbest is updated in place so later blocks of the
@@ -82,6 +116,9 @@ def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
     """
     dpad, n = pos.shape
     nb = n // block_n
+    fitfn = kernel_fitness(fitness)
+    adv = _advance_fn(fitness, w=w, c1=c1, c2=c2, min_pos=min_pos,
+                      max_pos=max_pos, max_v=max_v, d_real=d_real)
     pos, vel, pbp, pbf, gp = map(jnp.asarray, (pos, vel, pbp, pbf, gp))
     gf = jnp.asarray(gf)
     pos, vel, pbp, pbf = (np.array(pos), np.array(vel), np.array(pbp),
@@ -89,13 +126,11 @@ def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
     for t in range(iters):
         for b in range(nb):
             sl = slice(b * block_n, (b + 1) * block_n)
-            p, v, dmask, lane = _advance_block(
+            p, v, dmask, lane = adv(
                 seed, base_iter + t + 1,
                 jnp.asarray(pos[:, sl]), jnp.asarray(vel[:, sl]),
-                jnp.asarray(pbp[:, sl]), gp, b * block_n,
-                w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-                max_v=max_v, d_real=d_real)
-            fit = _fitness_dmajor(fitness, p, dmask, d_real)
+                jnp.asarray(pbp[:, sl]), gp, b * block_n)
+            fit = fitfn(p, dmask, d_real)
             bf_ = jnp.asarray(pbf[:, sl])
             imp = fit > bf_
             pbf[:, sl] = np.array(jnp.where(imp, fit, bf_))
@@ -120,7 +155,7 @@ def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
 def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                            iters: int, block_n: int, sync_every: int, *,
                            w, c1, c2, min_pos, max_pos, max_v, d_real: int,
-                           fitness: str):
+                           fitness):
     """The async queue-lock kernel's exact semantics, eagerly.
 
     Block-major: block b runs its ENTIRE iteration span (all chunks of
@@ -133,6 +168,9 @@ def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
     """
     dpad, n = pos.shape
     nb = n // block_n
+    fitfn = kernel_fitness(fitness)
+    adv = _advance_fn(fitness, w=w, c1=c1, c2=c2, min_pos=min_pos,
+                      max_pos=max_pos, max_v=max_v, d_real=d_real)
     pos, vel, pbp, pbf, gp = map(jnp.asarray, (pos, vel, pbp, pbf, gp))
     gf = jnp.asarray(gf)
     pos, vel, pbp, pbf = (np.array(pos), np.array(vel), np.array(pbp),
@@ -153,13 +191,11 @@ def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                     lp[b] = gp
                 for tl in range(k):
                     it = base_iter + it_off + c * k + tl + 1
-                    p, v, dmask, lane = _advance_block(
+                    p, v, dmask, lane = adv(
                         seed, it,
                         jnp.asarray(pos[:, sl]), jnp.asarray(vel[:, sl]),
-                        jnp.asarray(pbp[:, sl]), lp[b], b * block_n,
-                        w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-                        max_v=max_v, d_real=d_real)
-                    fit = _fitness_dmajor(fitness, p, dmask, d_real)
+                        jnp.asarray(pbp[:, sl]), lp[b], b * block_n)
+                    fit = fitfn(p, dmask, d_real)
                     bf_ = jnp.asarray(pbf[:, sl])
                     imp = fit > bf_
                     pbf[:, sl] = np.array(jnp.where(imp, fit, bf_))

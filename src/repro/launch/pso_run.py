@@ -8,6 +8,11 @@ entry point.
 --kernel uses the fused Pallas queue-lock kernel (interpret mode on CPU);
 --islands N runs N shard_map islands over the available devices (on a pod,
 particles shard over the data axis; see DESIGN.md §3).
+
+``--fitness`` accepts any problem registered with
+``repro.register_problem`` (the six paper benchmarks ship registered); for
+one-off user objectives use the library facade ``repro.solve`` instead —
+see examples/custom_objective.py.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ import jax
 import numpy as np
 
 from repro.core import ASYNC_SYNC_EVERY, PSOConfig, init_swarm, run
+from repro.core.problem import list_problems
 from repro.core.distributed import (gather_swarm, init_sharded_swarm,
                                     make_distributed_run)
 from repro.runtime import RunnerConfig, StepRunner
@@ -29,7 +35,8 @@ def main():
     ap.add_argument("--dim", type=int, default=120)
     ap.add_argument("--particles", type=int, default=32768)
     ap.add_argument("--iters", type=int, default=1000)
-    ap.add_argument("--fitness", default="cubic")
+    ap.add_argument("--fitness", default="cubic",
+                    help="registered problem name (see repro.list_problems)")
     ap.add_argument("--variant", default="queue",
                     choices=["reduction", "queue", "queue_lock", "async"])
     ap.add_argument("--sync-every", type=int, default=ASYNC_SYNC_EVERY,
@@ -46,6 +53,9 @@ def main():
                     help="checkpoint every N iterations (0=off)")
     args = ap.parse_args()
 
+    if args.fitness not in list_problems():
+        ap.error(f"unknown fitness {args.fitness!r}; registered problems: "
+                 f"{', '.join(list_problems())}")
     cfg = PSOConfig(dim=args.dim, particle_cnt=args.particles,
                     fitness=args.fitness).resolved()
     if args.islands and args.variant == "async":

@@ -5,13 +5,22 @@ A serving deployment receives a stream of independent solve requests —
 different seeds, and different problems. One device dispatch per request
 wastes the accelerator (the cuPSO paper's own motivation, one level up:
 amortize fixed costs across work). This module groups pending requests by
-their *compilation key* ``(dim, particle_cnt, fitness, iters, variant,
-dtype, sync_every)``, pads each group to a bucketed batch size (so the jit
-cache stays small: one compiled program per (key, bucket), not per request
-count), and routes every group through a single ``solve_many`` — or through
-the batched fused Pallas kernels (``run_queue_lock_fused_batch`` /
+their *compilation key* ``(dim, particle_cnt, problem content hash, iters,
+variant, dtype, sync_every)``, pads each group to a bucketed batch size (so
+the jit cache stays small: one compiled program per (key, bucket), not per
+request count), and routes every group through a single ``solve_many`` — or
+through the batched fused Pallas kernels (``run_queue_lock_fused_batch`` /
 ``run_queue_lock_fused_async_batch``) for the ``queue_lock`` and ``async``
 variants with ``backend="kernel"``.
+
+``fitness`` may be a registered problem name or a first-class
+``repro.core.problem.Problem`` (user-defined objective; the kernel backend
+lowers it automatically — see ``repro.kernels.pso_step.dmajor_adapter``).
+The grouping key hashes the problem's CONTENT (objective bytecode + consts
++ bounds + sense, ``Problem.cache_key``), never its name or object
+identity, so two distinct custom objectives can never share a batch even if
+both are called "mine" — and re-submitted identical objectives still batch
+together.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 24 --iters 200
 
@@ -25,12 +34,13 @@ import argparse
 import dataclasses
 import time
 from collections import defaultdict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import ASYNC_SYNC_EVERY, PSOConfig
 from repro.core.multi_swarm import init_batch, solve_many
+from repro.core.problem import Problem, resolve_problem
 
 # Minimum bucket of 8: (a) fewer compiled programs per batch_key, (b) the
 # engine's bit-identity contract is validated for batches >= 8 — XLA CPU
@@ -51,7 +61,7 @@ class SolveRequest:
 
     dim: int = 1
     particle_cnt: int = 1024
-    fitness: str = "cubic"
+    fitness: Union[str, Problem] = "cubic"
     seed: int = 0
     iters: int = 1000
     variant: str = "queue"
@@ -60,8 +70,12 @@ class SolveRequest:
 
     @property
     def batch_key(self) -> Tuple:
-        """Everything that forces a distinct compiled program."""
-        return (self.dim, self.particle_cnt, self.fitness, self.iters,
+        """Everything that forces a distinct compiled program. The problem
+        enters by CONTENT hash (see module docstring), resolving registered
+        names through the registry so a string and its Problem batch
+        together."""
+        return (self.dim, self.particle_cnt,
+                resolve_problem(self.fitness).cache_key(), self.iters,
                 self.variant, self.dtype,
                 self.sync_every if self.variant == "async" else 0)
 
@@ -73,9 +87,16 @@ class SolveRequest:
 @dataclasses.dataclass
 class SolveResult:
     request: SolveRequest
-    gbest_fit: float
+    gbest_fit: float         # canonical (maximized) fitness
     gbest_pos: np.ndarray
     batch_size: int          # padded batch the request rode in
+
+    @property
+    def objective(self) -> float:
+        """The objective value in the problem's OWN sense (a sense="min"
+        problem reports the minimized value)."""
+        return float(resolve_problem(self.request.fitness)
+                     .user_value(self.gbest_fit))
 
 
 @dataclasses.dataclass
