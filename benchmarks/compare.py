@@ -7,12 +7,22 @@ quality-only (e.g. the async_sweep jnp leg) and are compared on their
 derived values informationally, never gated.
 
     python benchmarks/compare.py OLD.json NEW.json [--threshold 0.3]
-        [--warn-only] [--top 20]
+        [--warn-only] [--top 20] [--gate async_sweep/,table3/]
+        [--gate-threshold 0.15]
 
-``--warn-only`` prints the same report but always exits 0 — the CI trend
-step runs in this mode against the committed baseline (ROADMAP: BENCH
-trend tracking), since the baseline may come from different hardware or a
-non-smoke run; the hard gate is reserved for same-machine A/B comparisons.
+``--warn-only`` prints the same report but always exits 0 for the
+non-gated records — the CI trend step runs in this mode against the
+committed baseline, since cross-machine absolute deltas are noisy.
+
+``--gate`` names record prefixes that HARD-FAIL (exit 2) when they
+regress beyond ``--gate-threshold``, even under ``--warn-only`` — the
+promoted gate for the paper-critical records (async_sweep, table3). The
+gate only arms when the two artifacts are comparable: same ``smoke`` mode
+and same ``host`` (recorded in the meta); otherwise it downgrades to a
+warning, because a threshold this tight is only meaningful for
+same-runner A/Bs. CI keeps it armed by auto-refreshing the committed
+baseline from the same job on main (see .github/workflows/ci.yml), so
+after one merge the baseline tracks the CI runner.
 """
 from __future__ import annotations
 
@@ -38,6 +48,13 @@ def main() -> int:
                     help="report but always exit 0")
     ap.add_argument("--top", type=int, default=20,
                     help="show at most this many rows (worst first)")
+    ap.add_argument("--gate", default="",
+                    help="comma-separated record-name prefixes that hard-"
+                         "fail on regression beyond --gate-threshold, even "
+                         "under --warn-only")
+    ap.add_argument("--gate-threshold", type=float, default=0.15,
+                    help="max tolerated fractional regression for --gate "
+                         "records")
     args = ap.parse_args()
 
     old_meta, old = load(args.old)
@@ -73,17 +90,37 @@ def main() -> int:
         print(f"# {len(removed)} removed records: {', '.join(removed[:6])}"
               + (" ..." if len(removed) > 6 else ""))
 
+    rc = 0
     worst = [r for r in rows if r[0] > args.threshold]
     if worst:
         print(f"\n{len(worst)}/{len(rows)} records regressed more than "
               f"{100 * args.threshold:.0f}%")
         if not args.warn_only:
-            return 1
-        print("(warn-only mode: exiting 0)")
+            rc = 1
+        else:
+            print("(warn-only mode: not failing on these)")
     else:
         print(f"\nno record regressed more than "
               f"{100 * args.threshold:.0f}% ({len(rows)} compared)")
-    return 0
+
+    prefixes = [p for p in args.gate.split(",") if p]
+    if prefixes:
+        gated = [r for r in rows
+                 if any(r[1].startswith(p) for p in prefixes)]
+        failed = [r for r in gated if r[0] > args.gate_threshold]
+        comparable = (old_meta.get("smoke") == new_meta.get("smoke")
+                      and old_meta.get("host") == new_meta.get("host")
+                      and old_meta.get("host") is not None)
+        print(f"# gate: {len(gated)} records under {prefixes}, "
+              f"{len(failed)} beyond {100 * args.gate_threshold:.0f}%")
+        if failed:
+            for delta, name, a, b in failed:
+                print(f"# GATED REGRESSION {100 * delta:+.1f}%  {name}")
+            if comparable:
+                return 2
+            print("# (gate disarmed: artifacts differ in smoke mode or "
+                  "host — not a same-runner A/B)")
+    return rc
 
 
 if __name__ == "__main__":

@@ -12,6 +12,9 @@
             sync_every ∈ {1, 4, 16, 64}. Fewer chunk boundaries = fewer
             cross-block synchronization points = fewer grid steps; the
             per-iteration cost must fall monotonically as sync_every grows.
+  islands_ring — distributed exchange cost: the async island ring
+            (neighbor ppermute pushes, core.distributed) vs the barrier
+            ``_pmax_best`` collective at the same exchange cadence.
   custom_objective — Problem-API adapter overhead: a user-written cubic
             lowered by the generic d-major adapter vs the hand-tuned
             kernel form, through the fused queue-lock kernel.
@@ -42,6 +45,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -226,6 +230,52 @@ def async_sweep(smoke=False) -> None:
              gbest_gap_vs_queue_lock=gf_ql - float(st.gbest_fit))
 
 
+def islands_ring(smoke=False) -> None:
+    """Async island ring vs barrier exchange (core.distributed).
+
+    Same island layout and exchange cadence; the sync leg pays the
+    ``_pmax_best`` barrier collective per exchange, the async leg a
+    neighbor-only ring push (plus the run_async local loop). On this
+    container the mesh is 1-device, so absolute numbers measure program
+    overhead rather than network latency — the record exists to track the
+    ring path's cost trajectory and its convergence quality (the final
+    gbest must equal max(pbest): the final-flush invariant).
+    """
+    import jax
+    from repro.core import PSOConfig
+    from repro.core.distributed import init_sharded_swarm, make_distributed_run
+    dim, particles = 8, 2048
+    iters = 64 if smoke else 256
+    exchange = 16
+    cfg = PSOConfig(dim=dim, particle_cnt=particles,
+                    fitness="rastrigin").resolved()
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    s0 = init_sharded_swarm(cfg, 0, mesh)
+    legs = {
+        "barrier": make_distributed_run(cfg, mesh, iters=iters,
+                                        variant="queue",
+                                        exchange_interval=exchange),
+        "ring_async": make_distributed_run(cfg, mesh, iters=iters,
+                                           variant="async",
+                                           exchange_interval=exchange,
+                                           sync_every=8),
+    }
+    tag = f"islands_ring/d{dim}_n{particles}_x{exchange}"
+    times, quality = {}, {}
+    for name, fn in legs.items():
+        quality[name] = float(jax.block_until_ready(fn(s0).gbest_fit))
+    for _ in range(3 if smoke else 6):        # interleaved, keep the min
+        for name, fn in legs.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(s0).gbest_fit)
+            dt = time.perf_counter() - t0
+            times[name] = min(times.get(name, float("inf")), dt)
+    for name in legs:
+        emit(f"{tag}/{name}", 1e6 * times[name] / iters,
+             gbest_fit=quality[name],
+             speedup_vs_barrier=times["barrier"] / times[name])
+
+
 def multi_swarm(smoke=False) -> None:
     """Batched multi-swarm engine vs loop-of-solve (swarms/sec).
 
@@ -332,16 +382,25 @@ def main() -> None:
     table5(args.smoke)
     multi_swarm(args.smoke)
     async_sweep(args.smoke)
+    islands_ring(args.smoke)
     custom_objective(args.smoke)
     if not args.smoke:
         lm_bench()
     if args.out:
+        import platform
         doc = {
             "meta": {
                 "backend": jax.default_backend(),
                 "jax_version": jax.__version__,
                 "pallas_interpret": KERNEL_INTERPRET,
                 "smoke": bool(args.smoke),
+                # recorded so compare.py can tell same-runner A/Bs (where
+                # the hard gate is meaningful) from cross-machine diffs.
+                # BENCH_HOST_ID overrides the hostname for fleets of
+                # interchangeable machines (CI sets it to the runner class:
+                # GitHub-hosted VMs get a fresh hostname per job, which
+                # would otherwise disarm the gate on every run)
+                "host": os.environ.get("BENCH_HOST_ID") or platform.node(),
             },
             "benchmarks": RESULTS,
         }

@@ -21,6 +21,10 @@ per-dimension bounds and min/max sense), or a bare pure-jnp callable.
   variants, jnp everywhere else.
 * ``interpret``: Pallas interpret mode; ``None`` means auto (False only on
   an actual TPU backend).
+* ``islands``/``exchange_interval``: shard the swarm over devices
+  (``repro.core.distributed``) — ``variant="async"`` uses the barrier-free
+  island ring exchange, the synchronous variants the ``_pmax_best``
+  collective.
 
 Results are reported in the problem's OWN sense: for a ``sense="min"``
 problem ``Result.best_fit`` is the minimized objective value (the engine
@@ -49,13 +53,24 @@ def _default_backend() -> str:
 
 @dataclasses.dataclass(frozen=True)
 class Method:
-    """How to run a solve: aggregation variant + execution backend."""
+    """How to run a solve: aggregation variant + execution backend.
+
+    ``islands > 0`` shards the swarm over that many devices
+    (``repro.core.distributed``): particles split into equal islands, each
+    island iterates locally and the global best is exchanged every
+    ``exchange_interval`` iterations — via the barrier collective for the
+    synchronous variants, via the asynchronous neighbor ring for
+    ``variant="async"`` (staleness bound: ``sync_every`` iterations within
+    an island plus ``islands`` exchange rounds across them).
+    """
 
     variant: str = "queue"
     backend: str = "auto"                 # auto | jnp | kernel
     sync_every: int = ASYNC_SYNC_EVERY    # async variant publication interval
     block_n: Optional[int] = None         # kernel particle-block size
     interpret: Optional[bool] = None      # None: False only on real TPU
+    islands: int = 0                      # >0: shard over this many devices
+    exchange_interval: int = 1            # iterations between island syncs
 
     def __post_init__(self):
         if self.variant not in VARIANTS:
@@ -68,6 +83,16 @@ class Method:
             raise ValueError(
                 f"backend='kernel' implements {_KERNEL_VARIANTS}, not "
                 f"{self.variant!r}")
+        if self.islands < 0 or self.exchange_interval < 1:
+            raise ValueError(
+                f"islands={self.islands} must be >= 0 and "
+                f"exchange_interval={self.exchange_interval} >= 1")
+        if self.backend == "kernel" and self.islands and \
+                self.variant == "async":
+            raise ValueError(
+                "async islands run the jnp ring local loop; use "
+                "backend='auto'/'jnp' (the Pallas async kernel has no "
+                "multi-device ring yet)")
 
     def resolve_backend(self) -> str:
         if self.backend != "auto":
@@ -153,10 +178,40 @@ def solve(problem: Union[str, Problem], *,
                      interpret)
     cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
                        min_pos, max_pos, max_v)
-    state = init_swarm(cfg, seed)
-    state = _run_state(cfg, state, iters, m)
+    if m.islands:
+        state = _run_islands(cfg, seed, iters, m)
+    else:
+        state = init_swarm(cfg, seed)
+        state = _run_state(cfg, state, iters, m)
     return Result(problem=prob, config=cfg, method=m, iters=iters,
                   state=state)
+
+
+def _run_islands(cfg: PSOConfig, seed: int, iters: int, m: Method
+                 ) -> SwarmState:
+    """The sharded path: init + run over an ``m.islands``-device mesh."""
+    import jax
+    import numpy as _np
+    from jax.sharding import Mesh
+    from repro.core.distributed import (init_sharded_swarm,
+                                        make_distributed_run)
+    devs = jax.devices()
+    if m.islands > len(devs):
+        raise ValueError(
+            f"islands={m.islands} exceeds the {len(devs)} available "
+            f"device(s)")
+    mesh = Mesh(_np.asarray(devs[:m.islands]), ("data",))
+    local_step = None
+    if m.variant != "async" and m.resolve_backend() == "kernel":
+        from repro.kernels.ops import make_fused_local_step
+        local_step = make_fused_local_step(
+            block_n=m.block_n, interpret=m.resolve_interpret())
+    state = init_sharded_swarm(cfg, seed, mesh)
+    runner = make_distributed_run(
+        cfg, mesh, iters=iters, variant=m.variant,
+        exchange_interval=m.exchange_interval, local_step_fn=local_step,
+        sync_every=m.sync_every)
+    return runner(state)
 
 
 def _run_state(cfg: PSOConfig, state: SwarmState, iters: int,
@@ -194,6 +249,9 @@ def solve_many(problem: Union[str, Problem], seeds: Sequence[int], *,
     prob = resolve_problem(problem)
     m = _make_method(method, variant, backend, sync_every, block_n,
                      interpret)
+    if m.islands:
+        raise ValueError("islands shard ONE swarm over devices; use solve()"
+                         " — solve_many batches independent swarms instead")
     cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
                        min_pos, max_pos, max_v)
     batch = init_batch(cfg, np.asarray(seeds, dtype=np.int64))

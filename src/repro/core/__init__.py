@@ -5,11 +5,12 @@ from .fitness import (BUILTIN_PROBLEMS, FITNESS_FNS, FITNESS_IDS,
 from .problem import (Problem, get_problem, list_problems, register_problem,
                       resolve_problem)
 from .pso import (ASYNC_SYNC_EVERY, PSOConfig, SwarmState, STEP_FNS,
-                  VARIANTS, init_async_locals, init_swarm,
-                  publish_async_locals, run, run_async, solve, step_async,
-                  step_queue, step_queue_lock, step_reduction)
-from .multi_swarm import (SwarmBatch, batch_row, best_of_batch, init_batch,
-                          run_many, solve_many, stack_states)
+                  VARIANTS, flush_async_locals, init_async_locals,
+                  init_swarm, publish_async_locals, run, run_async, solve,
+                  step_async, step_queue, step_queue_lock, step_reduction)
+from .multi_swarm import (MIN_VALIDATED_SWARMS, SwarmBatch, batch_row,
+                          best_of_batch, init_batch, run_many, solve_many,
+                          stack_states)
 from .serial import SerialSwarm, run_serial_fast
 from .topology import (best_of_swarms, init_multi_swarm, run_multi_swarm,
                        run_ring, step_ring)
@@ -22,10 +23,10 @@ __all__ = [
     "resolve_problem", "LANE", "pick_block_n",
     "PSOConfig", "SwarmState", "STEP_FNS", "VARIANTS", "ASYNC_SYNC_EVERY",
     "init_swarm", "run", "solve", "run_async", "step_async",
-    "init_async_locals", "publish_async_locals",
+    "init_async_locals", "publish_async_locals", "flush_async_locals",
     "step_queue", "step_queue_lock", "step_reduction",
     "SwarmBatch", "init_batch", "batch_row", "stack_states", "run_many",
-    "solve_many", "best_of_batch",
+    "solve_many", "best_of_batch", "MIN_VALIDATED_SWARMS",
     "SerialSwarm", "run_serial_fast",
     "run_ring", "step_ring", "init_multi_swarm", "run_multi_swarm",
     "best_of_swarms",

@@ -22,15 +22,22 @@ standalone ``solve(cfg, seeds[s])`` — batching is a pure scheduling
 transform, never a semantic one. This is asserted exactly (``==`` on
 float bits) in tests/test_multi_swarm.py.
 
-Caveat (CPU backend): XLA:CPU chooses vectorization + FMA contraction per
-compiled shape, and for a few tiny odd batch sizes (observed: S=4) the
-batched program can round an element-wise chain one ulp differently from
-the standalone program, which chaotic PSO dynamics then amplify. The
-serving layer (``repro.launch.serve``) therefore pads request batches to
-bucket sizes >= 8, where the identity is validated. This also constrains
-step-function design: a ``lax.cond`` carrying an [N, D] branch output
-changes XLA's fusion clustering enough to break the identity at *every*
-batch size (see ``step_queue_lock``).
+Caveat (CPU backend): XLA:CPU chooses loop-body fusion + FMA contraction
+per compiled shape, and for a few tiny batch shapes the batched program
+rounds the velocity chain one ulp differently from the standalone program,
+which chaotic PSO dynamics then amplify. Root cause (isolated at S=4,
+dim=3, n=64, sphere): ``vel`` diverges on the SECOND iteration inside one
+``fori_loop`` program while separate per-iteration dispatches stay
+bit-identical — i.e. the in-loop fusion, not the vmapped step, makes the
+shape-dependent contraction choice; and pinning the loop carry with
+``optimization_barrier`` merely moves the anomaly to other shapes (S=3).
+The pin therefore lives at the dispatch level: ``run_many`` pads batches
+smaller than ``MIN_VALIDATED_SWARMS`` (= 8) with dead rows and slices the
+result back, so every dispatch runs a validated program shape and the
+serving layer buckets at 4 again. This also constrains step-function
+design: a ``lax.cond`` carrying an [N, D] branch output changes XLA's
+fusion clustering enough to break the identity at *every* batch size (see
+``step_queue_lock``).
 
 Per-swarm hyper-parameters
 --------------------------
@@ -80,6 +87,8 @@ class SwarmBatch(NamedTuple):
     gbest_fit: Array  # [S]
     iteration: Array  # [S] int32
     seed: Array       # [S] uint32
+    lbest_pos: Optional[Array] = None  # [S, nb, D] async block-local bests
+    lbest_fit: Optional[Array] = None  # [S, nb]
 
     @property
     def swarm_cnt(self) -> int:
@@ -145,6 +154,27 @@ def _run_many_stepped(cfg: PSOConfig, batch: SwarmBatch, iters: int,
     return jax.lax.fori_loop(0, iters, body, batch)
 
 
+# Smallest batch row count whose compiled program is covered by the
+# row-bit-identity validation. XLA:CPU picks loop-body fusion (and with it
+# FMA contraction of the velocity chain) per compiled batch shape; for a few
+# tiny batches the choice rounds 1 ulp differently from the standalone
+# program (root-caused at S=4, dim=3, n=64, sphere: `vel` diverges on the
+# second in-loop iteration while separate per-iteration dispatches match).
+# Rather than chase codegen across every tiny shape, sub-validated batches
+# ride the smallest validated shape with dead rows (sliced off afterwards),
+# which also keeps the jit cache to one program for all S < 8.
+MIN_VALIDATED_SWARMS = 8
+
+
+def _pad_rows(batch: SwarmBatch, target: int) -> SwarmBatch:
+    """Pad a batch to ``target`` rows by replicating row 0 (dead rows)."""
+    k = target - batch.swarm_cnt
+    return SwarmBatch(*jax.tree_util.tree_map(
+        lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (k,) + a.shape[1:])]),
+        tuple(batch)))
+
+
 def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
              variant: str = "queue",
              coeffs: Optional[Tuple[Array, Array, Array]] = None,
@@ -159,10 +189,33 @@ def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
     scheduling transform and per-row bit-identity holds like the others.
     A thin dispatcher over the jitted implementations, so synchronous
     variants never key their jit cache on the (irrelevant) ``sync_every``.
+
+    Batches smaller than ``MIN_VALIDATED_SWARMS`` are padded to it with
+    dead rows and sliced back, so every dispatch runs a program shape whose
+    row-bit-identity is validated (see the constant's comment — the S=4
+    XLA:CPU contraction anomaly), and the serving layer can bucket at 4
+    again.
     """
     cfg = cfg.resolved()
+    s_cnt = batch.swarm_cnt
+    if s_cnt < MIN_VALIDATED_SWARMS:
+        pad = MIN_VALIDATED_SWARMS
+        batch = _pad_rows(batch, pad)
+        if coeffs is not None:
+            coeffs = tuple(
+                jnp.concatenate([jnp.asarray(c),
+                                 jnp.broadcast_to(jnp.asarray(c)[:1],
+                                                  (pad - s_cnt,))])
+                for c in coeffs)
+        out = run_many(cfg, batch, iters, variant, coeffs, sync_every)
+        return SwarmBatch(*jax.tree_util.tree_map(lambda a: a[:s_cnt],
+                                                  tuple(out)))
     if variant == "async":
         return _run_many_async(cfg, batch, iters, sync_every, coeffs)
+    if batch.lbest_fit is not None:
+        # mirror run(): sync variants advance gbest without maintaining the
+        # async block-local cache — drop it so a later async run re-seeds
+        batch = batch._replace(lbest_pos=None, lbest_fit=None)
     return _run_many_stepped(cfg, batch, iters, variant, coeffs)
 
 

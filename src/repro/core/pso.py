@@ -127,7 +127,15 @@ class PSOConfig:
 
 
 class SwarmState(NamedTuple):
-    """Full swarm state — everything needed to checkpoint/resume/reshard."""
+    """Full swarm state — everything needed to checkpoint/resume/reshard.
+
+    ``lbest_pos``/``lbest_fit`` are the async variant's block-local bests
+    (one slot per particle block; the Pallas async kernel's side buffers,
+    surfaced at the library level). They default to ``None`` — synchronous
+    variants never materialize them — and ride the pytree when present, so
+    a checkpoint taken mid-async-run carries the blocks' local knowledge
+    and resume does not restart the staleness window (see ``run_async``).
+    """
 
     pos: Array        # [N, D]
     vel: Array        # [N, D]
@@ -138,6 +146,8 @@ class SwarmState(NamedTuple):
     gbest_fit: Array  # []
     iteration: Array  # [] int32 — RNG counter component
     seed: Array       # [] uint32
+    lbest_pos: Optional[Array] = None  # [nb, D] async block-local bests
+    lbest_fit: Optional[Array] = None  # [nb]
 
 
 # RNG stream ids (keep in sync with kernels/pso_step.py).
@@ -344,7 +354,8 @@ def init_async_locals(state: SwarmState, n_blocks: int
 
 def step_async(cfg: PSOConfig, s: SwarmState,
                local: Tuple[Array, Array],
-               coeffs: Optional[Tuple[Array, Array, Array]] = None
+               coeffs: Optional[Tuple[Array, Array, Array]] = None,
+               index_offset=None
                ) -> Tuple[SwarmState, Tuple[Array, Array]]:
     """One ASYNC queue-lock iteration (paper's enhanced variant, §4.2).
 
@@ -355,13 +366,21 @@ def step_async(cfg: PSOConfig, s: SwarmState,
     ``publish_async_locals`` syncs them, which ``run_async`` does every
     ``sync_every`` iterations. Deliberately cond-free (pure where/argmax)
     so it vmaps over a swarm axis without changing semantics.
+
+    ``index_offset`` (optional, may be traced — e.g. ``axis_index * local_n``
+    under shard_map) shifts the particle RNG indices so a shard owning
+    particles [off, off+n) draws exactly the slice of the monolithic swarm's
+    random stream (the ``init_swarm`` sharding convention). ``None`` keeps
+    the exact pre-existing single-chip trace.
     """
     lbp, lbf = local
     n, d = s.pos.shape
     nb = lbf.shape[0]
     bn = n // nb
     gb = jnp.repeat(lbp, bn, axis=0)              # particle -> its block best
-    pos, vel, fit = _advance(cfg, s, coeffs=coeffs, gbest_pos=gb)
+    pos, vel, fit = _advance(cfg, s, coeffs=coeffs, gbest_pos=gb,
+                             index_offset=(0 if index_offset is None
+                                           else index_offset))
     pbest_pos, pbest_fit = _update_pbest(s, pos, fit)
     fb = fit.reshape(nb, bn)
     bi = jnp.argmax(fb, axis=1)                   # per-block iteration winner
@@ -380,13 +399,25 @@ def publish_async_locals(s: SwarmState, local: Tuple[Array, Array]
     """The sync point: publish the best local into the shared gbest, then
     pull the (new) shared gbest back into every block's local. After this,
     every block sees the true swarm-wide best — staleness resets to zero."""
+    s, (lbp, lbf) = flush_async_locals(s, local)
+    lbf = jnp.broadcast_to(s.gbest_fit, lbf.shape)
+    lbp = jnp.broadcast_to(s.gbest_pos[None, :], lbp.shape)
+    return s, (lbp, lbf)
+
+
+def flush_async_locals(s: SwarmState, local: Tuple[Array, Array]
+                       ) -> Tuple[SwarmState, Tuple[Array, Array]]:
+    """Publish-only half of a sync: fold the best block-local into the
+    shared gbest WITHOUT pulling it back into the blocks. Used for the
+    forced end-of-call flush at a non-scheduled boundary: the returned
+    state satisfies ``gbest_fit == max(pbest_fit)``, while the untouched
+    locals let a resumed run continue each block exactly where it left off
+    instead of restarting the staleness window."""
     lbp, lbf = local
     b = jnp.argmax(lbf)
     take = lbf[b] > s.gbest_fit
     gf = jnp.where(take, lbf[b], s.gbest_fit)
     gp = jnp.where(take, lbp[b], s.gbest_pos)
-    lbf = jnp.broadcast_to(gf, lbf.shape)
-    lbp = jnp.broadcast_to(gp[None, :], lbp.shape)
     return s._replace(gbest_pos=gp, gbest_fit=gf), (lbp, lbf)
 
 
@@ -399,13 +430,11 @@ def _default_async_blocks(n: int, target: int = 512) -> int:
     return default_block_count(n, target)
 
 
-@partial(jax.jit,
-         static_argnames=("cfg", "iters", "sync_every", "n_blocks"))
 def run_async(cfg: PSOConfig, state: SwarmState, iters: int,
               sync_every: int = ASYNC_SYNC_EVERY,
               n_blocks: Optional[int] = None,
-              coeffs: Optional[Tuple[Array, Array, Array]] = None
-              ) -> SwarmState:
+              coeffs: Optional[Tuple[Array, Array, Array]] = None,
+              phase: Optional[int] = None, index_offset=None) -> SwarmState:
     """``iters`` iterations of relaxed-consistency async PSO (jnp fallback).
 
     The library-level mirror of the Pallas async queue-lock: particle
@@ -416,34 +445,87 @@ def run_async(cfg: PSOConfig, state: SwarmState, iters: int,
     equals ``max(pbest_fit)`` exactly. With ``sync_every=1`` every
     iteration syncs — the synchronous queue-lock semantics as a special
     case. vmap-clean (no lax.cond anywhere) for ``multi_swarm.solve_many``.
+
+    Checkpoint/resume: the returned state carries the block-local bests
+    (``lbest_pos``/``lbest_fit``); a new call whose state carries them (with
+    a matching block count) resumes from them instead of re-seeding from
+    the shared gbest, and the end-of-call flush at a non-sync-aligned
+    boundary publishes WITHOUT resetting them (``flush_async_locals``), so
+    splitting a run across calls at sync points is bit-identical to the
+    uninterrupted run (tests/test_checkpoint.py). ``phase`` is the resume
+    point's offset into the staleness window (``iteration % sync_every``,
+    static): sync points stay aligned to absolute iteration numbers, so
+    even a mid-window split keeps the uninterrupted publication schedule.
+
+    ``index_offset`` (optional, traced) shifts particle RNG indices for
+    sharded swarms — see ``step_async``.
     """
+    if phase is None:
+        # Auto-align to the absolute iteration count when it is concrete
+        # (the host-side resume path); under a trace (vmap'd batch engine)
+        # fall back to 0 — the historical relative-window behavior.
+        try:
+            phase = int(state.iteration) % max(1, sync_every)
+        except (TypeError, jax.errors.ConcretizationTypeError,
+                jax.errors.TracerIntegerConversionError):
+            phase = 0
+    return _run_async(cfg, state, iters, sync_every, n_blocks, coeffs,
+                      phase, index_offset)
+
+
+@partial(jax.jit,
+         static_argnames=("cfg", "iters", "sync_every", "n_blocks", "phase"))
+def _run_async(cfg: PSOConfig, state: SwarmState, iters: int,
+               sync_every: int, n_blocks: Optional[int],
+               coeffs, phase: int, index_offset) -> SwarmState:
     cfg = cfg.resolved()
     n, _ = state.pos.shape
     nb = n_blocks or _default_async_blocks(n)
     if n % nb:
         raise ValueError(f"n_blocks={nb} does not divide particle_cnt={n}")
-    sync_every = max(1, min(sync_every, iters)) if iters else 1
-    local = init_async_locals(state, nb)
+    if iters <= 0:
+        return state
+    sync_every = max(1, sync_every)
+    phase = phase % sync_every
+    carried = (state.lbest_fit is not None
+               and state.lbest_fit.shape == (nb,))
+    local = ((state.lbest_pos, state.lbest_fit) if carried
+             else init_async_locals(state, nb))
+    state = state._replace(lbest_pos=None, lbest_fit=None)
 
     def one(carry):
         s, local = carry
-        return step_async(cfg, s, local, coeffs=coeffs)
+        return step_async(cfg, s, local, coeffs=coeffs,
+                          index_offset=index_offset)
 
-    def chunk(span):
+    def chunk(span, publish=publish_async_locals):
         def body(_, carry):
             s, local = carry
             s, local = jax.lax.fori_loop(
                 0, span, lambda _, c: one(c), (s, local))
-            return publish_async_locals(s, local)
+            return publish(s, local)
         return body
 
-    chunks, rem = divmod(iters, sync_every)
+    # Segment the run so publish points land on absolute iteration numbers
+    # ≡ 0 (mod sync_every): an optional head chunk completes the window the
+    # resume point interrupted, full chunks follow, and a trailing remainder
+    # flushes publish-only (no pull — see flush_async_locals).
+    if phase:
+        head = min(iters, sync_every - phase)
+        chunks, rem = divmod(iters - head, sync_every)
+    else:
+        head, (chunks, rem) = 0, divmod(iters, sync_every)
     carry = (state, local)
+    if head:
+        scheduled = head == sync_every - phase
+        carry = chunk(head, publish_async_locals if scheduled
+                      else flush_async_locals)(0, carry)
     if chunks:
         carry = jax.lax.fori_loop(0, chunks, chunk(sync_every), carry)
     if rem:
-        carry = chunk(rem)(0, carry)
-    return carry[0]
+        carry = chunk(rem, flush_async_locals)(0, carry)
+    s, (lbp, lbf) = carry
+    return s._replace(lbest_pos=lbp, lbest_fit=lbf)
 
 
 @partial(jax.jit, static_argnames=("cfg", "iters", "variant"))
@@ -465,6 +547,10 @@ def run(cfg: PSOConfig, state: SwarmState, iters: int,
     cfg = cfg.resolved()
     if variant == "async":
         return run_async(cfg, state, iters, sync_every=sync_every)
+    if state.lbest_fit is not None:
+        # Sync variants advance gbest without maintaining the async
+        # block-local cache; drop it so a later async run re-seeds fresh.
+        state = state._replace(lbest_pos=None, lbest_fit=None)
     return _run_stepped(cfg, state, iters, variant)
 
 

@@ -67,7 +67,10 @@ def kernel_to_state(s: SwarmState, d: int, pos, vel, pbp, pbf, gp, gf,
         fit=pbf[0],  # NOTE: kernels do not retain raw fit; pbest_fit ≥ fit
         pbest_pos=unpack_dmajor(pbp, d), pbest_fit=pbf[0],
         gbest_pos=gp[:d, 0], gbest_fit=gf[0],
-        iteration=s.iteration + iters)
+        iteration=s.iteration + iters,
+        # sync kernels invalidate any async block-local cache; the async
+        # wrapper re-attaches its (externalized) buffers afterwards
+        lbest_pos=None, lbest_fit=None)
 
 
 @functools.partial(jax.jit,
@@ -167,7 +170,8 @@ def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
         fit=pbf,  # kernels do not retain raw fit; pbest_fit >= fit
         pbest_pos=unpack_dmajor_batch(pbp, s_cnt, d), pbest_fit=pbf,
         gbest_pos=gp[:d].T, gbest_fit=gf,
-        iteration=batch.iteration + iters)
+        iteration=batch.iteration + iters,
+        lbest_pos=None, lbest_fit=None)
 
 
 def _async_spans(iters: int, sync_every: int):
@@ -217,15 +221,22 @@ def run_queue_lock_fused_async(cfg: PSOConfig, s: SwarmState, iters: int,
     bn = block_n or pick_block_n(n)
     nb = n // bn
     scal, pos, vel, pbp, pbf, gp, gf = state_to_kernel(s, d)
-    lp = jnp.tile(gp, (1, nb))                 # local bests seeded from gbest
-    lf = jnp.tile(gf, nb)
+    if s.lbest_fit is not None and s.lbest_fit.shape == (nb,):
+        # resume the externalized block-local bests (checkpoint/resume
+        # keeps the staleness window instead of restarting it)
+        lp = pack_dmajor(s.lbest_pos, d)
+        lf = s.lbest_fit
+    else:
+        lp = jnp.tile(gp, (1, nb))             # local bests seeded from gbest
+        lf = jnp.tile(gf, nb)
     for off, span, chunk in _async_spans(iters, sync_every):
         call = fused_async_call(n, d, span, bn, chunk, s.pos.dtype,
                                 interpret=interpret, **_cfg_kwargs(cfg))
         pos, vel, pbp, pbf, gp, gf, lp, lf = call(
             scal + jnp.array([0, off], jnp.int32),
             pos, vel, pbp, pbf, gp, gf, lp, lf)
-    return kernel_to_state(s, d, pos, vel, pbp, pbf, gp, gf, iters)
+    out = kernel_to_state(s, d, pos, vel, pbp, pbf, gp, gf, iters)
+    return out._replace(lbest_pos=unpack_dmajor(lp, d), lbest_fit=lf)
 
 
 @functools.partial(jax.jit,
@@ -256,8 +267,12 @@ def run_queue_lock_fused_async_batch(cfg: PSOConfig, batch: SwarmBatch,
     gp = jnp.zeros((pad_dim(d), s_cnt), batch.pos.dtype).at[:d].set(
         batch.gbest_pos.T)
     gf = batch.gbest_fit
-    lp = jnp.repeat(gp, nb, axis=1)            # [Dpad, S*nb], swarm-major
-    lf = jnp.repeat(gf, nb)
+    if batch.lbest_fit is not None and batch.lbest_fit.shape == (s_cnt, nb):
+        lp = pack_dmajor(batch.lbest_pos.reshape(s_cnt * nb, d), d)
+        lf = batch.lbest_fit.reshape(s_cnt * nb)
+    else:
+        lp = jnp.repeat(gp, nb, axis=1)        # [Dpad, S*nb], swarm-major
+        lf = jnp.repeat(gf, nb)
     for off, span, chunk in _async_spans(iters, sync_every):
         call = fused_async_batch_call(s_cnt, n, d, span, bn, chunk,
                                       batch.pos.dtype, interpret=interpret,
@@ -271,7 +286,9 @@ def run_queue_lock_fused_async_batch(cfg: PSOConfig, batch: SwarmBatch,
         fit=pbf,  # kernels do not retain raw fit; pbest_fit >= fit
         pbest_pos=unpack_dmajor_batch(pbp, s_cnt, d), pbest_fit=pbf,
         gbest_pos=gp[:d].T, gbest_fit=gf,
-        iteration=batch.iteration + iters)
+        iteration=batch.iteration + iters,
+        lbest_pos=unpack_dmajor(lp, d).reshape(s_cnt, nb, d),
+        lbest_fit=lf.reshape(s_cnt, nb))
 
 
 def make_fused_local_step(iters_per_call: int = 1, block_n=None,

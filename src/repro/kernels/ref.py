@@ -29,6 +29,96 @@ from .pso_step import (_advance_block, _pin, is_converted, kernel_fitness,
                        pad_dim)
 
 
+def run_islands_ring_oracle(cfg, seed: int, n_shards: int, iters: int,
+                            exchange_interval: int,
+                            sync_every: int = 8, n_blocks=None):
+    """Eager oracle for the async island ring in ``repro.core.distributed``.
+
+    Simulates ``n_shards`` islands as explicit per-island SwarmStates (the
+    ``init_swarm(index_offset)`` sharding convention) and runs, per exchange
+    round, the island-local ``run_async`` loop followed by one Python-level
+    ring hop with the exact ``ring_exchange`` fold semantics (strict-
+    improvement predicate, lowest-owner tie-break, NaN-as--inf) and the
+    local-best pull, then the ``n_shards - 1`` drain hops. With one shard
+    the whole thing reduces to ``run_async`` on the monolithic swarm —
+    bit-identically, since the self-hop fold and pull are exact no-ops.
+
+    Returns ``(islands, history)``: the final per-island states, and one
+    ``[(gbest_fit, owner), ...]`` snapshot per exchange round (taken after
+    the hop), from which tests assert the staleness bound — any island's
+    round-r best is visible on island ``(i + d) % n_shards`` by round
+    ``r + d``, i.e. everywhere within ``n_shards`` rounds — and the
+    final-flush invariant (every island's gbest equals the max over all
+    pbests after the drain).
+    """
+    from repro.core.blocking import default_block_count
+    from repro.core.pso import init_swarm, run_async
+
+    cfg = cfg.resolved()
+    if cfg.particle_cnt % n_shards:
+        raise ValueError("particle_cnt not divisible by n_shards")
+    local_n = cfg.particle_cnt // n_shards
+    nb = n_blocks or default_block_count(local_n)
+    sync_eff = min(sync_every, exchange_interval)
+    if exchange_interval % sync_eff:
+        raise ValueError("sync_every must divide exchange_interval")
+
+    islands = [init_swarm(cfg, seed, n=local_n, index_offset=i * local_n)
+               for i in range(n_shards)]
+    # init-time reconcile (init_sharded_swarm's _pmax_best): lowest-index
+    # winner of the max init fit owns the shared starting gbest.
+    fits = [float(s.gbest_fit) for s in islands]
+    best = max(f for f in fits if not np.isnan(f)) if any(
+        not np.isnan(f) for f in fits) else -np.inf
+    win = min(i for i, f in enumerate(fits)
+              if (not np.isnan(f)) and f >= best) if best > -np.inf else 0
+    islands = [s._replace(gbest_fit=islands[win].gbest_fit,
+                          gbest_pos=islands[win].gbest_pos)
+               for s in islands]
+    owners = list(range(n_shards))
+
+    def hop(islands, owners):
+        snap = [(jnp.where(jnp.isnan(s.gbest_fit), -jnp.inf, s.gbest_fit),
+                 s.gbest_pos, owners[i]) for i, s in enumerate(islands)]
+        out, own_out = [], []
+        for i, s in enumerate(islands):
+            rf, rp, ro = snap[(i - 1) % n_shards]
+            gf, gp, own = snap[i][0], s.gbest_pos, owners[i]
+            better = bool(rf > gf) or (bool(rf == gf) and ro < own)
+            if better:
+                gf, gp, own = rf, rp, ro
+            lbf, lbp = s.lbest_fit, s.lbest_pos
+            if lbf is not None:
+                take = gf > lbf
+                lbf = jnp.where(take, gf, lbf)
+                lbp = jnp.where(take[:, None], gp[None, :], lbp)
+            out.append(s._replace(gbest_fit=jnp.asarray(gf), gbest_pos=gp,
+                                  lbest_fit=lbf, lbest_pos=lbp))
+            own_out.append(own)
+        return out, own_out
+
+    rounds, rem = divmod(iters, exchange_interval)
+    spans = [exchange_interval] * rounds + ([rem] if rem else [])
+    history = []
+    for k in spans:
+        nxt = []
+        for i, s in enumerate(islands):
+            prev = float(s.gbest_fit)
+            s = run_async(cfg, s, k, sync_every=sync_eff, n_blocks=nb,
+                          phase=0, index_offset=i * local_n)
+            if float(s.gbest_fit) > prev:
+                owners[i] = i
+            nxt.append(s)
+        islands, owners = hop(nxt, owners)
+        history.append([(float(s.gbest_fit), owners[i])
+                        for i, s in enumerate(islands)])
+    for _ in range(n_shards - 1):
+        islands, owners = hop(islands, owners)
+        history.append([(float(s.gbest_fit), owners[i])
+                        for i, s in enumerate(islands)])
+    return islands, history
+
+
 def _advance_fn(fitness, **kw):
     """The oracles' advance step.
 

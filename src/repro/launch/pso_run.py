@@ -6,8 +6,13 @@ entry point.
         --islands 8 --exchange 50 --ckpt-dir /tmp/pso_ckpt
 
 --kernel uses the fused Pallas queue-lock kernel (interpret mode on CPU);
---islands N runs N shard_map islands over the available devices (on a pod,
-particles shard over the data axis; see DESIGN.md §3).
+--islands N runs N shard_map islands over the first N available devices
+(on a pod, particles shard over the data axis; see DESIGN.md §3).
+``--islands N --variant async`` runs the asynchronous island ring: no
+barrier collective at all — islands exchange their best over a neighbor
+ring every --exchange iterations, with the documented staleness bound of
+--sync-every iterations within an island plus N exchange rounds across
+islands (core/distributed.py).
 
 ``--fitness`` accepts any problem registered with
 ``repro.register_problem`` (the six paper benchmarks ship registered); for
@@ -58,19 +63,25 @@ def main():
                  f"{', '.join(list_problems())}")
     cfg = PSOConfig(dim=args.dim, particle_cnt=args.particles,
                     fitness=args.fitness).resolved()
-    if args.islands and args.variant == "async":
-        # follow-on tracked in ROADMAP: async gbest exchange needs a
-        # relaxed multi-device ring in core/distributed.py
-        ap.error("--variant async does not support --islands yet")
     if args.kernel and not args.islands and args.variant not in (
             "queue_lock", "async"):
         # only the fused queue-lock kernels exist; don't silently run
         # queue_lock semantics under a reduction/queue label
         ap.error(f"--kernel implements queue_lock/async, not "
                  f"{args.variant!r}")
+    if args.kernel and args.islands and args.variant == "async":
+        # the async island ring runs the jnp local loop (ROADMAP: Pallas
+        # async kernel + ring composition is a TPU-hardware follow-on)
+        ap.error("--kernel --islands does not support --variant async; "
+                 "drop --kernel (the ring uses the jnp async local loop)")
     t0 = time.time()
     if args.islands:
-        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        devs = jax.devices()
+        if args.islands > len(devs):
+            ap.error(f"--islands {args.islands} exceeds the {len(devs)} "
+                     f"available device(s)")
+        from jax.sharding import Mesh
+        mesh = Mesh(np.asarray(devs[:args.islands]), ("data",))
         state = init_sharded_swarm(cfg, args.seed, mesh)
         local_step = None
         if args.kernel:
@@ -78,7 +89,8 @@ def main():
             local_step = make_fused_local_step(iters_per_call=1)
         runner = make_distributed_run(
             cfg, mesh, iters=args.iters, variant=args.variant,
-            exchange_interval=args.exchange, local_step_fn=local_step)
+            exchange_interval=args.exchange, local_step_fn=local_step,
+            sync_every=args.sync_every)
         state = runner(state)
     else:
         state = init_swarm(cfg, args.seed)

@@ -42,11 +42,15 @@ from repro.core import ASYNC_SYNC_EVERY, PSOConfig
 from repro.core.multi_swarm import init_batch, solve_many
 from repro.core.problem import Problem, resolve_problem
 
-# Minimum bucket of 8: (a) fewer compiled programs per batch_key, (b) the
-# engine's bit-identity contract is validated for batches >= 8 — XLA CPU
-# picks shape-dependent vectorization/FMA contraction for tiny odd batches
-# (observed at S=4) that can perturb trajectories by 1 ulp/iteration.
-BUCKETS = (8, 16, 32, 64, 128)
+# Minimum bucket restored to 4: the S=4 row-bit-identity anomaly (XLA:CPU
+# loop-body fusion FMA-contracts the velocity chain 1 ulp differently for a
+# few tiny batch shapes — root-caused at S=4/dim=3/n=64) is pinned at the
+# engine level: ``repro.core.multi_swarm.run_many`` runs sub-8 batches on
+# the smallest VALIDATED program shape with dead rows
+# (MIN_VALIDATED_SWARMS), so a bucket-4 dispatch is row-bit-identical to
+# the standalone solve again (tests/test_multi_swarm.py regression test).
+_MIN_BUCKET = 4
+BUCKETS = (_MIN_BUCKET, 8, 16, 32, 64, 128)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,9 +132,6 @@ class SolveServer:
         if backend not in ("jnp", "kernel"):
             raise ValueError(f"unknown backend {backend!r}")
         if max_batch < BUCKETS[0]:
-            # sub-8 dispatches land exactly in the regime where XLA:CPU
-            # batch-shape codegen breaks the bit-identity contract (see
-            # module docstring / core.multi_swarm)
             raise ValueError(
                 f"max_batch={max_batch} < minimum bucket {BUCKETS[0]}")
         self.max_batch = max_batch

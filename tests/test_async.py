@@ -250,6 +250,42 @@ def test_sync_every_is_part_of_compile_key_for_async_only():
     assert c.batch_key == d.batch_key
 
 
+def test_async_kernel_externalizes_and_resumes_local_bests():
+    """The async kernel wrappers surface the block-local best buffers in
+    SwarmState.lbest_* and resume from them, so a chunked kernel run keeps
+    the staleness window across calls (checkpoint/resume parity with the
+    jnp path). In the single-block regime this must stay bit-identical to
+    one long call (the call-split-invariant schedule)."""
+    cfg = PSOConfig(dim=5, particle_cnt=128, fitness="cubic")
+    s = init_swarm(cfg, 11)
+    a = ops.run_queue_lock_fused_async(cfg, s, iters=4, sync_every=2,
+                                       block_n=128)
+    assert a.lbest_fit is not None and a.lbest_fit.shape == (1,)
+    assert a.lbest_pos.shape == (1, 5)
+    b = ops.run_queue_lock_fused_async(cfg, a, iters=4, sync_every=2,
+                                       block_n=128)
+    one = ops.run_queue_lock_fused_async(cfg, s, iters=8, sync_every=2,
+                                         block_n=128)
+    for name in ("pos", "vel", "pbest_fit", "gbest_pos", "gbest_fit",
+                 "lbest_pos", "lbest_fit"):
+        np.testing.assert_array_equal(np.asarray(getattr(b, name)),
+                                      np.asarray(getattr(one, name)),
+                                      err_msg=name)
+    # multi-block: the buffers match what the eager oracle tracks
+    cfg2 = PSOConfig(dim=2, particle_cnt=256, fitness="cubic").resolved()
+    s2 = init_swarm(cfg2, 42)
+    out = ops.run_queue_lock_fused_async(cfg2, s2, iters=8, sync_every=4,
+                                         block_n=64)
+    scal, pos, vel, pbp, pbf, gp, gf = ops.state_to_kernel(s2, 2)
+    kw = _oracle_kwargs(cfg2, 2)
+    fitness = kw.pop("fitness")
+    o = ref.run_fused_async_oracle(
+        int(s2.seed), int(s2.iteration), pos, vel, pbp, pbf, gp,
+        float(gf[0]), 8, 64, 4, fitness=fitness, **kw)
+    np.testing.assert_allclose(np.asarray(out.lbest_fit),
+                               np.asarray(o[7]), rtol=1e-4, atol=1e-3)
+
+
 def test_async_kernel_degenerate_inputs_clamp_like_jnp():
     """sync_every <= 0 / > iters and iters == 0 must not crash the kernel
     wrapper (clamped exactly like run_async)."""

@@ -79,6 +79,58 @@ def test_pso_crash_restart_bit_exact(tmp_path):
     assert float(full.gbest_fit) == float(resumed.gbest_fit)
 
 
+def test_async_checkpoint_resume_bit_exact_at_chunk_boundary(tmp_path):
+    """Async resume must not restart the staleness window: the checkpoint
+    carries the block-local bests (SwarmState.lbest_*), so resuming at a
+    chunk boundary reproduces the uninterrupted run bit for bit —
+    trajectory AND the relaxed-consistency bookkeeping."""
+    from repro.core import run_async
+    d = str(tmp_path)
+    cfg = PSOConfig(dim=3, particle_cnt=128, fitness="rastrigin").resolved()
+    s0 = init_swarm(cfg, 9)
+    full = run_async(cfg, s0, 32, sync_every=4, n_blocks=4)
+    s16 = run_async(cfg, s0, 16, sync_every=4, n_blocks=4)
+    assert s16.lbest_fit is not None and s16.lbest_fit.shape == (4,)
+    ckpt.save(d, 16, s16)
+    # --- crash; new process restores (locals ride the checkpoint pytree):
+    step, restored = ckpt.restore_latest(d, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), s16))
+    assert step == 16
+    assert restored.lbest_fit is not None         # locals survived the disk
+    resumed = run_async(cfg, restored, 16, sync_every=4, n_blocks=4)
+    for f in full._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(full, f)),
+                                      np.asarray(getattr(resumed, f)),
+                                      err_msg=f)
+
+
+def test_async_resume_mid_window_keeps_publication_schedule():
+    """Resuming OFF the sync grid (e.g. --ckpt-every not a multiple of
+    sync_every) stays bit-exact too: the carried locals plus the static
+    ``phase`` (auto-derived from state.iteration) keep publish points on
+    absolute iteration numbers, and the tail flush publishes without
+    resetting the blocks."""
+    from repro.core import run, run_async
+    # particle_cnt=1024 → the default block picker yields 2 blocks, so the
+    # run() path (no explicit n_blocks) exercises real multi-block locals
+    cfg = PSOConfig(dim=2, particle_cnt=1024, fitness="cubic").resolved()
+    s0 = init_swarm(cfg, 4)
+    full = run_async(cfg, s0, 20, sync_every=8)
+    # 20 = 6 + 14: both splits are off the sync_every=8 grid
+    part = run_async(cfg, s0, 6, sync_every=8)
+    assert float(part.gbest_fit) == float(np.max(np.asarray(part.pbest_fit)))
+    resumed = run_async(cfg, part, 14, sync_every=8)
+    for f in full._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(full, f)),
+                                      np.asarray(getattr(resumed, f)),
+                                      err_msg=f)
+    # the run() dispatcher path (what the CLI chunked loop uses) resumes
+    # identically
+    resumed2 = run(cfg, part, 14, "async", sync_every=8)
+    np.testing.assert_array_equal(np.asarray(full.pos),
+                                  np.asarray(resumed2.pos))
+
+
 def test_step_runner_retry_and_resume(tmp_path):
     """StepRunner recovers from a transient failure via its checkpoint."""
     from repro.runtime import RunnerConfig, StepRunner

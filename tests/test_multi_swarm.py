@@ -142,9 +142,10 @@ def test_solve_server_batches_and_matches_direct_solve():
     srv = SolveServer(max_batch=16)
     results = srv.solve_all(reqs)
     assert len(results) == 8
-    # two compilation groups -> two dispatches; both pad to the min bucket 8
+    # two compilation groups -> two dispatches; 5 requests pad to bucket 8,
+    # 3 requests to the restored minimum bucket 4
     assert srv.stats.dispatches == 2
-    assert srv.stats.padded_rows == (8 - 5) + (8 - 3)
+    assert srv.stats.padded_rows == (8 - 5) + (4 - 3)
     for r in results:
         direct = solve(r.request.config(), seed=r.request.seed,
                        iters=r.request.iters, variant=r.request.variant)
@@ -155,10 +156,45 @@ def test_solve_server_batches_and_matches_direct_solve():
 
 def test_solve_server_rejects_sub_bucket_max_batch():
     from repro.launch.serve import SolveServer
+    SolveServer(max_batch=4)       # bucket 4 is legal again (engine pin)
     with pytest.raises(ValueError):
-        SolveServer(max_batch=4)   # S<8 regime breaks bit-identity on CPU
+        SolveServer(max_batch=2)   # below the smallest bucket
     with pytest.raises(ValueError):
         SolveServer(backend="bogus")
+
+
+def test_bucket4_row_identity_regression():
+    """Regression for the S=4 serving anomaly (PR 1): the exact offending
+    shape (dim=3, n=64, sphere) whose S=4 fori_loop program FMA-contracted
+    the velocity chain 1 ulp off the standalone program on XLA:CPU. With
+    the engine-level pin (run_many pads sub-MIN_VALIDATED_SWARMS batches
+    to the validated shape), a bucket-4 dispatch is row-bit-identical to
+    the standalone solve again."""
+    from repro.core import MIN_VALIDATED_SWARMS
+    from repro.launch.serve import SolveRequest, SolveServer
+    assert MIN_VALIDATED_SWARMS == 8
+    # engine level: the raw S=4 batch on the offending shape
+    cfg = PSOConfig(dim=3, particle_cnt=64, fitness="sphere")
+    seeds = [0, 1, 2, 3]
+    b = solve_many(cfg, seeds, iters=100, variant="queue")
+    assert b.swarm_cnt == 4        # dead rows are sliced off
+    for i, sd in enumerate(seeds):
+        s = solve(cfg, seed=sd, iters=100, variant="queue")
+        np.testing.assert_array_equal(np.asarray(b.pos[i]),
+                                      np.asarray(s.pos))
+        np.testing.assert_array_equal(np.asarray(b.gbest_fit)[i],
+                                      np.asarray(s.gbest_fit))
+    # serving level: a 4-request flush rides bucket 4 and stays identical
+    reqs = [SolveRequest(dim=3, particle_cnt=64, fitness="sphere", seed=i,
+                         iters=100, variant="queue") for i in seeds]
+    srv = SolveServer(max_batch=64)
+    for r in srv.solve_all(reqs):
+        direct = solve(PSOConfig(dim=3, particle_cnt=64, fitness="sphere"),
+                       seed=r.request.seed, iters=100, variant="queue")
+        assert r.batch_size == 4
+        assert r.gbest_fit == float(direct.gbest_fit)
+        np.testing.assert_array_equal(r.gbest_pos,
+                                      np.asarray(direct.gbest_pos))
 
 
 def test_solve_server_kernel_backend():
