@@ -18,6 +18,9 @@
   custom_objective — Problem-API adapter overhead: a user-written cubic
             lowered by the generic d-major adapter vs the hand-tuned
             kernel form, through the fused queue-lock kernel.
+  constrained — constraint-handling cost: penalty vs projection us/iter
+            on the sphere-on-simplex built-in (repro.core.constraints),
+            with final gbest + violation as quality columns.
   lm_bench— LM substrate micro-bench (tokens/s on the smoke configs).
 
 Cross-PR trend: ``compare.py OLD.json NEW.json`` diffs two artifacts
@@ -348,6 +351,39 @@ def custom_objective(smoke=False) -> None:
          gbest_fit=g_adpt, gbest_gap_vs_hand_tuned=g_hand - g_adpt)
 
 
+def constrained(smoke=False) -> None:
+    """Constrained-optimization subsystem: penalty vs projection us/iter on
+    the sphere-on-simplex built-in (repro.core.constraints), through the
+    jnp queue-lock engine. Penalty pays one extra objective-sized violation
+    evaluation per fitness call; projection pays a sort-based simplex
+    projection per advance. Both records carry the final gbest (user sense:
+    minimized, optimum 1/D) and its violation so constraint-handling
+    quality is tracked alongside cost."""
+    from repro.core import PSOConfig, init_swarm, run
+    from repro.core.problem import get_problem
+    dim, particles = 8, 1024
+    iters = 50 if smoke else 200
+    for label, name in (("penalty", "sphere_simplex_pen"),
+                        ("projection", "sphere_simplex")):
+        prob = get_problem(name)
+        cfg = PSOConfig(dim=dim, particle_cnt=particles, fitness=prob,
+                        w=0.7).resolved()
+        s0 = init_swarm(cfg, 0)
+        last = {}
+
+        def call(cfg=cfg, s0=s0, last=last):
+            out = run(cfg, s0, iters, "queue_lock")
+            jax.block_until_ready(out.gbest_fit)
+            last["out"] = out
+
+        t = _time(call)  # deterministic: timed runs = quality run
+        out = last["out"]
+        viol = prob.violation_at(out.gbest_pos)
+        emit(f"constrained/d{dim}_n{particles}/{label}", 1e6 * t / iters,
+             best=float(prob.user_value(out.gbest_fit)),
+             violation=float(viol), feasible=bool(viol <= 0.0))
+
+
 def lm_bench() -> None:
     """LM substrate: smoke-config train-step tokens/s per arch family."""
     from repro.configs import get_arch
@@ -384,6 +420,7 @@ def main() -> None:
     async_sweep(args.smoke)
     islands_ring(args.smoke)
     custom_objective(args.smoke)
+    constrained(args.smoke)
     if not args.smoke:
         lm_bench()
     if args.out:

@@ -22,11 +22,16 @@ _EXPORTS = {
     "best": "repro.api",
     "Method": "repro.api",
     "Result": "repro.api",
+    "History": "repro.api",
     "Problem": "repro.core.problem",
     "register_problem": "repro.core.problem",
     "get_problem": "repro.core.problem",
     "list_problems": "repro.core.problem",
     "resolve_problem": "repro.core.problem",
+    "Constraint": "repro.core.constraints",
+    "ConstraintSet": "repro.core.constraints",
+    "constrain_problem": "repro.core.constraints",
+    "project_simplex": "repro.core.constraints",
     "PSOConfig": "repro.core.pso",
 }
 

@@ -29,6 +29,15 @@ per-dimension bounds and min/max sense), or a bare pure-jnp callable.
 Results are reported in the problem's OWN sense: for a ``sense="min"``
 problem ``Result.best_fit`` is the minimized objective value (the engine
 maximizes internally; see ``repro.core.problem``).
+
+Constrained problems (``Problem(constraints=ConstraintSet(...))`` — see
+``repro.core.constraints``) report ``Result.feasible``/``violation``, and
+``repro.best`` ranks results by the Deb feasibility rule. The adaptive
+penalty ramp is applied here, by segmenting the run into static-weight
+segments (each a plain solve on any backend) and re-weighting the carried
+fitness at boundaries. ``Method(record_history=True)`` additionally
+records the gbest-per-sync-point trajectory (``Result.history``,
+``Result.first_feasible_iter``) through the jnp engines.
 """
 from __future__ import annotations
 
@@ -41,7 +50,7 @@ from repro.core.multi_swarm import (SwarmBatch, batch_row, init_batch,
                                     run_many)
 from repro.core.problem import Problem, resolve_problem
 from repro.core.pso import (ASYNC_SYNC_EVERY, PSOConfig, SwarmState,
-                            VARIANTS, init_swarm, run)
+                            VARIANTS, init_swarm, run, run_with_history)
 
 _KERNEL_VARIANTS = ("queue_lock", "async")
 
@@ -71,6 +80,8 @@ class Method:
     interpret: Optional[bool] = None      # None: False only on real TPU
     islands: int = 0                      # >0: shard over this many devices
     exchange_interval: int = 1            # iterations between island syncs
+    record_history: bool = False          # Result.history: gbest per sync
+    # point (jnp single-swarm engines only — see run_with_history)
 
     def __post_init__(self):
         if self.variant not in VARIANTS:
@@ -93,10 +104,22 @@ class Method:
                 "async islands run the jnp ring local loop; use "
                 "backend='auto'/'jnp' (the Pallas async kernel has no "
                 "multi-device ring yet)")
+        if self.record_history and self.backend == "kernel":
+            raise ValueError(
+                "record_history is a jnp-engine feature (the fused Pallas "
+                "kernels never surface per-iteration gbest); use "
+                "backend='jnp'")
+        if self.record_history and self.islands:
+            raise ValueError(
+                "record_history is single-device only (the island runners "
+                "do not surface per-iteration gbest)")
 
     def resolve_backend(self) -> str:
         if self.backend != "auto":
             return self.backend
+        if self.record_history:
+            return "jnp"        # history is a jnp-engine feature: auto must
+            # not pick the kernel on TPU and then reject its own choice
         if self.variant in _KERNEL_VARIANTS and _default_backend() == "tpu":
             return "kernel"
         return "jnp"
@@ -108,15 +131,36 @@ class Method:
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class History:
+    """Convergence history: the gbest trajectory sampled at sync points
+    (every iteration for the synchronous jnp variants, every publication
+    boundary for ``async``). ``violation`` is the recorded gbest's
+    aggregate constraint violation — None for unconstrained problems."""
+
+    iteration: np.ndarray              # [K] absolute iteration numbers
+    gbest_fit: np.ndarray              # [K] canonical (maximized) fitness
+    violation: Optional[np.ndarray]    # [K] or None (unconstrained)
+
+    def __len__(self) -> int:
+        return len(self.iteration)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class Result:
     """A finished solve. ``best_fit``/``best_pos`` are in the problem's own
-    sense; ``state`` is the raw (canonical-max) SwarmState for resuming."""
+    sense; ``state`` is the raw (canonical-max) SwarmState for resuming.
+
+    Constrained problems additionally report ``feasible``/``violation``
+    (the Deb-rule inputs — see ``repro.core.constraints``), and
+    ``history``/``first_feasible_iter`` when the solve ran with
+    ``Method(record_history=True)``."""
 
     problem: Problem
     config: PSOConfig
     method: Method
     iters: int
     state: SwarmState
+    history: Optional[History] = None
 
     @property
     def best_fit(self) -> float:
@@ -131,11 +175,36 @@ class Result:
         """Canonical (maximized) fitness, as the engine tracks it."""
         return float(self.state.gbest_fit)
 
+    @property
+    def violation(self) -> float:
+        """Aggregate constraint violation at ``best_pos`` (0.0 when
+        unconstrained or exactly feasible)."""
+        return self.problem.violation_at(self.state.gbest_pos)
+
+    @property
+    def feasible(self) -> bool:
+        """True iff ``best_pos`` satisfies every constraint (trivially True
+        for unconstrained problems)."""
+        return self.violation <= 0.0
+
+    @property
+    def first_feasible_iter(self) -> Optional[int]:
+        """The first recorded iteration whose gbest was feasible, or None
+        (never feasible, or no history was recorded). Unconstrained
+        problems report 0 — feasible from the start."""
+        if not self.problem.constrained:
+            return 0
+        if self.history is None or self.history.violation is None:
+            return None
+        feas = np.flatnonzero(self.history.violation <= 0.0)
+        return int(self.history.iteration[feas[0]]) if feas.size else None
+
 
 def _make_method(method: Optional[Method], variant, backend, sync_every,
-                 block_n, interpret) -> Method:
+                 block_n, interpret, record_history=None) -> Method:
     explicit = dict(variant=variant, backend=backend, sync_every=sync_every,
-                    block_n=block_n, interpret=interpret)
+                    block_n=block_n, interpret=interpret,
+                    record_history=record_history)
     given = {k: v for k, v in explicit.items() if v is not None}
     if method is not None:
         if given:
@@ -167,7 +236,8 @@ def solve(problem: Union[str, Problem], *,
           interpret: Optional[bool] = None,
           w: Optional[float] = None, c1: Optional[float] = None,
           c2: Optional[float] = None, dtype: str = "float32",
-          min_pos=None, max_pos=None, max_v=None) -> Result:
+          min_pos=None, max_pos=None, max_v=None,
+          record_history: Optional[bool] = None) -> Result:
     """Solve ``problem`` with ``particles`` particles for ``iters``
     iterations. Either pass a full ``method=Method(...)`` or the loose
     ``variant=``/``backend=``/... kwargs (not both). ``dim`` defaults to
@@ -175,16 +245,21 @@ def solve(problem: Union[str, Problem], *,
     """
     prob = resolve_problem(problem)
     m = _make_method(method, variant, backend, sync_every, block_n,
-                     interpret)
+                     interpret, record_history)
     cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
                        min_pos, max_pos, max_v)
     if m.islands:
+        if len(_ramp_segments(iters, prob.constraints)) > 1:
+            raise ValueError(
+                "the penalty ramp does not compose with islands yet; use "
+                "a static weight (ramp_every=0) or islands=0")
         state = _run_islands(cfg, seed, iters, m)
+        hist = None
     else:
         state = init_swarm(cfg, seed)
-        state = _run_state(cfg, state, iters, m)
+        state, hist = _run_segmented(prob, cfg, state, iters, m)
     return Result(problem=prob, config=cfg, method=m, iters=iters,
-                  state=state)
+                  state=state, history=hist)
 
 
 def _run_islands(cfg: PSOConfig, seed: int, iters: int, m: Method
@@ -214,18 +289,96 @@ def _run_islands(cfg: PSOConfig, seed: int, iters: int, m: Method
     return runner(state)
 
 
-def _run_state(cfg: PSOConfig, state: SwarmState, iters: int,
-               m: Method) -> SwarmState:
+def _ramp_segments(iters: int, cset):
+    """(segment_iters, penalty_weight) pairs for the adaptive penalty ramp
+    (``repro.core.constraints``): segment k of ``ramp_every`` iterations
+    runs at ``weight * ramp**k``. A single ``(iters, None)`` segment (the
+    unchanged problem) when no ramp is configured."""
+    if (cset is None or cset.mode != "penalty" or cset.ramp_every <= 0
+            or cset.ramp == 1.0):
+        return [(iters, None)]
+    segs, done, k = [], 0, 0
+    while done < iters:
+        n = min(cset.ramp_every, iters - done)
+        segs.append((n, cset.weight * (cset.ramp ** k)))
+        done += n
+        k += 1
+    return segs
+
+
+def _reweight_state(cfg: PSOConfig, state: SwarmState) -> SwarmState:
+    """Re-evaluate the carried fitness fields under a new penalty weight
+    (ramp segment boundary): current/pbest/block-local fitness from their
+    positions, gbest re-selected from the re-weighted pbests — so the
+    selection invariants (gbest == max(pbest)) hold at every weight."""
+    import jax.numpy as jnp
+    fn = cfg.fitness_fn
+    fit = fn(state.pos)
+    pbf = fn(state.pbest_pos)
+    b = jnp.argmax(pbf)
+    state = state._replace(fit=fit, pbest_fit=pbf,
+                           gbest_pos=state.pbest_pos[b], gbest_fit=pbf[b])
+    if state.lbest_fit is not None:
+        state = state._replace(lbest_fit=fn(state.lbest_pos))
+    return state
+
+
+def _ramp_loop(prob: Problem, cfg: PSOConfig, state, iters: int,
+               run_seg, reweight):
+    """The shared penalty-ramp scheduler: each segment is a plain
+    static-weight run (so the ramp composes with every backend), with the
+    carried fitness re-weighted at segment boundaries. ``run_seg(cfg,
+    state, seg_iters) -> (state, history|None)``; ``reweight(cfg, state)
+    -> state``. Used by both ``solve`` (SwarmState) and ``solve_many``
+    (SwarmBatch). Returns (state, [history, ...])."""
+    hists = []
+    first = True
+    for seg_iters, weight in _ramp_segments(iters, prob.constraints):
+        if weight is None:
+            cfg_k = cfg
+        else:
+            cfg_k = dataclasses.replace(
+                cfg, fitness=prob.with_penalty_weight(weight))
+            if not first:
+                state = reweight(cfg_k, state)
+        state, h = run_seg(cfg_k, state, seg_iters)
+        if h is not None:
+            hists.append(h)
+        first = False
+    return state, hists
+
+
+def _run_segmented(prob: Problem, cfg: PSOConfig, state: SwarmState,
+                   iters: int, m: Method):
+    state, hists = _ramp_loop(
+        prob, cfg, state, iters,
+        lambda c, s, k: _run_state(c, s, k, m), _reweight_state)
+    if not hists:
+        return state, None
+    return state, History(
+        iteration=np.concatenate([h[0] for h in hists]),
+        gbest_fit=np.concatenate([h[1] for h in hists]),
+        violation=(None if hists[0][2] is None
+                   else np.concatenate([h[2] for h in hists])))
+
+
+def _run_state(cfg: PSOConfig, state: SwarmState, iters: int, m: Method):
+    if m.record_history:
+        # Method validation + resolve_backend guarantee the jnp engine here
+        state, (its, fits, viols) = run_with_history(
+            cfg, state, iters, m.variant, sync_every=m.sync_every)
+        return state, (np.asarray(its, dtype=np.int64), np.asarray(fits),
+                       None if viols is None else np.asarray(viols))
     if m.resolve_backend() == "kernel":
         from repro.kernels.ops import (run_queue_lock_fused,
                                        run_queue_lock_fused_async)
         if m.variant == "async":
             return run_queue_lock_fused_async(
                 cfg, state, iters, sync_every=m.sync_every,
-                block_n=m.block_n, interpret=m.resolve_interpret())
+                block_n=m.block_n, interpret=m.resolve_interpret()), None
         return run_queue_lock_fused(cfg, state, iters, block_n=m.block_n,
-                                    interpret=m.resolve_interpret())
-    return run(cfg, state, iters, m.variant, sync_every=m.sync_every)
+                                    interpret=m.resolve_interpret()), None
+    return run(cfg, state, iters, m.variant, sync_every=m.sync_every), None
 
 
 def solve_many(problem: Union[str, Problem], seeds: Sequence[int], *,
@@ -252,13 +405,35 @@ def solve_many(problem: Union[str, Problem], seeds: Sequence[int], *,
     if m.islands:
         raise ValueError("islands shard ONE swarm over devices; use solve()"
                          " — solve_many batches independent swarms instead")
+    if m.record_history:
+        raise ValueError("record_history is a solve()-only feature (the "
+                         "batch engine does not surface per-row histories)")
     cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
                        min_pos, max_pos, max_v)
     batch = init_batch(cfg, np.asarray(seeds, dtype=np.int64))
-    batch = _run_batch(cfg, batch, iters, m, coeffs)
+    batch, _ = _ramp_loop(
+        prob, cfg, batch, iters,
+        lambda c, b, k: (_run_batch(c, b, k, m, coeffs), None),
+        _reweight_batch)
     return [Result(problem=prob, config=cfg, method=m, iters=iters,
                    state=batch_row(batch, s))
             for s in range(batch.swarm_cnt)]
+
+
+def _reweight_batch(cfg: PSOConfig, batch: SwarmBatch) -> SwarmBatch:
+    """Batched ``_reweight_state`` (ramp segment boundary)."""
+    import jax.numpy as jnp
+    fn = cfg.fitness_fn
+    fit = fn(batch.pos)                               # [S, N]
+    pbf = fn(batch.pbest_pos)
+    b = jnp.argmax(pbf, axis=1)                       # [S]
+    gp = jnp.take_along_axis(batch.pbest_pos, b[:, None, None], axis=1)[:, 0]
+    gf = jnp.take_along_axis(pbf, b[:, None], axis=1)[:, 0]
+    batch = batch._replace(fit=fit, pbest_fit=pbf, gbest_pos=gp,
+                           gbest_fit=gf)
+    if batch.lbest_fit is not None:
+        batch = batch._replace(lbest_fit=fn(batch.lbest_pos))
+    return batch
 
 
 def _run_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int, m: Method,
@@ -280,5 +455,13 @@ def _run_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int, m: Method,
 
 
 def best(results: Sequence[Result]) -> Result:
-    """The best Result of a batch, in the problem's own sense."""
-    return max(results, key=lambda r: r.gbest_fit)
+    """The best Result of a batch, by the Deb feasibility rule: a feasible
+    result beats any infeasible one; feasible results compare on fitness
+    (the problem's own sense); infeasible results compare on violation
+    (smaller wins). For unconstrained problems every result is feasible at
+    violation zero, so this is exactly the old max-fitness rule."""
+    results = list(results)
+    feas = [r for r in results if r.feasible]
+    if feas:
+        return max(feas, key=lambda r: r.gbest_fit)
+    return min(results, key=lambda r: r.violation)

@@ -2,12 +2,16 @@
 from .blocking import LANE, pick_block_n
 from .fitness import (BUILTIN_PROBLEMS, FITNESS_FNS, FITNESS_IDS,
                       DEFAULT_BOUNDS)
+from .constraints import (Constraint, ConstraintSet, constrain_problem,
+                          constraint_from_spec, constraint_set_from_cli,
+                          project_simplex, simplex_constraints)
 from .problem import (Problem, get_problem, list_problems, register_problem,
                       resolve_problem)
 from .pso import (ASYNC_SYNC_EVERY, PSOConfig, SwarmState, STEP_FNS,
                   VARIANTS, flush_async_locals, init_async_locals,
-                  init_swarm, publish_async_locals, run, run_async, solve,
-                  step_async, step_queue, step_queue_lock, step_reduction)
+                  init_swarm, publish_async_locals, run, run_async,
+                  run_with_history, solve, step_async, step_queue,
+                  step_queue_lock, step_reduction)
 from .multi_swarm import (MIN_VALIDATED_SWARMS, SwarmBatch, batch_row,
                           best_of_batch, init_batch, run_many, solve_many,
                           stack_states)
@@ -21,8 +25,12 @@ __all__ = [
     "FITNESS_FNS", "FITNESS_IDS", "DEFAULT_BOUNDS", "BUILTIN_PROBLEMS",
     "Problem", "register_problem", "get_problem", "list_problems",
     "resolve_problem", "LANE", "pick_block_n",
+    "Constraint", "ConstraintSet", "constrain_problem",
+    "constraint_from_spec", "constraint_set_from_cli", "project_simplex",
+    "simplex_constraints",
     "PSOConfig", "SwarmState", "STEP_FNS", "VARIANTS", "ASYNC_SYNC_EVERY",
-    "init_swarm", "run", "solve", "run_async", "step_async",
+    "init_swarm", "run", "solve", "run_async", "run_with_history",
+    "step_async",
     "init_async_locals", "publish_async_locals", "flush_async_locals",
     "step_queue", "step_queue_lock", "step_reduction",
     "SwarmBatch", "init_batch", "batch_row", "stack_states", "run_many",

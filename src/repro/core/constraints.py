@@ -1,0 +1,369 @@
+"""Constrained optimization: feasibility as first-class Problem data.
+
+cuPSO's kernels assume a pure box domain, but real PSO workloads are rarely
+pure boxes — time-critical estimation (Low-Complexity PSO, arXiv 1401.0546)
+and multiagent coordination (MCO convergence analysis, arXiv 1508.04973)
+both optimize under feasibility constraints. ``ConstraintSet`` attaches a
+frozen, hashable set of constraints to a ``repro.core.problem.Problem`` so
+constrained problems travel through every layer the Problem API reaches:
+the jnp step variants, the fused/async/batched Pallas kernels, the eager
+oracles, the solve facade, the batched serving front end and the tuner.
+
+Constraint forms
+----------------
+* ``Constraint(fn, kind="ineq")`` — inequality ``g(x) <= 0`` is feasible.
+* ``Constraint(fn, kind="eq", tol=...)`` — equality ``|h(x)| <= tol``.
+
+``fn`` is pure jnp, maps ``pos[..., D] -> residual[...]`` (one scalar per
+position), and must be jit/vmap/shard_map-safe — exactly the ``Problem.fn``
+contract. The aggregate **violation** of a position is::
+
+    viol(x) = sum_i max(0, g_i(x)) + sum_j max(0, |h_j(x)| - tol_j)
+
+so ``viol(x) == 0`` iff ``x`` is feasible.
+
+Modes (``ConstraintSet.mode``) and backend composition
+------------------------------------------------------
+``penalty``
+    Fitness is wrapped: canonical (maximized) fitness becomes
+    ``max_fn(x) - weight * viol(x)``. Because the penalized objective is
+    just another pure-jnp objective, it composes with EVERY backend for
+    free: the jnp sync/async/ring engines, the serial baseline, and the
+    Pallas kernels (the wrapped ``max_fn`` lowers through
+    ``repro.kernels.pso_step.dmajor_adapter`` like any custom objective,
+    its captured constants hoisted by ``lower_statics``). An adaptive ramp
+    (``ramp``/``ramp_every``) multiplies the weight per segment; the solve
+    facade applies it by segmenting the run and re-weighting the carried
+    pbest/gbest fitness at each boundary, so the ramp also works on every
+    backend (see ``repro.api``).
+``projection``
+    Positions are projected back onto the feasible set by a user operator
+    ``projection(pos[..., N, D]) -> pos`` applied AFTER the box clip (the
+    box-clip composition), both at init and after every advance — the
+    post-advance hook in ``repro.core.pso._advance``, ``core.serial``, and
+    (lowered to the d-major tile layout, constants hoisted) inside all
+    Pallas kernel bodies via ``pso_step.lower_statics``. The declared
+    ``constraints`` are then only used for violation REPORTING; projected
+    swarms stay feasible by construction (up to the constraint ``tol``).
+``repair``
+    Infeasible particles are resampled at init time (``repair_tries``
+    fresh draws from the box; the first feasible draw wins, an
+    always-infeasible particle keeps its original draw). The dynamics stay
+    unconstrained — feasibility preference happens at selection/reporting
+    time through the Deb rule (below). Because repair only touches
+    ``init_swarm`` (and the serial mirror), it composes with every backend
+    trivially: kernels receive an already-repaired state.
+
+The Deb feasibility rule
+------------------------
+Results of constrained solves are compared with Deb's standard rule
+(K. Deb, "An efficient constraint handling method for genetic algorithms",
+2000): (1) a feasible solution beats any infeasible one, (2) two feasible
+solutions compare on fitness, (3) two infeasible solutions compare on
+violation (smaller wins). ``repro.best`` implements this over a batch of
+``Result``s and degenerates to plain max-fitness for unconstrained
+problems (everything is feasible at violation zero). The engine's internal
+gbest selection is deliberately NOT Deb-ized — it tracks the canonical
+(possibly penalized) fitness so the validated kernel publication rules are
+untouched; feasibility preference lives at the facade.
+
+Hashability: ``Constraint``/``ConstraintSet`` are frozen dataclasses (jit
+static-argument safe), and their CONTENT (mode, weights, constraint
+bytecode/closures) enters ``Problem.cache_key()`` so the serving layer can
+never batch two differently-constrained objectives into one compiled
+program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+
+from . import rng
+from .problem import Problem, register_problem
+
+Array = jnp.ndarray
+
+MODES = ("penalty", "projection", "repair")
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraint:
+    """One scalar constraint residual.
+
+    ``kind="ineq"``: feasible iff ``fn(x) <= 0``.
+    ``kind="eq"``:   feasible iff ``|fn(x)| <= tol``.
+    """
+
+    fn: Callable
+    kind: str = "ineq"
+    tol: float = 1e-6
+    name: str = ""
+
+    def __post_init__(self):
+        if self.kind not in ("ineq", "eq"):
+            raise ValueError(
+                f"kind must be 'ineq' or 'eq', got {self.kind!r}")
+        if not callable(self.fn):
+            raise TypeError("Constraint.fn must be callable")
+        if self.tol < 0:
+            raise ValueError(f"tol must be >= 0, got {self.tol}")
+
+    def violation(self, pos):
+        """Per-position violation contribution (0 where satisfied)."""
+        r = self.fn(pos)
+        if self.kind == "eq":
+            return jnp.maximum(jnp.abs(r) - self.tol, 0.0)
+        return jnp.maximum(r, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstraintSet:
+    """A frozen set of constraints plus the handling mode (see module doc).
+
+    ``weight`` is the penalty coefficient in canonical (maximization)
+    fitness units per unit of violation. ``ramp``/``ramp_every`` describe
+    the optional adaptive schedule: segment ``k`` (of ``ramp_every``
+    iterations) runs with ``weight * ramp**k`` — applied by the solve
+    facade, a no-op when ``ramp_every == 0`` or ``ramp == 1``.
+    """
+
+    constraints: Tuple[Constraint, ...] = ()
+    mode: str = "penalty"
+    weight: float = 1000.0
+    ramp: float = 1.0
+    ramp_every: int = 0
+    projection: Optional[Callable] = None
+    repair_tries: int = 8
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        cons = tuple(self.constraints)
+        if not all(isinstance(c, Constraint) for c in cons):
+            raise TypeError("constraints must be Constraint instances")
+        object.__setattr__(self, "constraints", cons)
+        if self.mode == "projection":
+            if self.projection is None:
+                raise ValueError(
+                    "mode='projection' needs a projection= operator "
+                    "(pos[..., D] -> pos on the feasible set)")
+        elif self.projection is not None:
+            raise ValueError(
+                f"projection= only applies to mode='projection', "
+                f"not {self.mode!r}")
+        if self.mode in ("penalty", "repair") and not cons:
+            raise ValueError(
+                f"mode={self.mode!r} needs at least one Constraint")
+        if self.weight <= 0:
+            raise ValueError(f"weight must be > 0, got {self.weight}")
+        if self.ramp <= 0 or self.ramp_every < 0 or self.repair_tries < 1:
+            raise ValueError(
+                f"need ramp > 0, ramp_every >= 0, repair_tries >= 1; got "
+                f"{self.ramp}/{self.ramp_every}/{self.repair_tries}")
+
+    # -- violation ---------------------------------------------------------
+    def violation_fn(self) -> Callable:
+        """Pure-jnp aggregate violation ``pos[..., D] -> viol[...] >= 0``.
+
+        Cached on the instance so jit tracing sees a stable callable.
+        """
+        cached = self.__dict__.get("_violation_fn")
+        if cached is None:
+            cons = self.constraints
+
+            def viol(pos):
+                if not cons:
+                    return jnp.zeros(jnp.shape(pos)[:-1],
+                                     jnp.result_type(pos))
+                total = cons[0].violation(pos)
+                for c in cons[1:]:
+                    total = total + c.violation(pos)
+                return total
+
+            object.__setattr__(self, "_violation_fn", viol)
+            cached = viol
+        return cached
+
+    def violation(self, pos):
+        return self.violation_fn()(pos)
+
+    def with_weight(self, weight: float) -> "ConstraintSet":
+        """The same set at a different (ramped) penalty weight."""
+        return dataclasses.replace(self, weight=float(weight))
+
+    # -- content identity (see problem._hash_value) ------------------------
+    def _content(self) -> Tuple:
+        """Hashable decomposition for ``Problem.cache_key`` — explicit
+        fields + raw callables (recursed into by ``problem._hash_fn``),
+        never ``repr`` (dataclass reprs embed function addresses)."""
+        return ("cset", self.mode, self.weight, self.ramp, self.ramp_every,
+                self.repair_tries, self.projection,
+                tuple((c.kind, c.tol, c.name, c.fn)
+                      for c in self.constraints))
+
+
+def repair_init_positions(cset: ConstraintSet, viol_fn: Callable, pos,
+                          lo, span, seed, stream: int, idx, dtype):
+    """Resample infeasible initial positions (mode="repair").
+
+    Up to ``cset.repair_tries`` fresh box draws per particle, using the
+    counter RNG at ``iteration = attempt`` on the init-position stream
+    (attempts 1..tries never collide with the init draw at iteration 0 or
+    the advance streams). The FIRST feasible draw wins; a particle with no
+    feasible draw keeps its original sample (the Deb rule at the facade
+    still ranks it last). Pure where-folds over a static attempt count:
+    vmap-safe, so batched/serving inits repair identically per row.
+    """
+    feas = viol_fn(pos) <= 0.0
+    for attempt in range(1, cset.repair_tries + 1):
+        u = rng.uniform(seed, attempt, stream, idx, dtype=dtype)
+        cand = lo + span * u
+        take = (~feas) & (viol_fn(cand) <= 0.0)
+        pos = jnp.where(take[..., None], cand, pos)
+        feas = feas | take
+    return pos
+
+
+# --------------------------------------------------------------------------
+# Ready-made operators + the sphere-on-simplex built-ins.
+# --------------------------------------------------------------------------
+
+def project_simplex(pos, radius: float = 1.0):
+    """Euclidean projection of ``pos[..., D]`` onto the probability simplex
+    ``{x : x >= 0, sum(x) = radius}`` (Duchi et al. 2008, sort-based).
+
+    Pure jnp with static shapes — jit/vmap-safe, and lowers into the Pallas
+    kernels through the projection const-threading in ``pso_step``.
+    """
+    d = pos.shape[-1]
+    u = jnp.sort(pos, axis=-1)[..., ::-1]              # descending
+    css = jnp.cumsum(u, axis=-1) - radius
+    k = jnp.arange(1, d + 1, dtype=pos.dtype)
+    rho = jnp.sum((u - css / k > 0).astype(jnp.int32), axis=-1)
+    rho = jnp.maximum(rho, 1)                          # numerical guard
+    theta = (jnp.take_along_axis(css, rho[..., None] - 1, axis=-1)
+             / rho[..., None].astype(pos.dtype))
+    return jnp.maximum(pos - theta, 0.0)
+
+
+def _simplex_sum(x):
+    return jnp.sum(x, axis=-1) - 1.0
+
+
+def _simplex_nonneg(x):
+    return jnp.max(-x, axis=-1)
+
+
+def simplex_constraints(tol: float = 1e-5) -> Tuple[Constraint, ...]:
+    """``sum(x) == 1`` (within ``tol``) and ``x >= 0``."""
+    return (Constraint(fn=_simplex_sum, kind="eq", tol=tol, name="sum=1"),
+            Constraint(fn=_simplex_nonneg, kind="ineq", name="x>=0"))
+
+
+def _sphere_obj(x):
+    """Sphere in the problem's OWN (minimization) sense."""
+    return jnp.sum(x * x, axis=-1)
+
+
+# The first non-box built-in workload: minimize ||x||^2 on the probability
+# simplex (optimum x_i = 1/D, f = 1/D). Registered in both constraint
+# modes so penalty-vs-projection is benchmark-able on the same landscape
+# (benchmarks/run.py::constrained).
+SPHERE_SIMPLEX = register_problem(Problem(
+    name="sphere_simplex", fn=_sphere_obj, lo=0.0, hi=1.0, sense="min",
+    constraints=ConstraintSet(constraints=simplex_constraints(),
+                              mode="projection",
+                              projection=project_simplex)))
+
+SPHERE_SIMPLEX_PENALTY = register_problem(Problem(
+    name="sphere_simplex_pen", fn=_sphere_obj, lo=0.0, hi=1.0, sense="min",
+    constraints=ConstraintSet(constraints=simplex_constraints(),
+                              mode="penalty", weight=50.0)))
+
+
+# --------------------------------------------------------------------------
+# CLI presets: tiny expression grammar for pso_run --constraint.
+# --------------------------------------------------------------------------
+
+# "<reduce>(x) <op> <float>" with reduce in _REDUCERS; plus the named
+# preset "simplex" (handled by constraint_set_from_cli: it implies the
+# simplex constraint pair and, in projection mode, project_simplex).
+_REDUCERS = {
+    "sum": lambda x: jnp.sum(x, axis=-1),
+    "norm": lambda x: jnp.sqrt(jnp.sum(x * x, axis=-1)),
+    "norm2": lambda x: jnp.sum(x * x, axis=-1),
+    "min": lambda x: jnp.min(x, axis=-1),
+    "max": lambda x: jnp.max(x, axis=-1),
+}
+_SPEC_RE = re.compile(
+    r"^\s*(sum|norm2|norm|min|max)\(x\)\s*(<=|>=|==)\s*"
+    r"([-+]?\d+(?:\.\d*)?(?:[eE][-+]?\d+)?)\s*$")
+
+
+def constraint_from_spec(spec: str, tol: float = 1e-5) -> Constraint:
+    """Parse an expression preset like ``"sum(x)<=1"`` into a Constraint.
+
+    Grammar: ``reduce(x) op value`` with ``reduce`` in
+    sum|norm|norm2|min|max and ``op`` in ``<= | >= | ==``. Used by the
+    ``pso_run --constraint`` CLI; library users construct ``Constraint``
+    directly.
+    """
+    m = _SPEC_RE.match(spec)
+    if not m:
+        raise ValueError(
+            f"cannot parse constraint spec {spec!r}; expected e.g. "
+            f"'sum(x)<=1', 'norm(x)<=2.5', 'min(x)>=0', 'sum(x)==1', "
+            f"or the named preset 'simplex'")
+    red, op, val = _REDUCERS[m.group(1)], m.group(2), float(m.group(3))
+    if op == "<=":
+        fn = lambda x, _r=red, _v=val: _r(x) - _v
+        kind = "ineq"
+    elif op == ">=":
+        fn = lambda x, _r=red, _v=val: _v - _r(x)
+        kind = "ineq"
+    else:
+        fn = lambda x, _r=red, _v=val: _r(x) - _v
+        kind = "eq"
+    return Constraint(fn=fn, kind=kind, tol=tol, name=spec.strip())
+
+
+def constraint_set_from_cli(specs: Sequence[str], mode: str = "penalty",
+                            weight: float = 1000.0) -> ConstraintSet:
+    """Build a ConstraintSet from CLI ``--constraint`` specs.
+
+    The named preset ``"simplex"`` expands to the simplex constraint pair
+    and (in projection mode) supplies ``project_simplex``; expression
+    specs only support penalty/repair modes — a general ``g(x) <= 0`` has
+    no automatic projection operator.
+    """
+    specs = list(specs)
+    cons: list = []
+    projection = None
+    for s in specs:
+        if s.strip() == "simplex":
+            cons.extend(simplex_constraints())
+            projection = project_simplex
+        else:
+            cons.append(constraint_from_spec(s))
+    if mode == "projection" and projection is None:
+        raise ValueError(
+            "mode='projection' from the CLI requires the 'simplex' preset "
+            "(expression constraints have no automatic projection operator);"
+            " use --constraint-mode penalty or repair")
+    return ConstraintSet(
+        constraints=tuple(cons), mode=mode, weight=weight,
+        projection=projection if mode == "projection" else None)
+
+
+def constrain_problem(problem: Union[str, Problem], cset: ConstraintSet,
+                      name: Optional[str] = None) -> Problem:
+    """A copy of ``problem`` carrying ``cset`` (drops any hand-tuned
+    ``kernel_fn`` — it could not apply the penalty/projection)."""
+    from .problem import resolve_problem
+    base = resolve_problem(problem)
+    return dataclasses.replace(
+        base, name=name or f"{base.name}_constrained", constraints=cset,
+        kernel_fn=None)

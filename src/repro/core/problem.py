@@ -22,6 +22,12 @@ Conventions
 * ``lo``/``hi`` bounds are a scalar (every dimension shares the box, the
   seed behavior) or a length-D tuple (per-dimension boxes). Tuples keep the
   Problem hashable; arrays/lists are normalized in ``__post_init__``.
+* ``constraints`` optionally attaches a ``repro.core.constraints.
+  ConstraintSet`` (inequality/equality feasibility with penalty, projection
+  or repair handling) — see that module for the Deb rule and which mode
+  composes with which backend. Constrained problems never take the
+  hand-tuned kernel fast paths (``kernel_fn`` is mutually exclusive with
+  ``constraints``); they lower through the generic d-major adapter.
 * ``kernel_fn``, when given, is a hand-tuned d-major form
   ``(pos [Dpad, bn], dmask, d_real) -> fit [1, bn]`` in CANONICAL (max)
   convention with padded sublanes masked/ignored — the same contract as
@@ -139,6 +145,7 @@ class Problem:
     hi: Bound = 100.0
     sense: str = "max"
     kernel_fn: Optional[Callable] = None
+    constraints: Optional[object] = None   # repro.core.constraints.ConstraintSet
     bounds: dataclasses.InitVar[Optional[Tuple[Bound, Bound]]] = None
 
     def __post_init__(self, bounds):
@@ -151,47 +158,120 @@ class Problem:
             if len(lo) != len(hi):
                 raise ValueError(
                     f"lo/hi lengths differ: {len(lo)} vs {len(hi)}")
-            bad = not all(l < h for l, h in zip(lo, hi))
+            # lo == hi on a dimension is legal: the coordinate is frozen
+            # (zero span, zero velocity budget) — see tests/test_bounds.py.
+            bad = not all(l <= h for l, h in zip(lo, hi))
         else:
-            bad = not lo < hi
+            bad = not lo <= hi
         if bad:
-            raise ValueError(f"need lo < hi elementwise, got {lo} / {hi}")
+            raise ValueError(f"need lo <= hi elementwise, got {lo} / {hi}")
         if self.sense not in ("min", "max"):
             raise ValueError(f"sense must be 'min' or 'max', got {self.sense!r}")
         if not (isinstance(self.name, str) and self.name):
             raise ValueError("Problem.name must be a non-empty string")
         if not callable(self.fn):
             raise TypeError("Problem.fn must be callable")
+        if self.constraints is not None:
+            from .constraints import ConstraintSet
+            if not isinstance(self.constraints, ConstraintSet):
+                raise TypeError(
+                    f"constraints must be a repro.core.constraints."
+                    f"ConstraintSet, got {self.constraints!r}")
+            if self.kernel_fn is not None:
+                raise ValueError(
+                    "kernel_fn and constraints are mutually exclusive: a "
+                    "hand-tuned kernel form cannot apply the penalty/"
+                    "projection (drop kernel_fn; the adapter lowers the "
+                    "constrained objective automatically)")
         object.__setattr__(self, "lo", lo)
         object.__setattr__(self, "hi", hi)
 
     # -- canonical (maximization) view -------------------------------------
     @property
     def max_fn(self) -> Callable:
-        """``fn`` in the engine's canonical maximization convention.
+        """``fn`` in the engine's canonical maximization convention —
+        including the penalty term for a ``mode="penalty"`` constraint set
+        (``max_fn(x) = sense-canonical fn(x) - weight * violation(x)``), so
+        penalized fitness rides every engine/kernel path exactly like any
+        other custom objective.
 
-        The negation wrapper is cached on the instance (not in a global
-        cache, which would pin every one-off serving objective — and its
-        closed-over arrays — in memory forever), so repeated accesses
-        return the same object and jit tracing stays stable.
+        The wrapper is cached on the instance (not in a global cache, which
+        would pin every one-off serving objective — and its closed-over
+        arrays — in memory forever), so repeated accesses return the same
+        object and jit tracing stays stable.
         """
-        if self.sense == "max":
+        cset = self.constraints
+        penalized = cset is not None and cset.mode == "penalty"
+        if self.sense == "max" and not penalized:
             return self.fn
         cached = self.__dict__.get("_max_fn")
         if cached is None:
             fn = self.fn
+            neg = self.sense == "min"
+            if penalized:
+                viol = cset.violation_fn()
+                weight = cset.weight
 
-            def neg(pos):
-                return -fn(pos)
+                def wrapped(pos):
+                    f = fn(pos)
+                    if neg:
+                        f = -f
+                    return f - weight * viol(pos)
 
-            neg.__name__ = f"neg_{getattr(fn, '__name__', 'fn')}"
-            object.__setattr__(self, "_max_fn", neg)
-            cached = neg
+                wrapped.__name__ = (
+                    f"penalized_{getattr(fn, '__name__', 'fn')}")
+            else:
+                def wrapped(pos):
+                    return -fn(pos)
+
+                wrapped.__name__ = f"neg_{getattr(fn, '__name__', 'fn')}"
+            object.__setattr__(self, "_max_fn", wrapped)
+            cached = wrapped
         return cached
 
     def user_value(self, canonical_fit):
-        """Map a canonical (maximized) fitness back to the user's sense."""
+        """Map a canonical (maximized) fitness back to the user's sense.
+
+        For penalty-constrained problems the canonical fitness carries the
+        penalty term; at a feasible point (violation 0) the mapped value is
+        exactly the user objective."""
         return -canonical_fit if self.sense == "min" else canonical_fit
+
+    # -- constraints --------------------------------------------------------
+    @property
+    def constrained(self) -> bool:
+        return self.constraints is not None
+
+    @property
+    def projection_fn(self) -> Optional[Callable]:
+        """The feasibility projection ``pos[..., D] -> pos`` (applied after
+        the box clip), or None for every mode but "projection"."""
+        cset = self.constraints
+        if cset is not None and cset.mode == "projection":
+            return cset.projection
+        return None
+
+    @property
+    def violation_fn(self) -> Optional[Callable]:
+        """Aggregate violation ``pos[..., D] -> viol[...]``, or None when
+        unconstrained."""
+        cset = self.constraints
+        return None if cset is None else cset.violation_fn()
+
+    def violation_at(self, pos) -> float:
+        """Host-side violation of one position vector (0.0 if
+        unconstrained)."""
+        vf = self.violation_fn
+        return 0.0 if vf is None else float(vf(pos))
+
+    def with_penalty_weight(self, weight: float) -> "Problem":
+        """This problem at a different penalty weight (the ramp schedule's
+        per-segment step; see ``repro.core.constraints``)."""
+        if self.constraints is None or self.constraints.mode != "penalty":
+            raise ValueError("with_penalty_weight needs a penalty-mode "
+                             "constraint set")
+        return dataclasses.replace(
+            self, constraints=self.constraints.with_weight(weight))
 
     @property
     def ndim(self) -> Optional[int]:
@@ -218,6 +298,11 @@ class Problem:
             _hash_value(h, (self.name, self.sense, self.lo, self.hi))
             for fn in (self.fn, self.kernel_fn):
                 _hash_value(h, fn)
+            if self.constraints is not None:
+                # mode/weights/constraint code all change the compiled
+                # program — two differently-constrained objectives must
+                # never share a serving batch.
+                _hash_value(h, self.constraints._content())
             cached = h.hexdigest()[:16]
             object.__setattr__(self, "_cache_key", cached)
         return cached

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 
 from . import rng
 from .blocking import default_block_count
+from .constraints import repair_init_positions
 from .fitness import DEFAULT_BOUNDS, FITNESS_FNS  # noqa: F401 (legacy API)
 from .problem import Bound, Problem, broadcast_bounds, resolve_problem
 
@@ -180,6 +181,17 @@ def init_swarm(cfg: PSOConfig, seed: int, n: Optional[int] = None,
     span = hi - lo
     pos = lo + span * u_pos
     vel = -mv + 2.0 * mv * u_vel
+    prob = cfg.problem
+    proj = prob.projection_fn
+    if proj is not None:
+        # projection mode: start feasible (box draw projected in-place)
+        pos = proj(pos)
+    elif prob.constrained and prob.constraints.mode == "repair":
+        # repair mode: resample infeasible draws (attempt-indexed RNG on
+        # the init stream; see constraints.repair_init_positions)
+        pos = repair_init_positions(
+            prob.constraints, prob.violation_fn, pos, lo, span, seed,
+            STREAM_INIT_POS, idx, dt)
     fit = cfg.fitness_fn(pos)
     best = jnp.argmax(fit)
     return SwarmState(
@@ -224,6 +236,12 @@ def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0,
     vel = jnp.clip(vel, -mv, mv)
     pos = jnp.clip(s.pos + vel, _bound_operand(cfg.min_pos, dt),
                    _bound_operand(cfg.max_pos, dt))
+    proj = cfg.problem.projection_fn
+    if proj is not None:
+        # the constrained post-advance hook (mode="projection"): clip to
+        # the box first, then project onto the feasible set. Python-gated,
+        # so unconstrained jaxprs are untouched bit-for-bit.
+        pos = proj(pos)
     fit = cfg.fitness_fn(pos)
     return pos, vel, fit
 
@@ -560,3 +578,66 @@ def solve(cfg: PSOConfig, seed: int = 0, iters: int = 1000,
     """Convenience one-shot: init + run."""
     cfg = cfg.resolved()
     return run(cfg, init_swarm(cfg, seed), iters, variant, sync_every)
+
+
+# --------------------------------------------------------------------------
+# Convergence history (ROADMAP follow-on (c)): gbest per sync point.
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "iters", "variant"))
+def _run_stepped_history(cfg: PSOConfig, state: SwarmState, iters: int,
+                         variant: str):
+    step = STEP_FNS[variant]
+    vf = cfg.problem.violation_fn
+
+    def body(s, _):
+        s = step(cfg, s)
+        v = (vf(s.gbest_pos) if vf is not None
+             else jnp.zeros((), s.gbest_fit.dtype))
+        return s, (s.gbest_fit, v)
+
+    state, (fits, viols) = jax.lax.scan(body, state, xs=None, length=iters)
+    return state, fits, viols
+
+
+def run_with_history(cfg: PSOConfig, state: SwarmState, iters: int,
+                     variant: str = "queue",
+                     sync_every: int = ASYNC_SYNC_EVERY):
+    """Like ``run`` but also records the gbest trajectory.
+
+    Returns ``(state, (iterations, gbest_fits, violations))`` where the
+    arrays hold one entry per sync point — every iteration for the
+    synchronous variants (a ``lax.scan`` over the same step functions, so
+    one device program), every publication boundary for ``async`` (the run
+    is segmented at sync points, which the checkpoint/resume machinery
+    makes bit-identical to the uninterrupted run — tests/test_checkpoint).
+    ``violations`` is the aggregate constraint violation of the recorded
+    gbest position (None for unconstrained problems): constrained runs use
+    it to report the first-feasible iteration (``repro.Result``).
+    """
+    cfg = cfg.resolved()
+    constrained = cfg.problem.constrained
+    if iters <= 0:
+        empty = jnp.zeros((0,), state.gbest_fit.dtype)
+        return state, ((), empty, empty if constrained else None)
+    if variant != "async":
+        if state.lbest_fit is not None:
+            state = state._replace(lbest_pos=None, lbest_fit=None)
+        start = int(state.iteration)
+        state, fits, viols = _run_stepped_history(cfg, state, iters, variant)
+        its = tuple(range(start + 1, start + iters + 1))
+        return state, (its, fits, viols if constrained else None)
+    vf = cfg.problem.violation_fn
+    its, fits, viols = [], [], []
+    done = 0
+    while done < iters:
+        k = min(max(1, sync_every), iters - done)
+        state = run_async(cfg, state, k, sync_every=sync_every)
+        done += k
+        its.append(int(state.iteration))
+        fits.append(state.gbest_fit)
+        viols.append(vf(state.gbest_pos) if vf is not None
+                     else jnp.zeros((), state.gbest_fit.dtype))
+    fits = jnp.stack(fits)
+    viols = jnp.stack(viols)
+    return state, (tuple(its), fits, viols if constrained else None)

@@ -63,9 +63,10 @@ def _np_bound(v, dt):
 def _fitness(cfg: PSOConfig, pos: np.ndarray) -> np.ndarray:
     """Pure-numpy fitness (mirrors repro.core.fitness; numpy to keep the
     serial baseline free of JAX dispatch overhead). A first-class Problem
-    (user objective) falls back to evaluating its canonical-max jnp ``fn``
-    — correctness over speed; the serial path is a baseline, not a hot
-    path."""
+    (user objective) — or a registered name outside the six numpy-mirrored
+    built-ins, e.g. a constrained problem — falls back to evaluating its
+    canonical-max jnp ``max_fn`` (penalty included) — correctness over
+    speed; the serial path is a baseline, not a hot path."""
     x = pos
     name = cfg.fitness
     if not isinstance(name, str):
@@ -92,7 +93,39 @@ def _fitness(cfg: PSOConfig, pos: np.ndarray) -> np.ndarray:
         s1 = np.sqrt(np.sum(x * x, axis=-1) / d)
         s2 = np.sum(np.cos(2 * np.pi * x), axis=-1) / d
         return -(-20.0 * np.exp(-0.2 * s1) - np.exp(s2) + 20.0 + np.e)
-    raise ValueError(f"unknown fitness {name!r}")
+    # any other registered name (constrained/custom) resolves through the
+    # registry to its canonical-max jnp form; unknown names KeyError there
+    return np.asarray(cfg.problem.max_fn(pos))
+
+
+def _projection(cfg: PSOConfig):
+    """The problem's feasibility projection as a numpy-in/numpy-out
+    callable, or None (mode != "projection")."""
+    proj = cfg.problem.projection_fn
+    if proj is None:
+        return None
+    return lambda pos: np.asarray(proj(pos), dtype=pos.dtype)
+
+
+def _constrained_init(cfg: PSOConfig, pos: np.ndarray, seed: int,
+                      lo, span, idx, dt) -> np.ndarray:
+    """Mirror of ``init_swarm``'s constrained init: project (projection
+    mode) or resample infeasible draws (repair mode) — using the numpy
+    RNG mirror, so serial init stays bit-comparable to the jnp path."""
+    prob = cfg.problem
+    proj = _projection(cfg)
+    if proj is not None:
+        return proj(pos)
+    if not (prob.constrained and prob.constraints.mode == "repair"):
+        return pos
+    # one point of truth: the jnp repair fold (its counter RNG is the
+    # bit-identical mirror of _uniform, so serial init == jnp init exactly;
+    # same correctness-over-speed tradeoff as _fitness's jnp fallback)
+    from .constraints import repair_init_positions
+    return np.asarray(
+        repair_init_positions(prob.constraints, prob.violation_fn, pos,
+                              lo, span, seed, STREAM_INIT_POS, idx, dt),
+        dtype=pos.dtype)
 
 
 class SerialSwarm:
@@ -109,6 +142,8 @@ class SerialSwarm:
         mv = _np_bound(cfg.max_v, dt)
         span = hi - lo
         self.pos = (lo + span * _uniform(seed, 0, STREAM_INIT_POS, idx, dt))
+        self.pos = _constrained_init(cfg, self.pos, seed, lo, span, idx, dt)
+        self._project = _projection(cfg)
         self.vel = (-mv + 2 * mv * _uniform(seed, 0, STREAM_INIT_VEL, idx, dt))
         self.fit = _fitness(cfg, self.pos)
         self.pbest_pos = self.pos.copy()
@@ -134,6 +169,8 @@ class SerialSwarm:
             v = np.clip(v, -mv, mv)
             p = np.clip(self.pos[i] + v, _np_bound(cfg.min_pos, v.dtype),
                         _np_bound(cfg.max_pos, v.dtype))
+            if self._project is not None:   # post-advance feasibility hook
+                p = self._project(p[None])[0]
             f = float(_fitness(cfg, p[None])[0])
             self.vel[i] = v
             self.pos[i] = p
@@ -169,6 +206,8 @@ def run_serial_fast(cfg: PSOConfig, seed: int, iters: int) -> Tuple[float, np.nd
     mv = _np_bound(cfg.max_v, dt)
     span = hi - lo
     pos = lo + span * _uniform(seed, 0, STREAM_INIT_POS, idx, dt)
+    pos = _constrained_init(cfg, pos, seed, lo, span, idx, dt)
+    project = _projection(cfg)
     vel = -mv + 2 * mv * _uniform(seed, 0, STREAM_INIT_VEL, idx, dt)
     fit = _fitness(cfg, pos)
     pbest_pos, pbest_fit = pos.copy(), fit.copy()
@@ -181,6 +220,8 @@ def run_serial_fast(cfg: PSOConfig, seed: int, iters: int) -> Tuple[float, np.nd
                + cfg.c2 * r2 * (gbest_pos[None] - pos))
         np.clip(vel, -mv, mv, out=vel)
         pos = np.clip(pos + vel, lo, hi)
+        if project is not None:             # post-advance feasibility hook
+            pos = project(pos)
         fit = _fitness(cfg, pos)
         m = fit > pbest_fit
         pbest_fit = np.where(m, fit, pbest_fit)

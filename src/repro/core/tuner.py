@@ -160,7 +160,13 @@ def make_solve_many_fitness(cfg: PSOConfig, seeds: Sequence[int],
     objective* is just ``make_solve_many_fitness(PSOConfig(fitness=prob),
     ...)``; scores stay in the engine's canonical maximization convention
     (a sense="min" problem's scores are its negated objective, which orders
-    candidates correctly). ``sync_every`` forwards to the ``async``
+    candidates correctly). Constrained problems
+    (``repro.core.constraints``) thread through the same way: penalty-mode
+    scores are the penalized canonical fitness (infeasible candidates rank
+    below feasible ones by construction), projection/repair modes score
+    the feasible-set optimum directly — so tuning PSO coefficients FOR a
+    constrained workload needs no tuner changes
+    (tests/test_constraints.py). ``sync_every`` forwards to the ``async``
     variant's publication interval.
     """
     from .multi_swarm import solve_many

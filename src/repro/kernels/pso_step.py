@@ -82,6 +82,15 @@ bit-comparable to the eager oracles (see ``_resolve_statics``).
 Per-dimension bounds ride the same const-threading as ``[Dpad, 1]``
 columns.
 
+Constraints: a Problem carrying a ``repro.core.constraints.ConstraintSet``
+always lowers by conversion — ``penalty`` mode is invisible here (the
+penalty rides ``Problem.max_fn`` like any custom objective), ``projection``
+mode adds a pinned post-clip transform inside ``_advance_block``
+(``kernel_projection`` lifts the user operator to the d-major tile layout;
+its captured consts hoist through ``lower_statics`` exactly like objective
+consts), and ``repair`` mode only affects ``init_swarm`` (kernels receive
+an already-repaired state).
+
 Validated in ``interpret=True`` mode against ``ref.py`` (same counter RNG ⇒
 bit-exact trajectories) over shape/dtype sweeps in tests/test_kernels.py
 and tests/test_async.py; custom-objective parity in tests/test_problem.py.
@@ -188,23 +197,67 @@ def kernel_fitness(fitness):
     d-major callable ``(pos, dmask, d_real) -> [1, bn]`` in canonical
     (maximization) form.
 
-    Strings and built-in Problems take the hand-tuned ``_fitness_dmajor``
-    fast path (bit-identical to the pre-Problem-API kernels); a Problem
-    with a user ``kernel_fn`` uses it verbatim (it must already be
+    Built-in names and built-in Problems take the hand-tuned
+    ``_fitness_dmajor`` fast path (bit-identical to the pre-Problem-API
+    kernels); any other registered name resolves through the registry
+    first (a registered custom/constrained problem is addressable by
+    string everywhere, including the kernel backend); a Problem with a
+    user ``kernel_fn`` uses it verbatim (it must already be
     canonical-max, see ``repro.core.problem``); any other Problem is
     lowered by ``dmajor_adapter``.
     """
     if isinstance(fitness, str):
-        return functools.partial(_fitness_dmajor, fitness)
+        if fitness in KERNEL_FITNESS:
+            return functools.partial(_fitness_dmajor, fitness)
+        from repro.core.problem import get_problem
+        fitness = get_problem(fitness)
     if not isinstance(fitness, Problem):
         raise TypeError(f"fitness must be str or Problem, got {fitness!r}")
     if fitness.kernel_fn is not None:
         return fitness.kernel_fn
     from repro.core.fitness import FITNESS_FNS
     if (fitness.sense == "max" and fitness.name in KERNEL_FITNESS
-            and fitness.fn is FITNESS_FNS.get(fitness.name)):
+            and fitness.fn is FITNESS_FNS.get(fitness.name)
+            and fitness.constraints is None):
+        # constrained problems never take the hand-tuned fast path: the
+        # penalty must ride max_fn, and projection-mode advances must be
+        # pinned like any converted objective (see _resolve_statics).
         return functools.partial(_fitness_dmajor, fitness.name)
     return dmajor_adapter(fitness.max_fn)
+
+
+def kernel_projection(fitness):
+    """Resolve a Problem's feasibility projection to the d-major tile form
+    ``pos [Dpad, bn] -> pos [Dpad, bn]`` (padded sublanes re-zeroed), or
+    None when the objective has no projection-mode constraints.
+
+    Mirrors ``dmajor_adapter``: the user operator sees its documented
+    particle-major ``[bn, d]`` view. Applied AFTER the box clip inside
+    ``_advance_block`` (the box-clip composition); its captured array
+    constants are hoisted into pallas_call operands by ``lower_statics``
+    exactly like objective consts.
+    """
+    if isinstance(fitness, str):
+        if fitness in KERNEL_FITNESS:
+            return None                        # built-ins are box-only
+        from repro.core.problem import get_problem
+        fitness = get_problem(fitness)
+    if not isinstance(fitness, Problem):
+        return None
+    proj = fitness.projection_fn
+    if proj is None:
+        return None
+
+    def lifted(pos, d_real):
+        dpad, bn = pos.shape
+        out = proj(pos[:d_real, :].T).T            # [d_real, bn]
+        if dpad == d_real:
+            return out
+        return jnp.concatenate(
+            [out, jnp.zeros((dpad - d_real, bn), pos.dtype)], axis=0)
+
+    lifted.__name__ = f"dmajor_proj[{getattr(proj, '__name__', 'fn')}]"
+    return lifted
 
 
 def is_converted(fitness) -> bool:
@@ -293,22 +346,44 @@ def lower_statics(fitness, *, d, dpad, bn, dtype,
 
         st["fit"] = pure
         st["fit_slots"] = tuple(slot(jnp.asarray(c)) for c in closed.consts)
+    projfn = kernel_projection(fitness)
+    if projfn is None:
+        st["proj"] = None
+        st["proj_slots"] = None
+    else:
+        # Same hoisting for the feasibility projection: user operators may
+        # close over arrays (targets, metric weights), which Pallas forbids
+        # as captured consts.
+        pclosed = jax.make_jaxpr(lambda p: projfn(p, d))(
+            jax.ShapeDtypeStruct((dpad, bn), dtype))
+
+        def pure_proj(p, *cvals, _jaxpr=pclosed.jaxpr):
+            out = jax.core.eval_jaxpr(_jaxpr, cvals, p)
+            if len(out) != 1:
+                raise ValueError("projection must return a single array")
+            return out[0]
+
+        st["proj"] = pure_proj
+        st["proj_slots"] = tuple(slot(jnp.asarray(c))
+                                 for c in pclosed.consts)
     st["n_consts"] = len(consts)
     return st, tuple(consts)
 
 
 def _resolve_statics(st, const_vals):
     """Kernel-side inverse of ``lower_statics``: returns
-    (min_pos, max_pos, max_v, fitfn, pin) with fitfn(pos, dmask, d_real).
+    (min_pos, max_pos, max_v, fitfn, proj, pin) with
+    fitfn(pos, dmask, d_real) and proj(pos) (or None).
 
-    ``pin`` is True for converted (non-hand-tuned) objectives: the kernel
-    body must pass the advance outputs through ``_pin`` before storing or
-    evaluating fitness. Without it, XLA:CPU fuses the user objective into
-    the velocity/position chain and re-derives a differently-rounded ``pos``
-    per consumer, drifting 1 ulp from the eager ``ref.py`` oracles and
-    breaking the bit-exact validation contract. The barrier is a no-op
-    eagerly and is skipped entirely for the hand-tuned built-in forms,
-    whose jaxprs (and compiled bits) stay exactly the seed kernels'.
+    ``pin`` is True for converted (non-hand-tuned) objectives and whenever
+    a feasibility projection is present: the kernel body must pass the
+    advance outputs through ``_pin`` before storing or evaluating fitness.
+    Without it, XLA:CPU fuses the user objective into the velocity/position
+    chain and re-derives a differently-rounded ``pos`` per consumer,
+    drifting 1 ulp from the eager ``ref.py`` oracles and breaking the
+    bit-exact validation contract. The barrier is a no-op eagerly and is
+    skipped entirely for the hand-tuned built-in forms, whose jaxprs (and
+    compiled bits) stay exactly the seed kernels'.
     """
     def get(v):
         return const_vals[v.index] if isinstance(v, _Slot) else v
@@ -323,8 +398,17 @@ def _resolve_statics(st, const_vals):
             del d_real  # baked in at closure-conversion time
             return _pure(pos, dmask, *_extra)
 
+    if st["proj"] is None:
+        proj = None
+    else:
+        pure_proj = st["proj"]
+        pextra = tuple(const_vals[s.index] for s in st["proj_slots"])
+
+        def proj(pos, _pure=pure_proj, _extra=pextra):
+            return _pure(pos, *_extra)
+
     return (get(st["min_pos"]), get(st["max_pos"]), get(st["max_v"]), fit,
-            st["fit_slots"] is not None)
+            proj, st["fit_slots"] is not None or proj is not None)
 
 
 def _pin(pin, pos, vel):
@@ -339,7 +423,7 @@ def _const_specs(consts):
 
 
 def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
-                   w, c1, c2, min_pos, max_pos, max_v, d_real):
+                   w, c1, c2, min_pos, max_pos, max_v, d_real, project=None):
     """Paper Alg. 1 steps 2–3 for one [Dpad, bn] tile.
 
     Shared verbatim by the kernel bodies and the ``ref.py`` oracle so that
@@ -347,7 +431,10 @@ def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
     aliasing, blocking, predication); the math itself is validated against
     the independent ``repro.core.pso`` implementation in tests.
     ``min_pos``/``max_pos``/``max_v`` are scalars or per-dimension tuples
-    (lowered to constant [Dpad, 1] columns). Returns (pos, vel, dmask, lane).
+    (lowered to constant [Dpad, 1] columns). ``project`` is the optional
+    feasibility projection ``pos [Dpad, bn] -> pos`` applied after the box
+    clip (constrained problems, mode="projection" — see
+    ``repro.core.constraints``). Returns (pos, vel, dmask, lane).
     """
     dpad, bn = pos.shape
     min_pos = _bound_col(min_pos, dpad, pos.dtype)
@@ -364,6 +451,8 @@ def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
     vel = (w * vel + c1 * r1 * (pbp - pos) + c2 * r2 * (gp - pos))
     vel = jnp.clip(vel, -max_v, max_v)
     pos = jnp.clip(pos + vel, min_pos, max_pos)
+    if project is not None:
+        pos = project(pos)
     zero = jnp.zeros_like(pos)
     return jnp.where(dmask, pos, zero), jnp.where(dmask, vel, zero), dmask, lane
 
@@ -381,7 +470,7 @@ def _queue_kernel(scal_ref, gp_ref, gf_ref,
     const_vals = tuple(r[...] for r in rest[:nc])
     (pos_ref, vel_ref, pbp_ref, pbf_ref,
      aux_fit_ref, aux_idx_ref) = rest[nc:]
-    min_pos, max_pos, max_v, fitness, pin = _resolve_statics(
+    min_pos, max_pos, max_v, fitness, proj, pin = _resolve_statics(
         statics, const_vals)
     b = pl.program_id(0)
     bn = pos_ref.shape[1]
@@ -390,7 +479,7 @@ def _queue_kernel(scal_ref, gp_ref, gf_ref,
         scal_ref[0], scal_ref[1] + 1,
         pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
         base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-        max_v=max_v, d_real=d_real)
+        max_v=max_v, d_real=d_real, project=proj)
     pos, vel = _pin(pin, pos, vel)
     fit = fitness(pos, dmask, d_real)                        # [1, bn]
     pbf = pbf_ref[...]
@@ -471,7 +560,7 @@ def _fused_kernel(scal_ref,
     nc = statics["n_consts"]
     const_vals = tuple(r[...] for r in rest[:nc])
     pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest[nc:]
-    min_pos, max_pos, max_v, fitness, pin = _resolve_statics(
+    min_pos, max_pos, max_v, fitness, proj, pin = _resolve_statics(
         statics, const_vals)
     t = pl.program_id(0)
     b = pl.program_id(1)
@@ -481,7 +570,7 @@ def _fused_kernel(scal_ref,
         scal_ref[0], scal_ref[1] + t + 1,
         pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
         base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-        max_v=max_v, d_real=d_real)
+        max_v=max_v, d_real=d_real, project=proj)
     pos, vel = _pin(pin, pos, vel)
     fit = fitness(pos, dmask, d_real)
     pbf = pbf_ref[...]
@@ -565,7 +654,7 @@ def _fused_batch_kernel(seeds_ref, its_ref,
     nc = statics["n_consts"]
     const_vals = tuple(r[...] for r in rest[:nc])
     pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest[nc:]
-    min_pos, max_pos, max_v, fitness, pin = _resolve_statics(
+    min_pos, max_pos, max_v, fitness, proj, pin = _resolve_statics(
         statics, const_vals)
     s = pl.program_id(0)
     t = pl.program_id(1)
@@ -576,7 +665,7 @@ def _fused_batch_kernel(seeds_ref, its_ref,
         seeds_ref[s], its_ref[s] + t + 1,
         pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
         base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-        max_v=max_v, d_real=d_real)
+        max_v=max_v, d_real=d_real, project=proj)
     pos, vel = _pin(pin, pos, vel)
     fit = fitness(pos, dmask, d_real)
     pbf = pbf_ref[...]
@@ -657,7 +746,7 @@ def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
 def _async_chunk_body(scal0, it_base, sync_every, base,
                       pos, vel, pbp, pbf, lp, lf, *,
                       w, c1, c2, min_pos, max_pos, max_v, d_real, fitness,
-                      pin=False):
+                      project=None, pin=False):
     """``sync_every`` iterations of one block against its block-local best.
 
     Pure value-level fori_loop (no ref writes inside the loop) shared by
@@ -672,7 +761,7 @@ def _async_chunk_body(scal0, it_base, sync_every, base,
         pos, vel, dmask, lane = _advance_block(
             scal0, it_base + tl + 1, pos, vel, pbp, lp, base,
             w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-            max_v=max_v, d_real=d_real)
+            max_v=max_v, d_real=d_real, project=project)
         pos, vel = _pin(pin, pos, vel)
         fit = fitness(pos, dmask, d_real)
         imp = fit > pbf
@@ -707,7 +796,7 @@ def _fused_async_kernel(scal_ref,
     const_vals = tuple(r[...] for r in rest[:nc])
     (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
      lp_ref, lf_ref) = rest[nc:]
-    min_pos, max_pos, max_v, fitness, pin = _resolve_statics(
+    min_pos, max_pos, max_v, fitness, proj, pin = _resolve_statics(
         statics, const_vals)
     b = pl.program_id(0)
     c = pl.program_id(1)
@@ -726,7 +815,7 @@ def _fused_async_kernel(scal_ref,
         scal_ref[0], scal_ref[1] + c * sync_every, sync_every, base,
         pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf,
         w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v,
-        d_real=d_real, fitness=fitness, pin=pin)
+        d_real=d_real, fitness=fitness, project=proj, pin=pin)
     pos_ref[...] = pos
     vel_ref[...] = vel
     pbp_ref[...] = pbp
@@ -807,7 +896,7 @@ def _fused_async_batch_kernel(seeds_ref, its_ref,
     const_vals = tuple(r[...] for r in rest[:nc])
     (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref,
      gf_ref, lp_ref, lf_ref) = rest[nc:]
-    min_pos, max_pos, max_v, fitness, pin = _resolve_statics(
+    min_pos, max_pos, max_v, fitness, proj, pin = _resolve_statics(
         statics, const_vals)
     s = pl.program_id(0)
     b = pl.program_id(1)
@@ -825,7 +914,7 @@ def _fused_async_batch_kernel(seeds_ref, its_ref,
         seeds_ref[s], its_ref[s] + c * sync_every, sync_every, base,
         pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf,
         w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v,
-        d_real=d_real, fitness=fitness, pin=pin)
+        d_real=d_real, fitness=fitness, project=proj, pin=pin)
     pos_ref[...] = pos
     vel_ref[...] = vel
     pbp_ref[...] = pbp

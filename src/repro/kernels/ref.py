@@ -26,7 +26,7 @@ import functools
 import jax
 
 from .pso_step import (_advance_block, _pin, is_converted, kernel_fitness,
-                       pad_dim)
+                       kernel_projection, pad_dim)
 
 
 def run_islands_ring_oracle(cfg, seed: int, n_shards: int, iters: int,
@@ -119,19 +119,151 @@ def run_islands_ring_oracle(cfg, seed: int, n_shards: int, iters: int,
     return islands, history
 
 
+def run_constrained_oracle(cfg, seed: int, iters: int,
+                           variant: str = "queue_lock",
+                           sync_every: int = 8,
+                           n_blocks: int = None):
+    """Eager oracle for CONSTRAINED solves through the jnp engines.
+
+    An independent re-implementation of ``repro.core.pso``'s synchronous
+    queue-lock (and, for ``variant="async"``, the relaxed block-local
+    schedule) in the library's particle-major [N, D] layout: init (with
+    the projection / repair-resample constrained init), the
+    velocity/position/clip advance, the post-advance projection hook, the
+    penalized canonical fitness, pbest folds, and the variant's gbest
+    publication rule — a Python iteration loop with Python-level
+    publication conditionals, no ``cond``, ``fori_loop`` or ``pallas_call``
+    anywhere. Only the advance+fitness subgraph runs under ``jit`` (the
+    ``_advance_fn`` precedent: XLA:CPU FMA-contracts the velocity chain
+    inside a compiled program one ulp differently from op-by-op eager
+    execution, so the oracle compiles the SAME subgraph; the pbest/gbest
+    select folds are rounding-free and stay eager).
+
+    Bit-exactness granularity: the jnp engine dispatched one iteration per
+    call (``run(cfg, s, 1)`` / ``run_async(cfg, s, 1)`` — phase-aligned)
+    matches this oracle BIT-EXACTLY, constraints and all
+    (tests/test_constraints.py). A multi-iteration ``fori_loop`` program
+    additionally FMA-fuses ACROSS iterations (the pre-existing XLA:CPU
+    caveat documented in ``repro.core.multi_swarm`` — it applies to
+    unconstrained built-ins equally), so full-loop runs are validated
+    exact on the gbest trajectory and ulp-tight on positions. The kernel
+    backends validate bit-exact against
+    ``run_fused_oracle``/``run_fused_async_oracle``, which thread the same
+    projection/penalty through the d-major tile machinery.
+
+    Returns a ``repro.core.pso.SwarmState``.
+    """
+    from repro.core import rng as _rng
+    from repro.core.blocking import default_block_count
+    from repro.core.constraints import repair_init_positions
+    from repro.core.pso import (STREAM_INIT_POS, STREAM_INIT_VEL, STREAM_R1,
+                                STREAM_R2, SwarmState)
+
+    if variant not in ("queue_lock", "async"):
+        raise ValueError(f"unsupported oracle variant {variant!r}")
+    cfg = cfg.resolved()
+    prob = cfg.problem
+    fit_fn = prob.max_fn                       # penalty rides the wrapper
+    proj = prob.projection_fn
+    n, d = cfg.particle_cnt, cfg.dim
+    dt = jnp.dtype(cfg.dtype)
+
+    def op(v):
+        return jnp.asarray(v, dt) if isinstance(v, tuple) else v
+
+    lo, hi, mv = op(cfg.min_pos), op(cfg.max_pos), op(cfg.max_v)
+    idx = jnp.arange(n * d, dtype=jnp.uint32).reshape(n, d)
+    pos = lo + (hi - lo) * _rng.uniform(seed, 0, STREAM_INIT_POS, idx, dt)
+    vel = -mv + 2.0 * mv * _rng.uniform(seed, 0, STREAM_INIT_VEL, idx, dt)
+    if proj is not None:
+        pos = proj(pos)
+    elif prob.constrained and prob.constraints.mode == "repair":
+        pos = repair_init_positions(prob.constraints, prob.violation_fn,
+                                    pos, lo, hi - lo, seed,
+                                    STREAM_INIT_POS, idx, dt)
+    fit = fit_fn(pos)
+    pbp, pbf = pos, fit
+    b = jnp.argmax(fit)
+    gp, gf = pos[b], fit[b]
+
+    nb = n_blocks or default_block_count(n)
+    bn = n // nb
+    if variant == "async":
+        lbp = jnp.broadcast_to(gp[None, :], (nb, d))
+        lbf = jnp.broadcast_to(gf, (nb,))
+
+    @jax.jit
+    def advance(vel, pos, pbp, attractor, r1, r2):
+        v = (cfg.w * vel + cfg.c1 * r1 * (pbp - pos)
+             + cfg.c2 * r2 * (attractor - pos))
+        v = jnp.clip(v, -mv, mv)
+        p = jnp.clip(pos + v, lo, hi)
+        if proj is not None:
+            p = proj(p)
+        return p, v, fit_fn(p)
+
+    for t in range(1, iters + 1):
+        r1 = _rng.uniform(seed, t, STREAM_R1, idx, dt)
+        r2 = _rng.uniform(seed, t, STREAM_R2, idx, dt)
+        attractor = (gp[None, :] if variant != "async"
+                     else jnp.repeat(lbp, bn, axis=0))
+        pos, vel, fit = advance(vel, pos, pbp, attractor, r1, r2)
+        imp = fit > pbf
+        pbf = jnp.where(imp, fit, pbf)
+        pbp = jnp.where(imp[:, None], pos, pbp)
+        if variant == "async":
+            fb = fit.reshape(nb, bn)
+            bi = jnp.argmax(fb, axis=1)
+            bfit = jnp.take_along_axis(fb, bi[:, None], axis=1)[:, 0]
+            bpos = pos.reshape(nb, bn, d)[jnp.arange(nb), bi]
+            take = bfit > lbf
+            lbf = jnp.where(take, bfit, lbf)
+            lbp = jnp.where(take[:, None], bpos, lbp)
+            sched = t % max(1, sync_every) == 0
+            if sched or t == iters:
+                wb = jnp.argmax(lbf)
+                if float(lbf[wb]) > float(gf):
+                    gf, gp = lbf[wb], lbp[wb]
+                if sched:    # scheduled sync point: publish AND pull; an
+                    # unscheduled final boundary flushes publish-only
+                    # (mirrors run_async's flush_async_locals tail)
+                    lbf = jnp.broadcast_to(gf, lbf.shape)
+                    lbp = jnp.broadcast_to(gp[None, :], lbp.shape)
+        else:
+            if bool(jnp.any(imp)):           # queue-lock publication rule
+                wb = jnp.argmax(pbf)
+                if float(pbf[wb]) > float(gf):
+                    gf, gp = pbf[wb], pbp[wb]
+
+    state = SwarmState(pos=pos, vel=vel, fit=fit, pbest_pos=pbp,
+                       pbest_fit=pbf, gbest_pos=gp, gbest_fit=gf,
+                       iteration=jnp.asarray(iters, jnp.int32),
+                       seed=jnp.asarray(seed, jnp.uint32))
+    if variant == "async":
+        state = state._replace(lbest_pos=lbp, lbest_fit=lbf)
+    return state
+
+
 def _advance_fn(fitness, **kw):
     """The oracles' advance step.
 
     Hand-tuned (built-in) objectives: the plain eager ``_advance_block`` —
     the seed oracle, bit-for-bit. Converted objectives (d-major adapter /
-    user kernel_fn): the kernels pin their advance outputs with an
-    optimization barrier (see ``pso_step._resolve_statics``), and XLA:CPU
-    rounds that pinned advance cluster differently from op-by-op eager
-    execution — so the oracle runs the SAME pinned subgraph under jit,
-    keeping custom-objective validation bit-exact too.
+    user kernel_fn / constrained problems): the kernels pin their advance
+    outputs with an optimization barrier (see
+    ``pso_step._resolve_statics``), and XLA:CPU rounds that pinned advance
+    cluster differently from op-by-op eager execution — so the oracle runs
+    the SAME pinned subgraph under jit, keeping custom-objective validation
+    bit-exact too. A projection-mode constraint set rides the same hook as
+    in the kernels: the d-major ``kernel_projection`` form applied after
+    the box clip inside ``_advance_block``.
     """
+    lifted = kernel_projection(fitness)
+    if lifted is not None:
+        d_real = kw["d_real"]
+        kw = dict(kw, project=lambda p: lifted(p, d_real))
     adv = functools.partial(_advance_block, **kw)
-    if not is_converted(fitness):
+    if not (is_converted(fitness) or lifted is not None):
         return adv
 
     @jax.jit

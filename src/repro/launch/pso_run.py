@@ -15,9 +15,19 @@ ring every --exchange iterations, with the documented staleness bound of
 islands (core/distributed.py).
 
 ``--fitness`` accepts any problem registered with
-``repro.register_problem`` (the six paper benchmarks ship registered); for
-one-off user objectives use the library facade ``repro.solve`` instead —
-see examples/custom_objective.py.
+``repro.register_problem`` (the six paper benchmarks ship registered, plus
+the constrained ``sphere_simplex``/``sphere_simplex_pen``); for one-off
+user objectives use the library facade ``repro.solve`` instead — see
+examples/custom_objective.py.
+
+``--constraint`` attaches constraints to the chosen fitness: expression
+presets like ``"sum(x)<=1"``/``"norm(x)<=2"``/``"min(x)>=0"``/
+``"sum(x)==1"`` (repeatable), or the named preset ``simplex``.
+``--constraint-mode`` picks penalty (default; ``--penalty-weight``),
+repair, or projection (projection needs the ``simplex`` preset — general
+expressions have no automatic projection operator). The run then reports
+``violation=``/``feasible=`` next to the usual gbest line. See
+``repro.core.constraints`` for the mode semantics and the Deb rule.
 """
 from __future__ import annotations
 
@@ -28,7 +38,8 @@ import jax
 import numpy as np
 
 from repro.core import ASYNC_SYNC_EVERY, PSOConfig, init_swarm, run
-from repro.core.problem import list_problems
+from repro.core.constraints import constrain_problem, constraint_set_from_cli
+from repro.core.problem import list_problems, resolve_problem
 from repro.core.distributed import (gather_swarm, init_sharded_swarm,
                                     make_distributed_run)
 from repro.runtime import RunnerConfig, StepRunner
@@ -56,13 +67,32 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="checkpoint every N iterations (0=off)")
+    ap.add_argument("--constraint", action="append", default=[],
+                    metavar="SPEC",
+                    help="constraint preset: 'sum(x)<=1'-style expressions "
+                         "(sum|norm|norm2|min|max, <=|>=|==; repeatable) "
+                         "or the named preset 'simplex'")
+    ap.add_argument("--constraint-mode", default="penalty",
+                    choices=["penalty", "projection", "repair"],
+                    help="how constraints are enforced (core.constraints)")
+    ap.add_argument("--penalty-weight", type=float, default=1000.0,
+                    help="penalty mode: weight per unit violation")
     args = ap.parse_args()
 
     if args.fitness not in list_problems():
         ap.error(f"unknown fitness {args.fitness!r}; registered problems: "
                  f"{', '.join(list_problems())}")
+    fitness = args.fitness
+    if args.constraint:
+        try:
+            cset = constraint_set_from_cli(args.constraint,
+                                           mode=args.constraint_mode,
+                                           weight=args.penalty_weight)
+            fitness = constrain_problem(args.fitness, cset)
+        except ValueError as e:
+            ap.error(str(e))
     cfg = PSOConfig(dim=args.dim, particle_cnt=args.particles,
-                    fitness=args.fitness).resolved()
+                    fitness=fitness).resolved()
     if args.kernel and not args.islands and args.variant not in (
             "queue_lock", "async"):
         # only the fused queue-lock kernels exist; don't silently run
@@ -123,7 +153,12 @@ def main():
                     ckpt.save(args.ckpt_dir, done, gather_swarm(state))
     gf = float(state.gbest_fit)
     dt = time.time() - t0
-    print(f"gbest_fit={gf:.6g}  iters={args.iters}  "
+    extra = ""
+    prob = resolve_problem(fitness)
+    if prob.constrained:
+        viol = prob.violation_at(state.gbest_pos)
+        extra = f"violation={viol:.3g}  feasible={viol <= 0.0}  "
+    print(f"gbest_fit={gf:.6g}  {extra}iters={args.iters}  "
           f"particles={args.particles}  dim={args.dim}  "
           f"wall={dt:.3f}s  ({1e6*dt/args.iters:.1f} us/iter)")
     return 0

@@ -17,10 +17,15 @@ variants with ``backend="kernel"``.
 ``repro.core.problem.Problem`` (user-defined objective; the kernel backend
 lowers it automatically — see ``repro.kernels.pso_step.dmajor_adapter``).
 The grouping key hashes the problem's CONTENT (objective bytecode + consts
-+ bounds + sense, ``Problem.cache_key``), never its name or object
-identity, so two distinct custom objectives can never share a batch even if
-both are called "mine" — and re-submitted identical objectives still batch
-together.
++ bounds + sense + constraint set, ``Problem.cache_key``), never its name
+or object identity, so two distinct custom objectives can never share a
+batch even if both are called "mine" — and re-submitted identical
+objectives still batch together. Constrained problems
+(``repro.core.constraints``) ride the same machinery: two requests whose
+constraint sets differ (mode, weight, constraint code) get distinct batch
+keys, and ``SolveResult.feasible``/``violation`` report the Deb-rule
+feasibility of each answer. Penalty-ramp schedules are a facade feature
+(``repro.solve``/``solve_many``); serving runs the static weight.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 24 --iters 200
 
@@ -101,6 +106,19 @@ class SolveResult:
         problem reports the minimized value)."""
         return float(resolve_problem(self.request.fitness)
                      .user_value(self.gbest_fit))
+
+    @property
+    def violation(self) -> float:
+        """Aggregate constraint violation at ``gbest_pos`` (0.0 for
+        unconstrained problems) — the Deb-rule input, mirrored from
+        ``repro.Result.violation`` so serving responses carry the same
+        feasibility report as the facade."""
+        return resolve_problem(self.request.fitness).violation_at(
+            self.gbest_pos)
+
+    @property
+    def feasible(self) -> bool:
+        return self.violation <= 0.0
 
 
 @dataclasses.dataclass

@@ -82,10 +82,12 @@ def test_problem_validation():
     fn = lambda x: jnp.sum(x, axis=-1)
     with pytest.raises(ValueError, match="sense"):
         Problem(name="x", fn=fn, sense="down")
-    with pytest.raises(ValueError, match="lo < hi"):
+    with pytest.raises(ValueError, match="lo <= hi"):
         Problem(name="x", fn=fn, lo=1.0, hi=-1.0)
-    with pytest.raises(ValueError, match="lo < hi"):
+    with pytest.raises(ValueError, match="lo <= hi"):
         Problem(name="x", fn=fn, lo=(0.0, 2.0), hi=(1.0, 1.0))
+    # lo == hi is legal: the coordinate is frozen (tests/test_bounds.py)
+    Problem(name="x", fn=fn, lo=(0.0, 0.5), hi=(1.0, 0.5))
     with pytest.raises(ValueError, match="lengths differ"):
         Problem(name="x", fn=fn, lo=(0.0, 0.0), hi=(1.0, 1.0, 1.0))
     # arrays normalize to tuples (hashable); scalar broadcasts against [D]
