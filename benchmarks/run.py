@@ -7,6 +7,10 @@
   table5  — 120D speedup of Queue vs CPU serial (paper Table 5).
   multi_swarm — batched engine: S independent solves via ONE solve_many
             device program vs a Python loop of solve() (swarms/sec).
+  mixed_traffic — serving-layer registry coalescing: a mixed trace of
+            built-in objectives at one solve shape, heterogeneous batches
+            (launch/serve.py, lax.switch row dispatch) vs the legacy
+            content-hash grouping — batch fill, dispatches, flush p50/p99.
   async_sweep — the enhanced (asynchronous) queue-lock: per-iteration cost
             and solution quality vs the synchronous kernel across
             sync_every ∈ {1, 4, 16, 64}. Fewer chunk boundaries = fewer
@@ -309,6 +313,52 @@ def multi_swarm(smoke=False) -> None:
              speedup_vs_loop=t_loop / t_batch)
 
 
+def mixed_traffic(smoke=False) -> None:
+    """Serving-layer registry coalescing (launch/serve.py): a stream of
+    requests cycling through the six built-in objectives at ONE solve
+    shape, flushed in waves. With ``coalesce_registry`` every wave is a
+    single heterogeneous dispatch (one compiled program for the whole
+    mix); the legacy content-hash grouping pays one dispatch — and one
+    compiled program — per distinct objective. ``first_flush_us`` carries
+    the compile cost of each mode; later flushes are steady-state, so the
+    p50/p99 columns are the serving-latency claim. ``fill_vs_content_hash``
+    (real rows per dispatch, ratio of the two modes) is the coalescing
+    payoff — 6 distinct objectives per wave means a >=2x floor."""
+    from repro.launch.serve import SolveRequest, SolveServer
+    names = ("cubic", "sphere", "rosenbrock", "griewank", "rastrigin",
+             "ackley")
+    dim, n, iters = 10, 128, (20 if smoke else 100)
+    waves, per_wave = (3, 6) if smoke else (6, 12)
+    stats, flushes = {}, {}
+    for label, coalesce in (("hetero", True), ("content_hash", False)):
+        srv = SolveServer(coalesce_registry=coalesce)
+        lat = []
+        k = 0
+        for _ in range(waves):
+            for _ in range(per_wave):
+                srv.submit(SolveRequest(
+                    dim=dim, particle_cnt=n, fitness=names[k % len(names)],
+                    seed=k, iters=iters, variant="queue"))
+                k += 1
+            t0 = time.perf_counter()
+            srv.flush()
+            lat.append(1e6 * (time.perf_counter() - t0))
+        stats[label], flushes[label] = srv.stats, lat
+    for label in ("hetero", "content_hash"):
+        s, lat = stats[label], flushes[label]
+        steady = lat[1:] or lat
+        kv = dict(first_flush_us=lat[0],
+                  p50_us=float(np.percentile(steady, 50)),
+                  p99_us=float(np.percentile(steady, 99)),
+                  dispatches=s.dispatches, batch_fill=s.batch_fill,
+                  padded_rows=s.padded_rows)
+        if label == "hetero":
+            kv["fill_vs_content_hash"] = (
+                s.batch_fill / stats["content_hash"].batch_fill)
+        emit(f"mixed_traffic/d{dim}_n{n}/{label}", float(np.mean(steady)),
+             **kv)
+
+
 def custom_objective(smoke=False) -> None:
     """Problem-API adapter overhead: the generic d-major adapter
     (``repro.kernels.pso_step.dmajor_adapter`` — transpose + sliced user
@@ -417,6 +467,7 @@ def main() -> None:
     table4(args.smoke)
     table5(args.smoke)
     multi_swarm(args.smoke)
+    mixed_traffic(args.smoke)
     async_sweep(args.smoke)
     islands_ring(args.smoke)
     custom_objective(args.smoke)

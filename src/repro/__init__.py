@@ -4,6 +4,8 @@ Top-level surface (lazily imported so ``import repro`` stays cheap):
 
     repro.solve(problem, ...) -> Result       # the unified facade
     repro.solve_many(problem, seeds, ...)     # batched facade
+    repro.solve_many(problems=[...], seeds=...)  # heterogeneous batch
+                                              # (one problem per row)
     repro.Method / repro.Result               # method spec / result
     repro.Problem / repro.register_problem    # first-class objectives
     repro.get_problem / repro.list_problems

@@ -249,11 +249,7 @@ def solve(problem: Union[str, Problem], *,
     cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
                        min_pos, max_pos, max_v)
     if m.islands:
-        if len(_ramp_segments(iters, prob.constraints)) > 1:
-            raise ValueError(
-                "the penalty ramp does not compose with islands yet; use "
-                "a static weight (ramp_every=0) or islands=0")
-        state = _run_islands(cfg, seed, iters, m)
+        state = _run_islands(prob, cfg, seed, iters, m)
         hist = None
     else:
         state = init_swarm(cfg, seed)
@@ -262,9 +258,13 @@ def solve(problem: Union[str, Problem], *,
                   state=state, history=hist)
 
 
-def _run_islands(cfg: PSOConfig, seed: int, iters: int, m: Method
-                 ) -> SwarmState:
-    """The sharded path: init + run over an ``m.islands``-device mesh."""
+def _run_islands(prob: Problem, cfg: PSOConfig, seed: int, iters: int,
+                 m: Method) -> SwarmState:
+    """The sharded path: init once, then one ``make_distributed_run`` per
+    penalty-ramp segment over an ``m.islands``-device mesh (a single
+    full-length runner when no ramp is configured). The mesh and sharded
+    init are built once; only the per-segment runner re-jits, keyed on
+    ``(weight, seg_iters)`` like every other backend's ramp."""
     import jax
     import numpy as _np
     from jax.sharding import Mesh
@@ -282,11 +282,23 @@ def _run_islands(cfg: PSOConfig, seed: int, iters: int, m: Method
         local_step = make_fused_local_step(
             block_n=m.block_n, interpret=m.resolve_interpret())
     state = init_sharded_swarm(cfg, seed, mesh)
-    runner = make_distributed_run(
-        cfg, mesh, iters=iters, variant=m.variant,
-        exchange_interval=m.exchange_interval, local_step_fn=local_step,
-        sync_every=m.sync_every)
-    return runner(state)
+
+    def run_seg(cfg_k: PSOConfig, s: SwarmState, seg_iters: int):
+        runner = make_distributed_run(
+            cfg_k, mesh, iters=seg_iters, variant=m.variant,
+            exchange_interval=m.exchange_interval, local_step_fn=local_step,
+            sync_every=m.sync_every)
+        return runner(s), None
+
+    def reweight(cfg_k: PSOConfig, s: SwarmState) -> SwarmState:
+        # The async ring takes lbest-free inputs (its in_specs carry no
+        # locals; each segment re-seeds its block caches), so drop them
+        # before re-weighting — sync variants never carry them here.
+        return _reweight_state(cfg_k, s._replace(lbest_pos=None,
+                                                 lbest_fit=None))
+
+    state, _ = _ramp_loop(prob, cfg, state, iters, run_seg, reweight)
+    return state
 
 
 def _ramp_segments(iters: int, cset):
@@ -381,7 +393,9 @@ def _run_state(cfg: PSOConfig, state: SwarmState, iters: int, m: Method):
     return run(cfg, state, iters, m.variant, sync_every=m.sync_every), None
 
 
-def solve_many(problem: Union[str, Problem], seeds: Sequence[int], *,
+def solve_many(problem: Union[str, Problem, None] = None,
+               seeds: Sequence[int] = (), *,
+               problems: Optional[Sequence[Union[str, Problem]]] = None,
                dim: Optional[int] = None, particles: int = 1024,
                iters: int = 1000,
                method: Optional[Method] = None,
@@ -398,8 +412,18 @@ def solve_many(problem: Union[str, Problem], seeds: Sequence[int], *,
     Pallas kernels for ``backend="kernel"``). Row ``s`` is bit-identical to
     ``solve(problem, seed=seeds[s], ...)`` with the same method when
     ``coeffs`` is None. Returns one ``Result`` per seed.
+
+    ``problems=`` (instead of ``problem``) makes the batch heterogeneous:
+    row ``s`` solves ``problems[s]`` — each a registered built-in — with
+    its own objective and box bounds dispatched by ``lax.switch`` inside
+    the one program (jnp engine and both batched kernels). Bounds come
+    from each row's problem, so the ``min_pos``/``max_pos``/``max_v``
+    overrides are rejected; penalty-ramp schedules don't apply (built-in
+    table entries are unconstrained or static-penalty). The validated
+    exactness surface is ``gbest_pos``/``gbest_fit`` (see
+    ``repro.core.pso``'s heterogeneous-dispatch notes for the full
+    envelope).
     """
-    prob = resolve_problem(problem)
     m = _make_method(method, variant, backend, sync_every, block_n,
                      interpret)
     if m.islands:
@@ -408,6 +432,15 @@ def solve_many(problem: Union[str, Problem], seeds: Sequence[int], *,
     if m.record_history:
         raise ValueError("record_history is a solve()-only feature (the "
                          "batch engine does not surface per-row histories)")
+    if (problem is None) == (problems is None):
+        raise ValueError(
+            "pass exactly one of problem= (homogeneous batch) or "
+            "problems= (one problem per seed)")
+    if problems is not None:
+        return _solve_many_hetero(problems, seeds, m, dim, particles, iters,
+                                  coeffs, w, c1, c2, dtype,
+                                  min_pos, max_pos, max_v)
+    prob = resolve_problem(problem)
     cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
                        min_pos, max_pos, max_v)
     batch = init_batch(cfg, np.asarray(seeds, dtype=np.int64))
@@ -417,6 +450,56 @@ def solve_many(problem: Union[str, Problem], seeds: Sequence[int], *,
         _reweight_batch)
     return [Result(problem=prob, config=cfg, method=m, iters=iters,
                    state=batch_row(batch, s))
+            for s in range(batch.swarm_cnt)]
+
+
+def _solve_many_hetero(problems, seeds, m: Method, dim, particles, iters,
+                       coeffs, w, c1, c2, dtype,
+                       min_pos, max_pos, max_v) -> List[Result]:
+    """``solve_many(problems=[...])``: per-row problem dispatch."""
+    from repro.core.pso import hetero_member_config
+    if min_pos is not None or max_pos is not None or max_v is not None:
+        raise ValueError("heterogeneous batches take bounds from each "
+                         "row's problem; drop min_pos/max_pos/max_v")
+    probs = [resolve_problem(p) for p in problems]
+    if len(probs) != len(seeds):
+        raise ValueError(f"{len(probs)} problems for {len(seeds)} seeds")
+    # cfg.fitness is a canonical placeholder: the rows carry the real
+    # objectives, and a fixed value lets every mix share one compiled
+    # program. Bounds stay unset — the core validates that.
+    kw = dict(dim=dim if dim is not None else 1, particle_cnt=particles,
+              fitness="cubic", dtype=dtype)
+    for key, v in (("w", w), ("c1", c1), ("c2", c2)):
+        if v is not None:
+            kw[key] = v
+    cfg = PSOConfig(**kw)
+    seeds_arr = np.asarray(seeds, dtype=np.int64)
+    if m.resolve_backend() == "kernel":
+        if coeffs is not None:
+            raise ValueError("per-swarm coeffs are a jnp-backend feature")
+        from repro.core.multi_swarm import problem_rows
+        from repro.kernels.ops import (run_queue_lock_fused_batch,
+                                       run_queue_lock_fused_async_batch)
+        rows, table = problem_rows(probs, cfg.dim, cfg.dtype)
+        rcfg = cfg.resolved()
+        batch = init_batch(rcfg, seeds_arr, rows=rows, table=table)
+        if m.variant == "async":
+            batch = run_queue_lock_fused_async_batch(
+                rcfg, batch, iters, sync_every=m.sync_every,
+                block_n=m.block_n, interpret=m.resolve_interpret(),
+                fids=rows.fid, table=table)
+        else:
+            batch = run_queue_lock_fused_batch(
+                rcfg, batch, iters, block_n=m.block_n,
+                interpret=m.resolve_interpret(), fids=rows.fid, table=table)
+    else:
+        from repro.core.multi_swarm import solve_many as _core_solve_many
+        batch = _core_solve_many(cfg, seeds_arr, iters=iters,
+                                 variant=m.variant, coeffs=coeffs,
+                                 sync_every=m.sync_every, problems=probs)
+    return [Result(problem=probs[s],
+                   config=hetero_member_config(cfg, probs[s]),
+                   method=m, iters=iters, state=batch_row(batch, s))
             for s in range(batch.swarm_cnt)]
 
 

@@ -62,10 +62,17 @@ Results of constrained solves are compared with Deb's standard rule
 solutions compare on fitness, (3) two infeasible solutions compare on
 violation (smaller wins). ``repro.best`` implements this over a batch of
 ``Result``s and degenerates to plain max-fitness for unconstrained
-problems (everything is feasible at violation zero). The engine's internal
-gbest selection is deliberately NOT Deb-ized — it tracks the canonical
-(possibly penalized) fitness so the validated kernel publication rules are
-untouched; feasibility preference lives at the facade.
+problems (everything is feasible at violation zero). For ``projection``
+and ``repair`` modes the SAME rule also drives the engine-level *pbest*
+selection (``deb_improved`` below, threaded through the jnp step
+functions, the Pallas kernel bodies, and the validating oracles): a
+feasible personal best is never displaced by a higher-fitness infeasible
+candidate, so with the feasibility-seeking init the pbest population stays
+feasible and the pbest-sourced gbest publication rules need no change.
+``penalty`` mode deliberately stays on raw canonical fitness — the penalty
+IS the feasibility pressure, already baked into ``Problem.max_fn`` — which
+also keeps unconstrained and penalty-mode jaxprs bit-identical to the
+pre-Deb engines.
 
 Hashability: ``Constraint``/``ConstraintSet`` are frozen dataclasses (jit
 static-argument safe), and their CONTENT (mode, weights, constraint
@@ -87,6 +94,27 @@ from .problem import Problem, register_problem
 Array = jnp.ndarray
 
 MODES = ("penalty", "projection", "repair")
+
+
+def deb_improved(fit_new: Array, viol_new: Array, fit_old: Array,
+                 viol_old: Array) -> Array:
+    """Deb-rule selection mask: True where the new point displaces the old.
+
+    (1) A feasible point (violation <= 0) beats any infeasible one, (2) two
+    feasible points compare on canonical fitness, (3) two infeasible points
+    compare on aggregate violation (smaller wins). Strict comparisons
+    throughout, so ties keep the incumbent — exactly like the raw
+    ``fit > pbest`` fold this replaces, to which it degenerates when both
+    violations are zero. Shared by the jnp step functions
+    (``pso.deb_selection_fn``), the Pallas kernel bodies
+    (``pso_step._pbest_improved``) and the eager oracles, so the bit-exact
+    validation chain compares like with like.
+    """
+    feas_new = viol_new <= 0.0
+    feas_old = viol_old <= 0.0
+    return ((feas_new & ~feas_old)
+            | (feas_new & feas_old & (fit_new > fit_old))
+            | (~feas_new & ~feas_old & (viol_new < viol_old)))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -63,11 +63,128 @@ from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .pso import (ASYNC_SYNC_EVERY, PSOConfig, STEP_FNS, SwarmState,
-                  init_swarm, run_async)
+from .problem import Problem, resolve_problem
+from .pso import (ASYNC_SYNC_EVERY, HeteroRow, PSOConfig, STEP_FNS,
+                  SwarmState, init_swarm, run_async)
 
 Array = jnp.ndarray
+
+
+class ProblemRows(NamedTuple):
+    """Per-row problem descriptors for a heterogeneous batch.
+
+    Built by ``problem_rows`` against a *static* dispatch table (a tuple of
+    registered ``Problem``s, by default the built-in benchmark suite):
+    ``fid[s]`` indexes the table, and the bound columns replicate exactly
+    the arithmetic ``PSOConfig.resolved()`` would have produced for row
+    ``s``'s problem (Python-float64 ``0.5 * (hi - lo)`` then a cast), so a
+    heterogeneous row is bit-identical to the standalone solve of its
+    problem. ``sense``/``cmode``/``pweight`` are descriptor metadata —
+    constant for the built-in table (max-sense, unconstrained, weight 0) —
+    reserved for the two-tier custom-objective follow-on where penalty-mode
+    registry entries join the table.
+    """
+
+    fid: Array      # [S] int32 — index into the static dispatch table
+    lo: Array       # [S, D] lower box bound per row
+    hi: Array       # [S, D] upper box bound per row
+    mv: Array       # [S, D] velocity clamp per row
+    sense: Array    # [S] int32: +1 max / -1 min (baked into the branch)
+    cmode: Array    # [S] int32: 0 unconstrained / 1 penalty
+    pweight: Array  # [S] penalty weight (0 when unconstrained)
+
+    @property
+    def swarm_cnt(self) -> int:
+        return self.fid.shape[0]
+
+
+
+def hetero_fid(fitness) -> Optional[int]:
+    """Index of ``fitness`` in the built-in dispatch table, else None.
+
+    The coalescing eligibility test: a request whose problem IS one of the
+    registered built-ins (dataclass equality — ``fn`` by identity, so
+    registry-resolved instances match and a user's re-built lookalike does
+    not) can ride a shared heterogeneous batch; everything else keeps
+    content-hash isolation.
+    """
+    from .fitness import BUILTIN_PROBLEMS
+    try:
+        prob = resolve_problem(fitness)
+    except (KeyError, TypeError):
+        return None
+    for i, p in enumerate(BUILTIN_PROBLEMS):
+        if prob == p:
+            return i
+    return None
+
+
+def _row_bound(v, d: int, dt) -> np.ndarray:
+    """Resolved Bound (scalar or per-dim tuple) -> [D] host array."""
+    if isinstance(v, tuple):
+        return np.asarray(v, dt)
+    return np.full((d,), v, dt)
+
+
+def problem_rows(problems: Sequence, dim: int, dtype: str = "float32",
+                 table: Optional[Tuple[Problem, ...]] = None
+                 ) -> Tuple[ProblemRows, Tuple[Problem, ...]]:
+    """Build the per-row descriptors for a heterogeneous batch.
+
+    ``problems`` are names or ``Problem``s, each of which must appear in
+    ``table`` (default: the built-in benchmark suite) — the static branch
+    tuple the engines ``lax.switch`` over. Table entries must be
+    unconstrained or penalty-mode (the penalty rides ``max_fn``):
+    projection/repair entries would need per-row init/advance hooks and are
+    rejected. Returns ``(rows, table)``.
+    """
+    from .fitness import BUILTIN_PROBLEMS
+    table = BUILTIN_PROBLEMS if table is None else tuple(table)
+    for p in table:
+        if p.projection_fn is not None or (
+                p.constrained and p.constraints.mode == "repair"):
+            raise ValueError(
+                f"problem {p.name!r}: projection/repair constraint modes "
+                "cannot join a heterogeneous dispatch table (per-row "
+                "init/advance hooks); solve it in its own batch")
+    dt = np.dtype(dtype)
+    fid, lo, hi, mv, sense, cmode, pw = [], [], [], [], [], [], []
+    for f in problems:
+        prob = resolve_problem(f)
+        try:
+            i = table.index(prob)
+        except ValueError:
+            raise ValueError(
+                f"problem {prob.name!r} is not in the heterogeneous "
+                "dispatch table; solve it in its own (content-keyed) batch"
+            ) from None
+        # Exactly the standalone bound resolution (max_v = 0.5 * (hi - lo)
+        # in Python float64, then one cast) — the row-bit-identity contract.
+        r = PSOConfig(dim=dim, fitness=prob, dtype=dtype).resolved()
+        fid.append(i)
+        lo.append(_row_bound(r.min_pos, dim, dt))
+        hi.append(_row_bound(r.max_pos, dim, dt))
+        mv.append(_row_bound(r.max_v, dim, dt))
+        sense.append(1 if prob.sense == "max" else -1)
+        cset = prob.constraints
+        penalized = cset is not None and cset.mode == "penalty"
+        cmode.append(1 if penalized else 0)
+        pw.append(cset.weight if penalized else 0.0)
+    return ProblemRows(
+        fid=jnp.asarray(fid, jnp.int32),
+        lo=jnp.asarray(np.stack(lo)), hi=jnp.asarray(np.stack(hi)),
+        mv=jnp.asarray(np.stack(mv)),
+        sense=jnp.asarray(sense, jnp.int32),
+        cmode=jnp.asarray(cmode, jnp.int32),
+        pweight=jnp.asarray(np.asarray(pw, dt)),
+    ), table
+
+
+def _hetero_rows(rows: ProblemRows) -> HeteroRow:
+    """The engine-facing slice of the descriptors (vmaps to per-row)."""
+    return HeteroRow(fid=rows.fid, lo=rows.lo, hi=rows.hi, mv=rows.mv)
 
 
 class SwarmBatch(NamedTuple):
@@ -95,15 +212,21 @@ class SwarmBatch(NamedTuple):
         return self.gbest_fit.shape[0]
 
 
-def init_batch(cfg: PSOConfig, seeds) -> SwarmBatch:
+def init_batch(cfg: PSOConfig, seeds, rows: Optional[ProblemRows] = None,
+               table: Optional[Tuple[Problem, ...]] = None) -> SwarmBatch:
     """Initialize S swarms, one per entry of ``seeds``.
 
     Row ``s`` is bit-identical to ``init_swarm(cfg, seeds[s])`` (see module
-    docstring: the RNG counters are untouched by the vmap).
+    docstring: the RNG counters are untouched by the vmap). With
+    ``rows``/``table`` (heterogeneous batch) each row instead initializes
+    against its own problem's bounds and objective.
     """
     cfg = cfg.resolved()
     seeds = jnp.asarray(seeds)
-    return SwarmBatch(*jax.vmap(lambda sd: init_swarm(cfg, sd))(seeds))
+    if rows is None:
+        return SwarmBatch(*jax.vmap(lambda sd: init_swarm(cfg, sd))(seeds))
+    fn = jax.vmap(lambda sd, f: init_swarm(cfg, sd, hetero=(table, f)))
+    return SwarmBatch(*fn(seeds, _hetero_rows(rows)))
 
 
 def batch_row(batch: SwarmBatch, s: int) -> SwarmState:
@@ -117,39 +240,87 @@ def stack_states(states: Sequence[SwarmState]) -> SwarmBatch:
     return SwarmBatch(*stacked)
 
 
-@partial(jax.jit, static_argnames=("cfg", "iters", "sync_every"))
+@partial(jax.jit,
+         static_argnames=("cfg", "iters", "sync_every", "phase", "table"))
 def _run_many_async(cfg: PSOConfig, batch: SwarmBatch, iters: int,
                     sync_every: int,
-                    coeffs: Optional[Tuple[Array, Array, Array]] = None
-                    ) -> SwarmBatch:
-    if coeffs is None:
+                    coeffs: Optional[Tuple[Array, Array, Array]] = None,
+                    phase: int = 0, rows: Optional[ProblemRows] = None,
+                    table=None) -> SwarmBatch:
+    hr = None if rows is None else _hetero_rows(rows)
+    if coeffs is None and hr is None:
         fn = jax.vmap(lambda s: run_async(
-            cfg, s, iters, sync_every=sync_every))
+            cfg, s, iters, sync_every=sync_every, phase=phase))
         return SwarmBatch(*fn(SwarmState(*batch)))
+    if coeffs is None:
+        fn = jax.vmap(lambda s, f: run_async(
+            cfg, s, iters, sync_every=sync_every, phase=phase,
+            hetero_row=f, table=table))
+        return SwarmBatch(*fn(SwarmState(*batch), hr))
     w, c1, c2 = (jnp.asarray(c) for c in coeffs)
-    fn = jax.vmap(lambda s, w_, c1_, c2_: run_async(
-        cfg, s, iters, sync_every=sync_every, coeffs=(w_, c1_, c2_)))
-    return SwarmBatch(*fn(SwarmState(*batch), w, c1, c2))
+    if hr is None:
+        fn = jax.vmap(lambda s, w_, c1_, c2_: run_async(
+            cfg, s, iters, sync_every=sync_every, coeffs=(w_, c1_, c2_),
+            phase=phase))
+        return SwarmBatch(*fn(SwarmState(*batch), w, c1, c2))
+    fn = jax.vmap(lambda s, w_, c1_, c2_, f: run_async(
+        cfg, s, iters, sync_every=sync_every, coeffs=(w_, c1_, c2_),
+        phase=phase, hetero_row=f, table=table))
+    return SwarmBatch(*fn(SwarmState(*batch), w, c1, c2, hr))
 
 
-@partial(jax.jit, static_argnames=("cfg", "iters", "variant"))
+def _batch_phases(batch: SwarmBatch, sync_every: int) -> Tuple[int, ...]:
+    """Per-swarm resume phases (``iteration % sync_every``), host-side.
+
+    ``run_async``'s publication schedule aligns to absolute iteration
+    numbers via a *static* ``phase``; under vmap the per-row iteration is a
+    tracer, so the single-swarm auto-derivation silently fell back to 0 and
+    a resumed batched async solve restarted every swarm's staleness window
+    (PR 5 known bug). The phases are read off the concrete batch before jit
+    entry instead. Under a trace (run_many called inside jit) the counters
+    are unreadable — fall back to 0, the historical relative behavior.
+    """
+    se = max(1, sync_every)
+    try:
+        return tuple(int(i) % se for i in batch.iteration)
+    except (TypeError, jax.errors.ConcretizationTypeError,
+            jax.errors.TracerIntegerConversionError):
+        return (0,) * batch.swarm_cnt
+
+
+@partial(jax.jit, static_argnames=("cfg", "iters", "variant", "table"))
 def _run_many_stepped(cfg: PSOConfig, batch: SwarmBatch, iters: int,
                       variant: str,
-                      coeffs: Optional[Tuple[Array, Array, Array]] = None
+                      coeffs: Optional[Tuple[Array, Array, Array]] = None,
+                      rows: Optional[ProblemRows] = None, table=None
                       ) -> SwarmBatch:
     step = STEP_FNS[variant]
-    if coeffs is None:
+    hr = None if rows is None else _hetero_rows(rows)
+    if coeffs is None and hr is None:
         step_b = jax.vmap(lambda s: step(cfg, s))
 
         def body(_, b):
             return SwarmBatch(*step_b(SwarmState(*b)))
-    else:
+    elif hr is None:
         w, c1, c2 = (jnp.asarray(c) for c in coeffs)
         step_b = jax.vmap(
             lambda s, w_, c1_, c2_: step(cfg, s, coeffs=(w_, c1_, c2_)))
 
         def body(_, b):
             return SwarmBatch(*step_b(SwarmState(*b), w, c1, c2))
+    elif coeffs is None:
+        step_b = jax.vmap(lambda s, h: step(cfg, s, hetero=(table, h)))
+
+        def body(_, b):
+            return SwarmBatch(*step_b(SwarmState(*b), hr))
+    else:
+        w, c1, c2 = (jnp.asarray(c) for c in coeffs)
+        step_b = jax.vmap(
+            lambda s, w_, c1_, c2_, h: step(cfg, s, coeffs=(w_, c1_, c2_),
+                                            hetero=(table, h)))
+
+        def body(_, b):
+            return SwarmBatch(*step_b(SwarmState(*b), w, c1, c2, hr))
 
     return jax.lax.fori_loop(0, iters, body, batch)
 
@@ -178,7 +349,9 @@ def _pad_rows(batch: SwarmBatch, target: int) -> SwarmBatch:
 def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
              variant: str = "queue",
              coeffs: Optional[Tuple[Array, Array, Array]] = None,
-             sync_every: int = ASYNC_SYNC_EVERY) -> SwarmBatch:
+             sync_every: int = ASYNC_SYNC_EVERY,
+             rows: Optional[ProblemRows] = None,
+             table: Optional[Tuple[Problem, ...]] = None) -> SwarmBatch:
     """Advance every swarm of the batch ``iters`` iterations in lockstep.
 
     One fori_loop over one vmapped step: a single compiled program, a single
@@ -207,22 +380,55 @@ def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
                                  jnp.broadcast_to(jnp.asarray(c)[:1],
                                                   (pad - s_cnt,))])
                 for c in coeffs)
-        out = run_many(cfg, batch, iters, variant, coeffs, sync_every)
+        if rows is not None:
+            rows = ProblemRows(*jax.tree_util.tree_map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.broadcast_to(a[:1],
+                                         (pad - s_cnt,) + a.shape[1:])]),
+                tuple(rows)))
+        out = run_many(cfg, batch, iters, variant, coeffs, sync_every,
+                       rows, table)
         return SwarmBatch(*jax.tree_util.tree_map(lambda a: a[:s_cnt],
                                                   tuple(out)))
     if variant == "async":
-        return _run_many_async(cfg, batch, iters, sync_every, coeffs)
+        phases = _batch_phases(batch, sync_every)
+        uniq = sorted(set(phases))
+        if len(uniq) == 1:
+            return _run_many_async(cfg, batch, iters, sync_every, coeffs,
+                                   uniq[0], rows, table)
+        # Mixed resume points (rows checkpointed at different iterations):
+        # phase is static per compiled program, so dispatch one padded
+        # program per phase group and scatter the rows back in place.
+        out_rows = [None] * s_cnt
+        for ph in uniq:
+            idx = [i for i, p in enumerate(phases) if p == ph]
+            take = jnp.asarray(idx)
+            sub = SwarmBatch(*jax.tree_util.tree_map(
+                lambda a: a[take], tuple(batch)))
+            sub_coeffs = (tuple(jnp.asarray(c)[take] for c in coeffs)
+                          if coeffs is not None else None)
+            sub_rows = (ProblemRows(*jax.tree_util.tree_map(
+                lambda a: a[take], tuple(rows)))
+                if rows is not None else None)
+            out = run_many(cfg, sub, iters, variant, sub_coeffs, sync_every,
+                           sub_rows, table)
+            for j, i in enumerate(idx):
+                out_rows[i] = jax.tree_util.tree_map(lambda a: a[j],
+                                                     tuple(out))
+        return SwarmBatch(*jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *out_rows))
     if batch.lbest_fit is not None:
         # mirror run(): sync variants advance gbest without maintaining the
         # async block-local cache — drop it so a later async run re-seeds
         batch = batch._replace(lbest_pos=None, lbest_fit=None)
-    return _run_many_stepped(cfg, batch, iters, variant, coeffs)
+    return _run_many_stepped(cfg, batch, iters, variant, coeffs, rows, table)
 
 
 def solve_many(cfg: PSOConfig, seeds, iters: int = 1000,
                variant: str = "queue",
                coeffs: Optional[Tuple[Array, Array, Array]] = None,
-               sync_every: int = ASYNC_SYNC_EVERY) -> SwarmBatch:
+               sync_every: int = ASYNC_SYNC_EVERY,
+               problems: Optional[Sequence] = None) -> SwarmBatch:
     """Batched one-shot: init + run for S independent solves.
 
     ``seeds`` is any int sequence/array of length S; ``variant`` is one of
@@ -231,7 +437,34 @@ def solve_many(cfg: PSOConfig, seeds, iters: int = 1000,
     variant's publication interval. Row ``s`` of the result is
     bit-identical to ``solve(cfg, seeds[s], iters, variant)`` when
     ``coeffs`` is None.
+
+    ``problems`` (length S, names or registered built-in ``Problem``s)
+    makes the batch *heterogeneous*: row ``s`` solves ``problems[s]`` —
+    its own objective (dispatched by ``lax.switch`` inside one compiled
+    program) and its own box bounds — and is bit-identical to
+    ``solve(cfg_s, seeds[s], iters, variant)`` with ``cfg_s`` the same
+    config pointed at ``problems[s]``. ``cfg.fitness`` is ignored for the
+    rows (it only keys the compile cache — the serving layer pins it to a
+    canonical value so every mix shares one program) and explicit
+    ``min_pos``/``max_pos``/``max_v`` overrides are rejected: bounds come
+    from each row's problem.
     """
+    if problems is not None:
+        if (cfg.min_pos is not None or cfg.max_pos is not None
+                or cfg.max_v is not None):
+            raise ValueError(
+                "heterogeneous batches take bounds from each row's "
+                "problem; pass a config without min_pos/max_pos/max_v "
+                "overrides (and not already resolved())")
+        seeds = jnp.asarray(seeds)
+        if len(problems) != seeds.shape[0]:
+            raise ValueError(
+                f"{len(problems)} problems for {seeds.shape[0]} seeds")
+        rows, table = problem_rows(problems, cfg.dim, cfg.dtype)
+        cfg = cfg.resolved()
+        batch = init_batch(cfg, seeds, rows=rows, table=table)
+        return run_many(cfg, batch, iters, variant, coeffs, sync_every,
+                        rows, table)
     cfg = cfg.resolved()
     return run_many(cfg, init_batch(cfg, seeds), iters, variant, coeffs,
                     sync_every)

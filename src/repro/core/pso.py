@@ -44,7 +44,7 @@ import jax.numpy as jnp
 
 from . import rng
 from .blocking import default_block_count
-from .constraints import repair_init_positions
+from .constraints import deb_improved, repair_init_positions
 from .fitness import DEFAULT_BOUNDS, FITNESS_FNS  # noqa: F401 (legacy API)
 from .problem import Bound, Problem, broadcast_bounds, resolve_problem
 
@@ -158,14 +158,80 @@ STREAM_R1 = 2
 STREAM_R2 = 3
 
 
+# Heterogeneous dispatch convention: ``hetero=(table, row)`` threads through
+# ``init_swarm``/``_advance``/the step functions, where ``table`` is a static
+# tuple of ``Problem``s (a trace-time Python constant; the jit entry points
+# in ``multi_swarm`` key their cache on it) and ``row`` is a ``HeteroRow`` of
+# traced per-swarm operands: the [] int32 index into the table plus the
+# row's [D] bound columns. ``hetero=None`` everywhere keeps the exact
+# pre-hetero jaxprs (Python-gated). The dispatch is deliberately as narrow
+# as possible: the RNG draw and raw velocity/position update chain stay
+# OUTSIDE the switch — byte-identical ops to the homogeneous trace, with the
+# bounds as runtime [D] operands instead of inlined constants — and only the
+# objective evaluation goes through ``lax.switch`` over ``Problem.max_fn``
+# branches. Under vmap the batched switch lowers to compute-all-branches +
+# ``select_n``, i.e. a hetero batch costs ``len(table)`` objective
+# evaluations per step (bounded: the table is the built-in registry).
+#
+# Exactness envelope (asserted in tests/test_hetero.py): every trajectory
+# field of a hetero row — pos, vel, pbest_pos, gbest_pos — is bit-identical
+# to the standalone ``solve`` of that row's problem. The carried fitness
+# values (fit / pbest_fit / gbest_fit) are bit-identical for most
+# (objective, dim) combos but can differ by 1-2 ulp on a few (observed:
+# griewank at d=10/d=3, rastrigin at d=1): XLA:CPU fuses all table branches
+# into one loop-body cluster and re-vectorizes the objective's sum/prod
+# reduction tail, the same per-shape codegen hazard MIN_VALIDATED_SWARMS
+# documents. This is the best achievable form on this backend — both wider
+# dispatches were tried and are strictly worse: wrapping the whole advance
+# in per-problem branches lets cross-branch CSE perturb the shared velocity
+# chain (real trajectory divergence), and scalar-index conditional dispatch
+# changes loop-body fusion even for a content-identical single branch.
+
+
+class HeteroRow(NamedTuple):
+    """Per-swarm dispatch operands for a heterogeneous batch row.
+
+    ``fid`` indexes the static problem table; ``lo``/``hi``/``mv`` are the
+    row's [D] position/velocity bound columns, precomputed host-side by
+    ``multi_swarm.problem_rows`` with the exact arithmetic
+    ``PSOConfig.resolved()`` uses (float64 then weak-f32 cast), so a row's
+    runtime bounds are bitwise the constants its standalone solve inlines.
+    """
+    fid: Array   # [] int32
+    lo: Array    # [D]
+    hi: Array    # [D]
+    mv: Array    # [D]
+
+
+def _hetero_fitness(table, fid: Array, pos: Array) -> Array:
+    """Canonical (maximization, penalty-baked) fitness of row ``fid``."""
+    return jax.lax.switch(fid, [p.max_fn for p in table], pos)
+
+
+def hetero_member_config(cfg: PSOConfig, prob: Problem) -> PSOConfig:
+    """``cfg`` re-pointed at one dispatch-table member, bounds re-derived.
+
+    Exactly the config a standalone ``solve`` of ``prob`` at this
+    dim/particle_cnt/w/c1/c2/dtype would resolve — the per-branch static
+    config the kernel-path heterogeneous dispatch closes each branch over.
+    """
+    return dataclasses.replace(cfg, fitness=prob, min_pos=None,
+                               max_pos=None, max_v=None).resolved()
+
+
 def init_swarm(cfg: PSOConfig, seed: int, n: Optional[int] = None,
-               index_offset: int = 0) -> SwarmState:
+               index_offset: int = 0, hetero=None) -> SwarmState:
     """Initialize a swarm (paper Alg. 1 step 1).
 
     ``n``/``index_offset`` support sharded construction: a shard owning
     particles [off, off+n) builds exactly the same particles as the
     corresponding slice of a monolithic swarm (elastic resharding invariant,
     tested in tests/test_distributed.py).
+
+    ``hetero=(table, row)`` draws from the same streams but takes the box
+    from the row's runtime bound columns and the objective from the table
+    dispatch (the heterogeneous batch engine, ``multi_swarm.solve_many``
+    with per-row problems); ``None`` keeps the exact homogeneous trace.
     """
     cfg = cfg.resolved()
     n = cfg.particle_cnt if n is None else n
@@ -175,24 +241,29 @@ def init_swarm(cfg: PSOConfig, seed: int, n: Optional[int] = None,
            + jnp.uint32(index_offset * d))
     u_pos = rng.uniform(seed, 0, STREAM_INIT_POS, idx, dtype=dt)
     u_vel = rng.uniform(seed, 0, STREAM_INIT_VEL, idx, dtype=dt)
-    lo = _bound_operand(cfg.min_pos, dt)
-    hi = _bound_operand(cfg.max_pos, dt)
-    mv = _bound_operand(cfg.max_v, dt)
+    if hetero is not None:
+        lo, hi, mv = hetero[1].lo, hetero[1].hi, hetero[1].mv
+    else:
+        lo = _bound_operand(cfg.min_pos, dt)
+        hi = _bound_operand(cfg.max_pos, dt)
+        mv = _bound_operand(cfg.max_v, dt)
     span = hi - lo
     pos = lo + span * u_pos
     vel = -mv + 2.0 * mv * u_vel
     prob = cfg.problem
-    proj = prob.projection_fn
+    proj = prob.projection_fn if hetero is None else None
     if proj is not None:
         # projection mode: start feasible (box draw projected in-place)
         pos = proj(pos)
-    elif prob.constrained and prob.constraints.mode == "repair":
+    elif hetero is None and prob.constrained and \
+            prob.constraints.mode == "repair":
         # repair mode: resample infeasible draws (attempt-indexed RNG on
         # the init stream; see constraints.repair_init_positions)
         pos = repair_init_positions(
             prob.constraints, prob.violation_fn, pos, lo, span, seed,
             STREAM_INIT_POS, idx, dt)
-    fit = cfg.fitness_fn(pos)
+    fit = (cfg.fitness_fn(pos) if hetero is None
+           else _hetero_fitness(hetero[0], hetero[1].fid, pos))
     best = jnp.argmax(fit)
     return SwarmState(
         pos=pos, vel=vel, fit=fit,
@@ -205,7 +276,7 @@ def init_swarm(cfg: PSOConfig, seed: int, n: Optional[int] = None,
 
 def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0,
              coeffs: Optional[Tuple[Array, Array, Array]] = None,
-             gbest_pos: Optional[Array] = None
+             gbest_pos: Optional[Array] = None, hetero=None
              ) -> Tuple[Array, Array, Array]:
     """Steps 2–3 of Alg. 1: velocity/position update + fitness, vectorized.
 
@@ -218,7 +289,10 @@ def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0,
     before the hook existed. ``gbest_pos`` optionally overrides the social
     attractor (any shape broadcastable to [N, D]) — the hook ``step_async``
     uses to steer each particle toward its *block's* local best instead of
-    the shared swarm best.
+    the shared swarm best. ``hetero=(table, row)`` swaps the inlined bound
+    constants for the row's runtime columns and the objective for the table
+    dispatch — the heterogeneous batch hook; also Python-gated (see the
+    convention note above ``HeteroRow``).
     """
     n, d = s.pos.shape
     dt = s.pos.dtype
@@ -232,6 +306,11 @@ def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0,
     vel = (w * s.vel
            + c1 * r1 * (s.pbest_pos - s.pos)
            + c2 * r2 * (gbp - s.pos))
+    if hetero is not None:
+        table, hr = hetero
+        vel = jnp.clip(vel, -hr.mv, hr.mv)
+        pos = jnp.clip(s.pos + vel, hr.lo, hr.hi)
+        return pos, vel, _hetero_fitness(table, hr.fid, pos)
     mv = _bound_operand(cfg.max_v, dt)
     vel = jnp.clip(vel, -mv, mv)
     pos = jnp.clip(s.pos + vel, _bound_operand(cfg.min_pos, dt),
@@ -246,19 +325,44 @@ def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0,
     return pos, vel, fit
 
 
-def _update_pbest(s: SwarmState, pos: Array, fit: Array) -> Tuple[Array, Array]:
-    improved = fit > s.pbest_fit
+def deb_selection_fn(cfg: PSOConfig):
+    """The engine-level constrained pbest comparator, or None.
+
+    Deb-rule selection (``constraints.deb_improved``) applies to the
+    ``projection`` and ``repair`` constraint modes only: ``penalty`` mode
+    keeps the raw canonical-fitness fold (the penalty already rides
+    ``Problem.max_fn``), and unconstrained problems are Python-gated out so
+    their jaxprs stay bit-identical to the pre-Deb engine. The returned
+    callable computes ``improved(fit_new, pos_new, fit_old, pos_old) ->
+    bool [N]``.
+    """
+    prob = cfg.problem
+    if not prob.constrained or prob.constraints.mode == "penalty":
+        return None
+    vf = prob.violation_fn
+
+    def better(fit_new, pos_new, fit_old, pos_old):
+        return deb_improved(fit_new, vf(pos_new), fit_old, vf(pos_old))
+
+    return better
+
+
+def _update_pbest(s: SwarmState, pos: Array, fit: Array,
+                  better=None) -> Tuple[Array, Array]:
+    improved = (fit > s.pbest_fit if better is None
+                else better(fit, pos, s.pbest_fit, s.pbest_pos))
     pbest_fit = jnp.where(improved, fit, s.pbest_fit)
     pbest_pos = jnp.where(improved[:, None], pos, s.pbest_pos)
     return pbest_pos, pbest_fit
 
 
 def step_reduction(cfg: PSOConfig, s: SwarmState,
-                   coeffs: Optional[Tuple[Array, Array, Array]] = None
-                   ) -> SwarmState:
+                   coeffs: Optional[Tuple[Array, Array, Array]] = None,
+                   hetero=None) -> SwarmState:
     """Baseline: unconditional full argmax reduction (paper §3.2)."""
-    pos, vel, fit = _advance(cfg, s, coeffs=coeffs)
-    pbest_pos, pbest_fit = _update_pbest(s, pos, fit)
+    pos, vel, fit = _advance(cfg, s, coeffs=coeffs, hetero=hetero)
+    pbest_pos, pbest_fit = _update_pbest(
+        s, pos, fit, deb_selection_fn(cfg) if hetero is None else None)
     best = jnp.argmax(pbest_fit)                      # O(N) reduction, always
     cand_fit = pbest_fit[best]
     cand_pos = pbest_pos[best]                        # O(D) gather, always
@@ -271,8 +375,8 @@ def step_reduction(cfg: PSOConfig, s: SwarmState,
 
 
 def step_queue(cfg: PSOConfig, s: SwarmState,
-               coeffs: Optional[Tuple[Array, Array, Array]] = None
-               ) -> SwarmState:
+               coeffs: Optional[Tuple[Array, Array, Array]] = None,
+               hetero=None) -> SwarmState:
     """Queue algorithm (paper §4.1), TPU adaptation.
 
     The shared-memory queue + atomicAdd degenerates on a SIMD core into a
@@ -281,8 +385,9 @@ def step_queue(cfg: PSOConfig, s: SwarmState,
     memory traffic when the queue is empty — maps to predicating the argmax +
     gather on the cheap scalar ``any(improved)``.
     """
-    pos, vel, fit = _advance(cfg, s, coeffs=coeffs)
-    pbest_pos, pbest_fit = _update_pbest(s, pos, fit)
+    pos, vel, fit = _advance(cfg, s, coeffs=coeffs, hetero=hetero)
+    pbest_pos, pbest_fit = _update_pbest(
+        s, pos, fit, deb_selection_fn(cfg) if hetero is None else None)
     improved = fit > s.gbest_fit                      # cheap vector compare
     any_improved = jnp.any(improved)                  # scalar "queue non-empty"
 
@@ -303,8 +408,8 @@ def step_queue(cfg: PSOConfig, s: SwarmState,
 
 
 def step_queue_lock(cfg: PSOConfig, s: SwarmState,
-                    coeffs: Optional[Tuple[Array, Array, Array]] = None
-                    ) -> SwarmState:
+                    coeffs: Optional[Tuple[Array, Array, Array]] = None,
+                    hetero=None) -> SwarmState:
     """Queue-lock (paper §4.2) jnp fallback: predicated gbest publication.
 
     The real fusion win (one pallas_call spanning all iterations with gbest
@@ -321,8 +426,10 @@ def step_queue_lock(cfg: PSOConfig, s: SwarmState,
     invariant (vmapped select vs single-swarm cond); see
     tests/test_multi_swarm.py.
     """
-    pos, vel, fit = _advance(cfg, s, coeffs=coeffs)
-    p_improved = fit > s.pbest_fit
+    pos, vel, fit = _advance(cfg, s, coeffs=coeffs, hetero=hetero)
+    better = deb_selection_fn(cfg) if hetero is None else None
+    p_improved = (fit > s.pbest_fit if better is None
+                  else better(fit, pos, s.pbest_fit, s.pbest_pos))
     pbest_fit = jnp.where(p_improved, fit, s.pbest_fit)
     pbest_pos = jnp.where(p_improved[:, None], pos, s.pbest_pos)
     any_p = jnp.any(p_improved)
@@ -373,7 +480,7 @@ def init_async_locals(state: SwarmState, n_blocks: int
 def step_async(cfg: PSOConfig, s: SwarmState,
                local: Tuple[Array, Array],
                coeffs: Optional[Tuple[Array, Array, Array]] = None,
-               index_offset=None
+               index_offset=None, hetero=None
                ) -> Tuple[SwarmState, Tuple[Array, Array]]:
     """One ASYNC queue-lock iteration (paper's enhanced variant, §4.2).
 
@@ -398,8 +505,10 @@ def step_async(cfg: PSOConfig, s: SwarmState,
     gb = jnp.repeat(lbp, bn, axis=0)              # particle -> its block best
     pos, vel, fit = _advance(cfg, s, coeffs=coeffs, gbest_pos=gb,
                              index_offset=(0 if index_offset is None
-                                           else index_offset))
-    pbest_pos, pbest_fit = _update_pbest(s, pos, fit)
+                                           else index_offset),
+                             hetero=hetero)
+    pbest_pos, pbest_fit = _update_pbest(
+        s, pos, fit, deb_selection_fn(cfg) if hetero is None else None)
     fb = fit.reshape(nb, bn)
     bi = jnp.argmax(fb, axis=1)                   # per-block iteration winner
     bfit = jnp.take_along_axis(fb, bi[:, None], axis=1)[:, 0]
@@ -452,7 +561,9 @@ def run_async(cfg: PSOConfig, state: SwarmState, iters: int,
               sync_every: int = ASYNC_SYNC_EVERY,
               n_blocks: Optional[int] = None,
               coeffs: Optional[Tuple[Array, Array, Array]] = None,
-              phase: Optional[int] = None, index_offset=None) -> SwarmState:
+              phase: Optional[int] = None, index_offset=None,
+              hetero_row: Optional["HeteroRow"] = None,
+              table=None) -> SwarmState:
     """``iters`` iterations of relaxed-consistency async PSO (jnp fallback).
 
     The library-level mirror of the Pallas async queue-lock: particle
@@ -488,15 +599,18 @@ def run_async(cfg: PSOConfig, state: SwarmState, iters: int,
                 jax.errors.TracerIntegerConversionError):
             phase = 0
     return _run_async(cfg, state, iters, sync_every, n_blocks, coeffs,
-                      phase, index_offset)
+                      phase, index_offset, hetero_row, table)
 
 
 @partial(jax.jit,
-         static_argnames=("cfg", "iters", "sync_every", "n_blocks", "phase"))
+         static_argnames=("cfg", "iters", "sync_every", "n_blocks", "phase",
+                          "table"))
 def _run_async(cfg: PSOConfig, state: SwarmState, iters: int,
                sync_every: int, n_blocks: Optional[int],
-               coeffs, phase: int, index_offset) -> SwarmState:
+               coeffs, phase: int, index_offset,
+               hetero_row=None, table=None) -> SwarmState:
     cfg = cfg.resolved()
+    hetero = None if hetero_row is None else (table, hetero_row)
     n, _ = state.pos.shape
     nb = n_blocks or _default_async_blocks(n)
     if n % nb:
@@ -514,7 +628,7 @@ def _run_async(cfg: PSOConfig, state: SwarmState, iters: int,
     def one(carry):
         s, local = carry
         return step_async(cfg, s, local, coeffs=coeffs,
-                          index_offset=index_offset)
+                          index_offset=index_offset, hetero=hetero)
 
     def chunk(span, publish=publish_async_locals):
         def body(_, carry):

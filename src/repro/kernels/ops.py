@@ -21,9 +21,12 @@ from repro.core.blocking import LANE, pick_block_n  # noqa: F401 (re-export:
 # pick_block_n is the shared block-sizing helper in repro.core.blocking,
 # also used by core.pso._default_async_blocks with lane=1)
 from repro.core.multi_swarm import SwarmBatch
-from repro.core.pso import ASYNC_SYNC_EVERY, PSOConfig, SwarmState
+from repro.core.pso import (ASYNC_SYNC_EVERY, PSOConfig, SwarmState,
+                            hetero_member_config)
 from .pso_step import (fused_async_batch_call, fused_async_call,
-                       fused_batch_call, fused_call, pad_dim,
+                       fused_batch_call, fused_call,
+                       hetero_fused_async_batch_call,
+                       hetero_fused_batch_call, pad_dim,
                        queue_step_call)
 
 
@@ -133,11 +136,25 @@ def unpack_dmajor_batch(arr, s_cnt: int, d: int):
     return unpack_dmajor(arr, d).reshape(s_cnt, n, d)
 
 
+def _hetero_members(cfg: PSOConfig, table):
+    """Static kernel branch descriptors for a hetero dispatch table.
+
+    Branch ``k`` closes over exactly the statics a homogeneous kernel of
+    ``table[k]`` at this dim/coeffs/dtype would compile with
+    (``hetero_member_config`` re-derives the member's resolved bounds).
+    """
+    return tuple(
+        (ck.fitness, ck.min_pos, ck.max_pos, ck.max_v)
+        for ck in (hetero_member_config(cfg, p) for p in table))
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "iters", "block_n", "interpret"))
+                   static_argnames=("cfg", "iters", "block_n", "interpret",
+                                    "table"))
 def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
                                block_n: Optional[int] = None,
-                               interpret: bool = True) -> SwarmBatch:
+                               interpret: bool = True, fids=None,
+                               table=None) -> SwarmBatch:
     """S independent swarms x ``iters`` iterations in ONE pallas_call.
 
     The multi-swarm analogue of ``run_queue_lock_fused``: per-swarm gbest
@@ -160,9 +177,22 @@ def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
     gp = jnp.zeros((pad_dim(d), s_cnt), batch.pos.dtype).at[:d].set(
         batch.gbest_pos.T)
     gf = batch.gbest_fit
-    call = fused_batch_call(s_cnt, n, d, iters, bn, batch.pos.dtype,
-                            interpret=interpret, **_cfg_kwargs(cfg))
-    pos, vel, pbp, pbf, gp, gf = call(seeds, its, pos, vel, pbp, pbf, gp, gf)
+    if fids is None:
+        call = fused_batch_call(s_cnt, n, d, iters, bn, batch.pos.dtype,
+                                interpret=interpret, **_cfg_kwargs(cfg))
+        pos, vel, pbp, pbf, gp, gf = call(seeds, its, pos, vel, pbp, pbf,
+                                          gp, gf)
+    else:
+        # Heterogeneous batch: per-swarm objective via kernel 3h. The cfg
+        # contributes dim/coeffs/dtype only; bounds and objective come from
+        # the member table (see ``multi_swarm.problem_rows``).
+        rcfg = cfg.resolved()
+        call = hetero_fused_batch_call(
+            s_cnt, n, d, iters, bn, batch.pos.dtype, w=rcfg.w, c1=rcfg.c1,
+            c2=rcfg.c2, members=_hetero_members(cfg, table),
+            interpret=interpret)
+        pos, vel, pbp, pbf, gp, gf = call(
+            seeds, its, fids.astype(jnp.int32), pos, vel, pbp, pbf, gp, gf)
     pbf = pbf.reshape(s_cnt, n)
     return batch._replace(
         pos=unpack_dmajor_batch(pos, s_cnt, d),
@@ -241,12 +271,13 @@ def run_queue_lock_fused_async(cfg: PSOConfig, s: SwarmState, iters: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "iters", "sync_every", "block_n",
-                                    "interpret"))
+                                    "interpret", "table"))
 def run_queue_lock_fused_async_batch(cfg: PSOConfig, batch: SwarmBatch,
                                      iters: int,
                                      sync_every: int = ASYNC_SYNC_EVERY,
                                      block_n: Optional[int] = None,
-                                     interpret: bool = True) -> SwarmBatch:
+                                     interpret: bool = True, fids=None,
+                                     table=None) -> SwarmBatch:
     """S independent swarms through the async queue-lock in one pallas_call.
 
     Grid ``(swarms, blocks, iter_chunks)``: per-swarm gbest buffers and
@@ -274,11 +305,23 @@ def run_queue_lock_fused_async_batch(cfg: PSOConfig, batch: SwarmBatch,
         lp = jnp.repeat(gp, nb, axis=1)        # [Dpad, S*nb], swarm-major
         lf = jnp.repeat(gf, nb)
     for off, span, chunk in _async_spans(iters, sync_every):
-        call = fused_async_batch_call(s_cnt, n, d, span, bn, chunk,
-                                      batch.pos.dtype, interpret=interpret,
-                                      **_cfg_kwargs(cfg))
-        pos, vel, pbp, pbf, gp, gf, lp, lf = call(
-            seeds, its + jnp.int32(off), pos, vel, pbp, pbf, gp, gf, lp, lf)
+        if fids is None:
+            call = fused_async_batch_call(s_cnt, n, d, span, bn, chunk,
+                                          batch.pos.dtype,
+                                          interpret=interpret,
+                                          **_cfg_kwargs(cfg))
+            pos, vel, pbp, pbf, gp, gf, lp, lf = call(
+                seeds, its + jnp.int32(off), pos, vel, pbp, pbf, gp, gf,
+                lp, lf)
+        else:
+            rcfg = cfg.resolved()
+            call = hetero_fused_async_batch_call(
+                s_cnt, n, d, span, bn, chunk, batch.pos.dtype, w=rcfg.w,
+                c1=rcfg.c1, c2=rcfg.c2, members=_hetero_members(cfg, table),
+                interpret=interpret)
+            pos, vel, pbp, pbf, gp, gf, lp, lf = call(
+                seeds, its + jnp.int32(off), fids.astype(jnp.int32),
+                pos, vel, pbp, pbf, gp, gf, lp, lf)
     pbf = pbf.reshape(s_cnt, n)
     return batch._replace(
         pos=unpack_dmajor_batch(pos, s_cnt, d),

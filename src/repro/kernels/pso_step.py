@@ -89,7 +89,12 @@ mode adds a pinned post-clip transform inside ``_advance_block``
 (``kernel_projection`` lifts the user operator to the d-major tile layout;
 its captured consts hoist through ``lower_statics`` exactly like objective
 consts), and ``repair`` mode only affects ``init_swarm`` (kernels receive
-an already-repaired state).
+an already-repaired state). For ``projection``/``repair`` modes the pbest
+fold inside every kernel body applies the Deb rule (feasible > fitness >
+violation, ``repro.core.constraints.deb_improved``) via the d-major
+``kernel_violation`` form — the same engine-level gate as
+``repro.core.pso.deb_selection_fn``; ``penalty`` mode and unconstrained
+problems keep the raw ``fit > pbest`` fold bit-for-bit.
 
 Validated in ``interpret=True`` mode against ``ref.py`` (same counter RNG ⇒
 bit-exact trajectories) over shape/dtype sweeps in tests/test_kernels.py
@@ -109,6 +114,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import rng
 from repro.core.blocking import LANE
+from repro.core.constraints import deb_improved
 from repro.core.pso import STREAM_R1, STREAM_R2
 from repro.core.problem import Problem
 
@@ -260,6 +266,46 @@ def kernel_projection(fitness):
     return lifted
 
 
+def kernel_violation(fitness):
+    """Resolve a Problem's aggregate constraint violation to the d-major
+    tile form ``(pos [Dpad, bn], d_real) -> viol [1, bn]``, or None when
+    Deb-rule pbest selection does not apply (unconstrained problems and
+    ``penalty`` mode, whose penalty already rides ``max_fn``).
+
+    Drives the kernels' constrained pbest fold (feasible > fitness >
+    violation — ``repro.core.constraints.deb_improved``, the same gate as
+    the jnp engine's ``deb_selection_fn``). Mirrors ``dmajor_adapter``:
+    the user constraint functions see their documented particle-major
+    ``[bn, d]`` view; captured array constants hoist through
+    ``lower_statics`` exactly like objective/projection consts.
+    """
+    if isinstance(fitness, str):
+        if fitness in KERNEL_FITNESS:
+            return None                        # built-ins are unconstrained
+        from repro.core.problem import get_problem
+        fitness = get_problem(fitness)
+    if not isinstance(fitness, Problem):
+        return None
+    if not fitness.constrained or fitness.constraints.mode == "penalty":
+        return None
+    vf = fitness.violation_fn
+
+    def lifted(pos, d_real):
+        return vf(pos[:d_real, :].T)[None, :]
+
+    lifted.__name__ = f"dmajor_viol[{fitness.name}]"
+    return lifted
+
+
+def _pbest_improved(fit, pos, pbf, pbp, viol):
+    """The kernels' pbest-selection mask [1, bn]: raw fitness compare, or
+    the Deb rule when a ``kernel_violation`` form is present (projection /
+    repair constraint modes)."""
+    if viol is None:
+        return fit > pbf
+    return deb_improved(fit, viol(pos), pbf, viol(pbp))
+
+
 def is_converted(fitness) -> bool:
     """True when ``kernel_fitness`` lowers ``fitness`` by conversion (the
     d-major adapter or a user ``kernel_fn``) rather than the hand-tuned
@@ -366,14 +412,33 @@ def lower_statics(fitness, *, d, dpad, bn, dtype,
         st["proj"] = pure_proj
         st["proj_slots"] = tuple(slot(jnp.asarray(c))
                                  for c in pclosed.consts)
+    violfn = kernel_violation(fitness)
+    if violfn is None:
+        st["viol"] = None
+        st["viol_slots"] = None
+    else:
+        # And for the Deb-fold violation form (projection/repair modes):
+        # user constraint fns may close over arrays too.
+        vclosed = jax.make_jaxpr(lambda p: violfn(p, d))(
+            jax.ShapeDtypeStruct((dpad, bn), dtype))
+
+        def pure_viol(p, *cvals, _jaxpr=vclosed.jaxpr):
+            out = jax.core.eval_jaxpr(_jaxpr, cvals, p)
+            if len(out) != 1:
+                raise ValueError("violation must return a single array")
+            return out[0]
+
+        st["viol"] = pure_viol
+        st["viol_slots"] = tuple(slot(jnp.asarray(c))
+                                 for c in vclosed.consts)
     st["n_consts"] = len(consts)
     return st, tuple(consts)
 
 
 def _resolve_statics(st, const_vals):
     """Kernel-side inverse of ``lower_statics``: returns
-    (min_pos, max_pos, max_v, fitfn, proj, pin) with
-    fitfn(pos, dmask, d_real) and proj(pos) (or None).
+    (min_pos, max_pos, max_v, fitfn, proj, viol, pin) with
+    fitfn(pos, dmask, d_real), proj(pos) and viol(pos) (each or None).
 
     ``pin`` is True for converted (non-hand-tuned) objectives and whenever
     a feasibility projection is present: the kernel body must pass the
@@ -407,8 +472,17 @@ def _resolve_statics(st, const_vals):
         def proj(pos, _pure=pure_proj, _extra=pextra):
             return _pure(pos, *_extra)
 
+    if st["viol"] is None:
+        viol = None
+    else:
+        pure_viol = st["viol"]
+        vextra = tuple(const_vals[s.index] for s in st["viol_slots"])
+
+        def viol(pos, _pure=pure_viol, _extra=vextra):
+            return _pure(pos, *_extra)
+
     return (get(st["min_pos"]), get(st["max_pos"]), get(st["max_v"]), fit,
-            proj, st["fit_slots"] is not None or proj is not None)
+            proj, viol, st["fit_slots"] is not None or proj is not None)
 
 
 def _pin(pin, pos, vel):
@@ -470,7 +544,7 @@ def _queue_kernel(scal_ref, gp_ref, gf_ref,
     const_vals = tuple(r[...] for r in rest[:nc])
     (pos_ref, vel_ref, pbp_ref, pbf_ref,
      aux_fit_ref, aux_idx_ref) = rest[nc:]
-    min_pos, max_pos, max_v, fitness, proj, pin = _resolve_statics(
+    min_pos, max_pos, max_v, fitness, proj, viol, pin = _resolve_statics(
         statics, const_vals)
     b = pl.program_id(0)
     bn = pos_ref.shape[1]
@@ -483,9 +557,10 @@ def _queue_kernel(scal_ref, gp_ref, gf_ref,
     pos, vel = _pin(pin, pos, vel)
     fit = fitness(pos, dmask, d_real)                        # [1, bn]
     pbf = pbf_ref[...]
-    imp = fit > pbf                                          # Alg. 1 step 4
+    pbp = pbp_ref[...]
+    imp = _pbest_improved(fit, pos, pbf, pbp, viol)          # Alg. 1 step 4
     pbf_ref[...] = jnp.where(imp, fit, pbf)
-    pbp_ref[...] = jnp.where(imp, pos, pbp_ref[...])
+    pbp_ref[...] = jnp.where(imp, pos, pbp)
     pos_ref[...] = pos
     vel_ref[...] = vel
     # --- queue: candidates are lanes improving on the (stale) global best.
@@ -560,7 +635,7 @@ def _fused_kernel(scal_ref,
     nc = statics["n_consts"]
     const_vals = tuple(r[...] for r in rest[:nc])
     pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest[nc:]
-    min_pos, max_pos, max_v, fitness, proj, pin = _resolve_statics(
+    min_pos, max_pos, max_v, fitness, proj, viol, pin = _resolve_statics(
         statics, const_vals)
     t = pl.program_id(0)
     b = pl.program_id(1)
@@ -574,9 +649,10 @@ def _fused_kernel(scal_ref,
     pos, vel = _pin(pin, pos, vel)
     fit = fitness(pos, dmask, d_real)
     pbf = pbf_ref[...]
-    imp = fit > pbf
+    pbp = pbp_ref[...]
+    imp = _pbest_improved(fit, pos, pbf, pbp, viol)
     pbf_ref[...] = jnp.where(imp, fit, pbf)
-    pbp_ref[...] = jnp.where(imp, pos, pbp_ref[...])
+    pbp_ref[...] = jnp.where(imp, pos, pbp)
     pos_ref[...] = pos
     vel_ref[...] = vel
     # --- queue-lock: serialized in-kernel publication (grid order = lock).
@@ -654,7 +730,7 @@ def _fused_batch_kernel(seeds_ref, its_ref,
     nc = statics["n_consts"]
     const_vals = tuple(r[...] for r in rest[:nc])
     pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest[nc:]
-    min_pos, max_pos, max_v, fitness, proj, pin = _resolve_statics(
+    min_pos, max_pos, max_v, fitness, proj, viol, pin = _resolve_statics(
         statics, const_vals)
     s = pl.program_id(0)
     t = pl.program_id(1)
@@ -669,9 +745,10 @@ def _fused_batch_kernel(seeds_ref, its_ref,
     pos, vel = _pin(pin, pos, vel)
     fit = fitness(pos, dmask, d_real)
     pbf = pbf_ref[...]
-    imp = fit > pbf
+    pbp = pbp_ref[...]
+    imp = _pbest_improved(fit, pos, pbf, pbp, viol)
     pbf_ref[...] = jnp.where(imp, fit, pbf)
-    pbp_ref[...] = jnp.where(imp, pos, pbp_ref[...])
+    pbp_ref[...] = jnp.where(imp, pos, pbp)
     pos_ref[...] = pos
     vel_ref[...] = vel
     # --- per-swarm queue-lock publication (sequential grid = the lock).
@@ -740,13 +817,152 @@ def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
 
 
 # --------------------------------------------------------------------------
+# Kernel 3h: heterogeneous batched fused queue-lock — per-swarm objective.
+#
+# Same grid and orchestration as kernel 3, plus a per-swarm ``fid`` scalar
+# (SMEM) indexing a static problem table. The advance + objective go through
+# ``lax.switch`` with each branch closing over its member's *static* bounds
+# and hand-tuned fitness — exactly the subgraph kernel 3 would compile for a
+# homogeneous batch of that problem. The switch index is a scalar (one
+# swarm per grid step), so this is a real conditional: one branch executes
+# per grid step and a mixed batch does NOT pay a compute-all-branches
+# ``select_n`` the way the vmapped jnp engine does. The pbest fold and the
+# queue-lock publication are objective-independent and stay outside the
+# switch. Table members must lower const-free (the built-in registry does;
+# ``lower_statics`` consts would need per-branch operand plumbing).
+# --------------------------------------------------------------------------
+
+def _hetero_branches(members, *, d, dpad, bn, dtype):
+    """Per-member kernel statics for a hetero dispatch table.
+
+    ``members`` is a tuple of ``(fitness, min_pos, max_pos, max_v)``; each
+    must lower without const operands and without a feasibility projection
+    (``problem_rows`` rejects projection/repair members before this).
+    """
+    branches = []
+    for fitness, mn, mx, mv in members:
+        st, consts = lower_statics(fitness, d=d, dpad=dpad, bn=bn,
+                                   dtype=dtype, min_pos=mn, max_pos=mx,
+                                   max_v=mv)
+        if consts:
+            raise ValueError(
+                "heterogeneous kernel dispatch requires const-free table "
+                "members (array-closing objectives need their own batch)")
+        branches.append(st)
+    return tuple(branches)
+
+
+def _hetero_fused_batch_kernel(seeds_ref, its_ref, fids_ref,
+                               pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,
+                               *rest,            # output refs (no consts)
+                               w, c1, c2, d_real, branches):
+    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in
+    pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    b = pl.program_id(2)
+    bn = pos_ref.shape[1]
+    base = b * bn          # block base LOCAL to the swarm: RNG indices match
+    seed = seeds_ref[s]
+    it = its_ref[s] + t + 1
+
+    def mk(st):
+        min_pos, max_pos, max_v, fitness, proj, viol, pin = \
+            _resolve_statics(st, ())
+        del viol  # hetero tables are unconstrained/penalty-mode: raw fold
+
+        def branch(op):
+            pos0, vel0, pbp0, gp0 = op
+            pos, vel, dmask, _ = _advance_block(
+                seed, it, pos0, vel0, pbp0, gp0, base,
+                w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
+                max_v=max_v, d_real=d_real, project=proj)
+            pos, vel = _pin(pin, pos, vel)
+            return pos, vel, fitness(pos, dmask, d_real)
+
+        return branch
+
+    pos, vel, fit = lax.switch(
+        fids_ref[s], [mk(st) for st in branches],
+        (pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...]))
+    dpad = pos.shape[0]
+    dmask = lax.broadcasted_iota(jnp.int32, (dpad, bn), 0) < d_real
+    lane = lax.broadcasted_iota(jnp.int32, (dpad, bn), 1)
+    pbf = pbf_ref[...]
+    pbp = pbp_ref[...]
+    imp = _pbest_improved(fit, pos, pbf, pbp, None)
+    pbf_ref[...] = jnp.where(imp, fit, pbf)
+    pbp_ref[...] = jnp.where(imp, pos, pbp)
+    pos_ref[...] = pos
+    vel_ref[...] = vel
+    gf = gf_ref[s]
+    q_mask = fit > gf
+
+    @pl.when(jnp.any(q_mask))
+    def _publish():
+        neg = jnp.full_like(fit, -jnp.inf)
+        q_fit = jnp.where(q_mask, fit, neg)
+        bf = jnp.max(q_fit)
+        lane_row = lax.broadcasted_iota(jnp.int32, fit.shape, 1)
+        bidx = jnp.min(jnp.where(q_fit >= bf, lane_row, _BIG_I32))
+        gf_ref[s] = bf
+        sel = (lane == bidx) & dmask
+        gp_ref[...] = jnp.sum(jnp.where(sel, pos, jnp.zeros_like(pos)),
+                              axis=1, keepdims=True)
+
+
+def hetero_fused_batch_call(s_cnt: int, n: int, d: int, iters: int,
+                            block_n: int, dtype, *, w, c1, c2, members,
+                            interpret=True):
+    """Batched fused queue-lock with a per-swarm problem (kernel 3h).
+
+    Args (runtime): seeds[S]i32, iterations[S]i32, fids[S]i32, then the six
+    state arrays of ``fused_batch_call``. ``members[k]`` is the static
+    ``(fitness, min_pos, max_pos, max_v)`` branch ``fids == k`` dispatches
+    to.
+    """
+    assert n % block_n == 0, (n, block_n)
+    nb = n // block_n
+    dpad = pad_dim(d)
+    branches = _hetero_branches(members, d=d, dpad=dpad, bn=block_n,
+                                dtype=dtype)
+    kern = functools.partial(_hetero_fused_batch_kernel, w=w, c1=c1, c2=c2,
+                             d_real=d, branches=branches)
+    mat = pl.BlockSpec((dpad, block_n), lambda s, t, b: (0, s * nb + b))
+    row = pl.BlockSpec((1, block_n), lambda s, t, b: (0, s * nb + b))
+    gpc = pl.BlockSpec((dpad, 1), lambda s, t, b: (0, s))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        kern,
+        grid=(s_cnt, iters, nb),
+        in_specs=[smem, smem, smem,                    # seeds, iters, fids
+                  mat, mat, mat, row, gpc, smem],
+        out_specs=[mat, mat, mat, row, gpc, smem],
+        out_shape=[
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pos
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # vel
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pbest_pos
+            jax.ShapeDtypeStruct((1, s_cnt * n), dtype),      # pbest_fit
+            jax.ShapeDtypeStruct((dpad, s_cnt), dtype),       # gbest_pos
+            jax.ShapeDtypeStruct((s_cnt,), dtype),            # gbest_fit
+        ],
+        input_output_aliases={3: 0, 4: 1, 5: 2, 6: 3, 7: 4, 8: 5},
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY,
+                                 pltpu.ARBITRARY)),
+        interpret=interpret,
+        name="cupso_hetero_fused_queue_lock_batch",
+    )
+
+
+# --------------------------------------------------------------------------
 # Kernel 4: async queue-lock — grid (blocks, iteration chunks), block-major.
 # --------------------------------------------------------------------------
 
 def _async_chunk_body(scal0, it_base, sync_every, base,
                       pos, vel, pbp, pbf, lp, lf, *,
                       w, c1, c2, min_pos, max_pos, max_v, d_real, fitness,
-                      project=None, pin=False):
+                      project=None, viol=None, pin=False):
     """``sync_every`` iterations of one block against its block-local best.
 
     Pure value-level fori_loop (no ref writes inside the loop) shared by
@@ -764,7 +980,7 @@ def _async_chunk_body(scal0, it_base, sync_every, base,
             max_v=max_v, d_real=d_real, project=project)
         pos, vel = _pin(pin, pos, vel)
         fit = fitness(pos, dmask, d_real)
-        imp = fit > pbf
+        imp = _pbest_improved(fit, pos, pbf, pbp, viol)
         pbf = jnp.where(imp, fit, pbf)
         pbp = jnp.where(imp, pos, pbp)
         # Block-local queue: same rule as the fused kernel's _publish, as
@@ -796,7 +1012,7 @@ def _fused_async_kernel(scal_ref,
     const_vals = tuple(r[...] for r in rest[:nc])
     (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
      lp_ref, lf_ref) = rest[nc:]
-    min_pos, max_pos, max_v, fitness, proj, pin = _resolve_statics(
+    min_pos, max_pos, max_v, fitness, proj, viol, pin = _resolve_statics(
         statics, const_vals)
     b = pl.program_id(0)
     c = pl.program_id(1)
@@ -815,7 +1031,7 @@ def _fused_async_kernel(scal_ref,
         scal_ref[0], scal_ref[1] + c * sync_every, sync_every, base,
         pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf,
         w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v,
-        d_real=d_real, fitness=fitness, project=proj, pin=pin)
+        d_real=d_real, fitness=fitness, project=proj, viol=viol, pin=pin)
     pos_ref[...] = pos
     vel_ref[...] = vel
     pbp_ref[...] = pbp
@@ -896,7 +1112,7 @@ def _fused_async_batch_kernel(seeds_ref, its_ref,
     const_vals = tuple(r[...] for r in rest[:nc])
     (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref,
      gf_ref, lp_ref, lf_ref) = rest[nc:]
-    min_pos, max_pos, max_v, fitness, proj, pin = _resolve_statics(
+    min_pos, max_pos, max_v, fitness, proj, viol, pin = _resolve_statics(
         statics, const_vals)
     s = pl.program_id(0)
     b = pl.program_id(1)
@@ -914,7 +1130,7 @@ def _fused_async_batch_kernel(seeds_ref, its_ref,
         seeds_ref[s], its_ref[s] + c * sync_every, sync_every, base,
         pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf,
         w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v,
-        d_real=d_real, fitness=fitness, project=proj, pin=pin)
+        d_real=d_real, fitness=fitness, project=proj, viol=viol, pin=pin)
     pos_ref[...] = pos
     vel_ref[...] = vel
     pbp_ref[...] = pbp
@@ -984,3 +1200,115 @@ def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
         name="cupso_fused_queue_lock_async_batch",
     )
     return lambda *args: call(*args, *consts)
+
+
+# --------------------------------------------------------------------------
+# Kernel 4h: heterogeneous batched async queue-lock — per-swarm objective.
+# Kernel 3h's dispatch (scalar per-swarm fid, branch-static member configs,
+# one branch executed per grid step) applied to kernel 4's batched grid:
+# each branch runs the whole ``sync_every``-iteration chunk body.
+# --------------------------------------------------------------------------
+
+def _hetero_fused_async_batch_kernel(seeds_ref, its_ref, fids_ref,
+                                     pos_in, vel_in, pbp_in, pbf_in,
+                                     gp_in, gf_in, lp_in, lf_in,
+                                     *rest,       # output refs (no consts)
+                                     nb, sync_every, w, c1, c2, d_real,
+                                     branches):
+    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in, lp_in, lf_in
+    (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref,
+     gf_ref, lp_ref, lf_ref) = rest
+    s = pl.program_id(0)
+    b = pl.program_id(1)
+    c = pl.program_id(2)
+    bn = pos_ref.shape[1]
+    base = b * bn                  # swarm-local: RNG matches standalone run
+    slot = s * nb + b
+    seed = seeds_ref[s]
+    it0 = its_ref[s] + c * sync_every
+    lf = lf_ref[slot]
+    lp = lp_ref[...]
+    gf0 = gf_ref[s]
+    pull = gf0 > lf
+    lf = jnp.where(pull, gf0, lf)
+    lp = jnp.where(pull, gp_ref[...], lp)
+
+    def mk(st):
+        min_pos, max_pos, max_v, fitness, proj, viol, pin = \
+            _resolve_statics(st, ())
+        del viol  # hetero tables are unconstrained/penalty-mode: raw fold
+
+        def branch(op):
+            pos, vel, pbp, pbf, lp_, lf_ = op
+            return _async_chunk_body(
+                seed, it0, sync_every, base, pos, vel, pbp, pbf, lp_, lf_,
+                w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
+                max_v=max_v, d_real=d_real, fitness=fitness, project=proj,
+                viol=None, pin=pin)
+
+        return branch
+
+    pos, vel, pbp, pbf, lp, lf = lax.switch(
+        fids_ref[s], [mk(st) for st in branches],
+        (pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf))
+    pos_ref[...] = pos
+    vel_ref[...] = vel
+    pbp_ref[...] = pbp
+    pbf_ref[...] = pbf
+    lp_ref[...] = lp
+    lf_ref[slot] = lf
+
+    @pl.when(lf > gf_ref[s])
+    def _publish():
+        gf_ref[s] = lf
+        gp_ref[...] = lp
+
+
+def hetero_fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
+                                  block_n: int, sync_every: int, dtype, *,
+                                  w, c1, c2, members, interpret=True):
+    """Batched async queue-lock with a per-swarm problem (kernel 4h).
+
+    Args (runtime): seeds[S]i32, iterations[S]i32, fids[S]i32, then the
+    eight state arrays of ``fused_async_batch_call``. ``members`` as in
+    ``hetero_fused_batch_call``.
+    """
+    assert n % block_n == 0, (n, block_n)
+    assert iters % sync_every == 0, (iters, sync_every)
+    nb = n // block_n
+    chunks = iters // sync_every
+    dpad = pad_dim(d)
+    branches = _hetero_branches(members, d=d, dpad=dpad, bn=block_n,
+                                dtype=dtype)
+    kern = functools.partial(_hetero_fused_async_batch_kernel, nb=nb,
+                             sync_every=sync_every, w=w, c1=c1, c2=c2,
+                             d_real=d, branches=branches)
+    mat = pl.BlockSpec((dpad, block_n), lambda s, b, c: (0, s * nb + b))
+    row = pl.BlockSpec((1, block_n), lambda s, b, c: (0, s * nb + b))
+    gpc = pl.BlockSpec((dpad, 1), lambda s, b, c: (0, s))
+    lpc = pl.BlockSpec((dpad, 1), lambda s, b, c: (0, s * nb + b))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        kern,
+        grid=(s_cnt, nb, chunks),
+        in_specs=[smem, smem, smem,                    # seeds, iters, fids
+                  mat, mat, mat, row, gpc, smem, lpc, smem],
+        out_specs=[mat, mat, mat, row, gpc, smem, lpc, smem],
+        out_shape=[
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pos
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # vel
+            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pbest_pos
+            jax.ShapeDtypeStruct((1, s_cnt * n), dtype),      # pbest_fit
+            jax.ShapeDtypeStruct((dpad, s_cnt), dtype),       # gbest_pos
+            jax.ShapeDtypeStruct((s_cnt,), dtype),            # gbest_fit
+            jax.ShapeDtypeStruct((dpad, s_cnt * nb), dtype),  # local_pos
+            jax.ShapeDtypeStruct((s_cnt * nb,), dtype),       # local_fit
+        ],
+        input_output_aliases={3: 0, 4: 1, 5: 2, 6: 3, 7: 4, 8: 5,
+                              9: 6, 10: 7},
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY,
+                                 pltpu.ARBITRARY)),
+        interpret=interpret,
+        name="cupso_hetero_fused_queue_lock_async_batch",
+    )

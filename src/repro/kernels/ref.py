@@ -25,8 +25,9 @@ import functools
 
 import jax
 
-from .pso_step import (_advance_block, _pin, is_converted, kernel_fitness,
-                       kernel_projection, pad_dim)
+from .pso_step import (_advance_block, _pbest_improved, _pin, is_converted,
+                       kernel_fitness, kernel_projection, kernel_violation,
+                       pad_dim)
 
 
 def run_islands_ring_oracle(cfg, seed: int, n_shards: int, iters: int,
@@ -155,7 +156,7 @@ def run_constrained_oracle(cfg, seed: int, iters: int,
     """
     from repro.core import rng as _rng
     from repro.core.blocking import default_block_count
-    from repro.core.constraints import repair_init_positions
+    from repro.core.constraints import deb_improved, repair_init_positions
     from repro.core.pso import (STREAM_INIT_POS, STREAM_INIT_VEL, STREAM_R1,
                                 STREAM_R2, SwarmState)
 
@@ -165,6 +166,12 @@ def run_constrained_oracle(cfg, seed: int, iters: int,
     prob = cfg.problem
     fit_fn = prob.max_fn                       # penalty rides the wrapper
     proj = prob.projection_fn
+    # Deb-rule pbest selection for projection/repair modes (penalty mode
+    # stays on raw canonical fitness) — the engine's deb_selection_fn gate,
+    # mirrored here so the bit-exact comparison stays like-for-like.
+    deb_vf = (prob.violation_fn
+              if prob.constrained and prob.constraints.mode != "penalty"
+              else None)
     n, d = cfg.particle_cnt, cfg.dim
     dt = jnp.dtype(cfg.dtype)
 
@@ -208,7 +215,8 @@ def run_constrained_oracle(cfg, seed: int, iters: int,
         attractor = (gp[None, :] if variant != "async"
                      else jnp.repeat(lbp, bn, axis=0))
         pos, vel, fit = advance(vel, pos, pbp, attractor, r1, r2)
-        imp = fit > pbf
+        imp = (fit > pbf if deb_vf is None
+               else deb_improved(fit, deb_vf(pos), pbf, deb_vf(pbp)))
         pbf = jnp.where(imp, fit, pbf)
         pbp = jnp.where(imp[:, None], pos, pbp)
         if variant == "async":
@@ -292,6 +300,8 @@ def queue_step_oracle(seed, iteration, pos, vel, pbp, pbf, gp, gf,
     dpad, n = pos.shape
     nb = n // block_n
     fitfn = kernel_fitness(fitness)
+    vf = kernel_violation(fitness)
+    viol = None if vf is None else (lambda p: vf(p, d_real))
     adv = _advance_fn(fitness, w=w, c1=c1, c2=c2, min_pos=min_pos,
                       max_pos=max_pos, max_v=max_v, d_real=d_real)
     pos, vel, pbp, pbf = map(jnp.asarray, (pos, vel, pbp, pbf))
@@ -303,7 +313,7 @@ def queue_step_oracle(seed, iteration, pos, vel, pbp, pbf, gp, gf,
         p, v, dmask, lane = adv(seed, iteration + 1, p, v, bp, gp,
                                 b * block_n)
         fit = fitfn(p, dmask, d_real)
-        imp = fit > bf_
+        imp = _pbest_improved(fit, p, bf_, bp, viol)
         bf_ = jnp.where(imp, fit, bf_)
         bp = jnp.where(imp, p, bp)
         new["pos"].append(p); new["vel"].append(v)
@@ -339,6 +349,8 @@ def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
     dpad, n = pos.shape
     nb = n // block_n
     fitfn = kernel_fitness(fitness)
+    vf = kernel_violation(fitness)
+    viol = None if vf is None else (lambda p: vf(p, d_real))
     adv = _advance_fn(fitness, w=w, c1=c1, c2=c2, min_pos=min_pos,
                       max_pos=max_pos, max_v=max_v, d_real=d_real)
     pos, vel, pbp, pbf, gp = map(jnp.asarray, (pos, vel, pbp, pbf, gp))
@@ -354,9 +366,10 @@ def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                 jnp.asarray(pbp[:, sl]), gp, b * block_n)
             fit = fitfn(p, dmask, d_real)
             bf_ = jnp.asarray(pbf[:, sl])
-            imp = fit > bf_
+            bp = jnp.asarray(pbp[:, sl])
+            imp = _pbest_improved(fit, p, bf_, bp, viol)
             pbf[:, sl] = np.array(jnp.where(imp, fit, bf_))
-            pbp[:, sl] = np.array(jnp.where(imp, p, jnp.asarray(pbp[:, sl])))
+            pbp[:, sl] = np.array(jnp.where(imp, p, bp))
             pos[:, sl] = np.array(p)
             vel[:, sl] = np.array(v)
             q_mask = fit > gf
@@ -391,6 +404,8 @@ def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
     dpad, n = pos.shape
     nb = n // block_n
     fitfn = kernel_fitness(fitness)
+    vf = kernel_violation(fitness)
+    viol = None if vf is None else (lambda p: vf(p, d_real))
     adv = _advance_fn(fitness, w=w, c1=c1, c2=c2, min_pos=min_pos,
                       max_pos=max_pos, max_v=max_v, d_real=d_real)
     pos, vel, pbp, pbf, gp = map(jnp.asarray, (pos, vel, pbp, pbf, gp))
@@ -419,10 +434,10 @@ def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                         jnp.asarray(pbp[:, sl]), lp[b], b * block_n)
                     fit = fitfn(p, dmask, d_real)
                     bf_ = jnp.asarray(pbf[:, sl])
-                    imp = fit > bf_
+                    bp = jnp.asarray(pbp[:, sl])
+                    imp = _pbest_improved(fit, p, bf_, bp, viol)
                     pbf[:, sl] = np.array(jnp.where(imp, fit, bf_))
-                    pbp[:, sl] = np.array(
-                        jnp.where(imp, p, jnp.asarray(pbp[:, sl])))
+                    pbp[:, sl] = np.array(jnp.where(imp, p, bp))
                     pos[:, sl] = np.array(p)
                     vel[:, sl] = np.array(v)
                     q_mask = fit > lf[b]

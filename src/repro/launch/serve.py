@@ -5,22 +5,35 @@ A serving deployment receives a stream of independent solve requests —
 different seeds, and different problems. One device dispatch per request
 wastes the accelerator (the cuPSO paper's own motivation, one level up:
 amortize fixed costs across work). This module groups pending requests by
-their *compilation key* ``(dim, particle_cnt, problem content hash, iters,
-variant, dtype, sync_every)``, pads each group to a bucketed batch size (so
+their *compilation key*, pads each group to a bucketed batch size (so
 the jit cache stays small: one compiled program per (key, bucket), not per
 request count), and routes every group through a single ``solve_many`` — or
 through the batched fused Pallas kernels (``run_queue_lock_fused_batch`` /
 ``run_queue_lock_fused_async_batch``) for the ``queue_lock`` and ``async``
 variants with ``backend="kernel"``.
 
-``fitness`` may be a registered problem name or a first-class
-``repro.core.problem.Problem`` (user-defined objective; the kernel backend
-lowers it automatically — see ``repro.kernels.pso_step.dmajor_adapter``).
-The grouping key hashes the problem's CONTENT (objective bytecode + consts
-+ bounds + sense + constraint set, ``Problem.cache_key``), never its name
-or object identity, so two distinct custom objectives can never share a
-batch even if both are called "mine" — and re-submitted identical
-objectives still batch together. Constrained problems
+Grouping is two-tier. Requests whose problem is one of the registered
+built-ins (``hetero_fid`` matches it against the dispatch table) coalesce
+into a single HETEROGENEOUS batch keyed only on the shape of the solve —
+``(dim, particle_cnt, iters, variant, dtype, sync_every)`` — regardless of
+which built-in each row asks for: the engines dispatch each row's
+objective and box bounds by ``lax.switch`` inside one compiled program
+(``solve_many(problems=...)`` / the hetero fused kernels), so a mixed
+sphere/rastrigin/ackley trace rides one dispatch instead of one per
+objective. Row results lean on the ``gbest_fit``/``gbest_pos`` fields,
+which are the validated bit-exactness surface of the heterogeneous
+engines (see ``repro.core.pso``'s convention notes for the envelope).
+``coalesce_registry=False`` restores the legacy content-hash-only keys.
+
+``fitness`` may also be a first-class ``repro.core.problem.Problem``
+(user-defined objective; the kernel backend lowers it automatically — see
+``repro.kernels.pso_step.dmajor_adapter``). Custom problems keep the
+second tier: their grouping key hashes the problem's CONTENT (objective
+bytecode + consts + bounds + sense + constraint set,
+``Problem.cache_key``), never its name or object identity, so two
+distinct custom objectives can never share a batch even if both are
+called "mine" — and re-submitted identical objectives still batch
+together. Constrained problems
 (``repro.core.constraints``) ride the same machinery: two requests whose
 constraint sets differ (mode, weight, constraint code) get distinct batch
 keys, and ``SolveResult.feasible``/``violation`` report the Deb-rule
@@ -44,7 +57,8 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core import ASYNC_SYNC_EVERY, PSOConfig
-from repro.core.multi_swarm import init_batch, solve_many
+from repro.core.multi_swarm import (hetero_fid, init_batch, problem_rows,
+                                    solve_many)
 from repro.core.problem import Problem, resolve_problem
 
 # Minimum bucket restored to 4: the S=4 row-bit-identity anomaly (XLA:CPU
@@ -56,6 +70,14 @@ from repro.core.problem import Problem, resolve_problem
 # the standalone solve again (tests/test_multi_swarm.py regression test).
 _MIN_BUCKET = 4
 BUCKETS = (_MIN_BUCKET, 8, 16, 32, 64, 128)
+
+# Hetero batch keys carry this marker in the content-hash slot: every
+# registry built-in at the same solve shape lands in ONE group. The batch's
+# PSOConfig is pinned to a canonical fitness so every mix that shares a
+# group key also shares a compiled program (cfg.fitness only keys the jit
+# cache for heterogeneous batches — the rows carry the real objectives).
+_HETERO = "__hetero__"
+_HETERO_CANONICAL_FITNESS = "cubic"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +109,21 @@ class SolveRequest:
                 resolve_problem(self.fitness).cache_key(), self.iters,
                 self.variant, self.dtype,
                 self.sync_every if self.variant == "async" else 0)
+
+    @property
+    def hetero_eligible(self) -> bool:
+        """True when the problem is a registered built-in: the request can
+        ride a shared heterogeneous batch with other built-ins."""
+        return hetero_fid(self.fitness) is not None
+
+    def group_key(self, coalesce_registry: bool = True) -> Tuple:
+        """The server's grouping key: hetero marker for built-ins (all
+        built-ins at one solve shape coalesce), content hash otherwise."""
+        if coalesce_registry and self.hetero_eligible:
+            return (self.dim, self.particle_cnt, _HETERO, self.iters,
+                    self.variant, self.dtype,
+                    self.sync_every if self.variant == "async" else 0)
+        return self.batch_key
 
     def config(self) -> PSOConfig:
         return PSOConfig(dim=self.dim, particle_cnt=self.particle_cnt,
@@ -126,6 +163,13 @@ class ServeStats:
     requests: int = 0
     dispatches: int = 0      # batched device programs launched
     padded_rows: int = 0     # wasted swarm slots from bucket padding
+    hetero_dispatches: int = 0  # of which: heterogeneous (mixed-problem)
+
+    @property
+    def batch_fill(self) -> float:
+        """Mean real (non-padding) rows per dispatch — the coalescing
+        payoff metric: higher means fewer, fuller device programs."""
+        return self.requests / self.dispatches if self.dispatches else 0.0
 
 
 def bucket_size(k: int, max_batch: int = BUCKETS[-1]) -> int:
@@ -142,11 +186,15 @@ class SolveServer:
     ``backend="jnp"`` runs every variant through the vmapped ``solve_many``;
     ``backend="kernel"`` routes ``queue_lock`` requests through the batched
     fused Pallas kernel (interpret mode off-TPU) and everything else through
-    the jnp path.
+    the jnp path. ``coalesce_registry`` (default on) merges every registered
+    built-in problem at the same solve shape into one heterogeneous batch
+    (``lax.switch`` row dispatch); off, grouping falls back to the legacy
+    per-problem content-hash keys.
     """
 
     def __init__(self, max_batch: int = 64, backend: str = "jnp",
-                 interpret: bool = True, block_n: Optional[int] = None):
+                 interpret: bool = True, block_n: Optional[int] = None,
+                 coalesce_registry: bool = True):
         if backend not in ("jnp", "kernel"):
             raise ValueError(f"unknown backend {backend!r}")
         if max_batch < BUCKETS[0]:
@@ -156,6 +204,7 @@ class SolveServer:
         self.backend = backend
         self.interpret = interpret
         self.block_n = block_n
+        self.coalesce_registry = coalesce_registry
         self.stats = ServeStats()
         self._pending: List[Tuple[int, SolveRequest]] = []
         self._ticket = 0
@@ -170,42 +219,80 @@ class SolveServer:
     def _solve_group(self, reqs: List[SolveRequest]) -> List[SolveResult]:
         """One compilation group -> one (or a few, if > max_batch) dispatches."""
         out: List[SolveResult] = []
+        hetero = (self.coalesce_registry
+                  and all(r.hetero_eligible for r in reqs))
         for lo in range(0, len(reqs), self.max_batch):
             chunk = reqs[lo:lo + self.max_batch]
             k = len(chunk)
             padded = bucket_size(k, self.max_batch)
             seeds = np.array([r.seed for r in chunk]
                              + [chunk[0].seed] * (padded - k), dtype=np.int64)
-            cfg = chunk[0].config()
-            if self.backend == "kernel" and chunk[0].variant == "queue_lock":
-                from repro.kernels.ops import run_queue_lock_fused_batch
-                batch = run_queue_lock_fused_batch(
-                    cfg, init_batch(cfg, seeds), iters=chunk[0].iters,
-                    block_n=self.block_n, interpret=self.interpret)
-            elif self.backend == "kernel" and chunk[0].variant == "async":
-                from repro.kernels.ops import run_queue_lock_fused_async_batch
-                batch = run_queue_lock_fused_async_batch(
-                    cfg, init_batch(cfg, seeds), iters=chunk[0].iters,
-                    sync_every=chunk[0].sync_every,
-                    block_n=self.block_n, interpret=self.interpret)
+            r0 = chunk[0]
+            if hetero:
+                # Padding rows replicate the first request's problem too, so
+                # they stay as dead weight with well-defined bounds.
+                probs = ([r.fitness for r in chunk]
+                         + [r0.fitness] * (padded - k))
+                cfg = PSOConfig(dim=r0.dim, particle_cnt=r0.particle_cnt,
+                                fitness=_HETERO_CANONICAL_FITNESS,
+                                dtype=r0.dtype)
+                batch = self._dispatch_hetero(cfg, seeds, probs, r0)
             else:
-                batch = solve_many(cfg, seeds, iters=chunk[0].iters,
-                                   variant=chunk[0].variant,
-                                   sync_every=chunk[0].sync_every)
+                cfg = r0.config()
+                batch = self._dispatch_uniform(cfg, seeds, r0)
             gf = np.asarray(batch.gbest_fit)
             gp = np.asarray(batch.gbest_pos)
             self.stats.dispatches += 1
+            self.stats.hetero_dispatches += int(hetero)
             self.stats.padded_rows += padded - k
             out.extend(SolveResult(request=r, gbest_fit=float(gf[i]),
                                    gbest_pos=gp[i], batch_size=padded)
                        for i, r in enumerate(chunk))
         return out
 
+    def _dispatch_uniform(self, cfg: PSOConfig, seeds: np.ndarray,
+                          r0: SolveRequest):
+        """Legacy single-problem dispatch (content-hash-keyed groups)."""
+        if self.backend == "kernel" and r0.variant == "queue_lock":
+            from repro.kernels.ops import run_queue_lock_fused_batch
+            return run_queue_lock_fused_batch(
+                cfg, init_batch(cfg, seeds), iters=r0.iters,
+                block_n=self.block_n, interpret=self.interpret)
+        if self.backend == "kernel" and r0.variant == "async":
+            from repro.kernels.ops import run_queue_lock_fused_async_batch
+            return run_queue_lock_fused_async_batch(
+                cfg, init_batch(cfg, seeds), iters=r0.iters,
+                sync_every=r0.sync_every,
+                block_n=self.block_n, interpret=self.interpret)
+        return solve_many(cfg, seeds, iters=r0.iters, variant=r0.variant,
+                          sync_every=r0.sync_every)
+
+    def _dispatch_hetero(self, cfg: PSOConfig, seeds: np.ndarray,
+                         probs: List[Union[str, Problem]], r0: SolveRequest):
+        """Mixed-problem dispatch: per-row objective/bounds descriptors +
+        ``lax.switch`` dispatch, one compiled program for the whole mix."""
+        if self.backend == "kernel" and r0.variant in ("queue_lock", "async"):
+            rows, table = problem_rows(probs, cfg.dim, cfg.dtype)
+            rcfg = cfg.resolved()
+            batch = init_batch(rcfg, seeds, rows=rows, table=table)
+            if r0.variant == "queue_lock":
+                from repro.kernels.ops import run_queue_lock_fused_batch
+                return run_queue_lock_fused_batch(
+                    rcfg, batch, iters=r0.iters, block_n=self.block_n,
+                    interpret=self.interpret, fids=rows.fid, table=table)
+            from repro.kernels.ops import run_queue_lock_fused_async_batch
+            return run_queue_lock_fused_async_batch(
+                rcfg, batch, iters=r0.iters, sync_every=r0.sync_every,
+                block_n=self.block_n, interpret=self.interpret,
+                fids=rows.fid, table=table)
+        return solve_many(cfg, seeds, iters=r0.iters, variant=r0.variant,
+                          sync_every=r0.sync_every, problems=probs)
+
     def flush(self) -> Dict[int, SolveResult]:
         """Dispatch all pending requests; returns {ticket: result}."""
         groups: Dict[Tuple, List[Tuple[int, SolveRequest]]] = defaultdict(list)
         for t, r in self._pending:
-            groups[r.batch_key].append((t, r))
+            groups[r.group_key(self.coalesce_registry)].append((t, r))
         self._pending.clear()
         results: Dict[int, SolveResult] = {}
         for _, members in sorted(groups.items(), key=lambda kv: repr(kv[0])):
@@ -233,31 +320,36 @@ def main() -> int:
                              "async"])
     ap.add_argument("--sync-every", type=int, default=ASYNC_SYNC_EVERY,
                     help="async variant publication interval")
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="legacy per-problem content-hash grouping")
     args = ap.parse_args()
-    # A mixed workload: two problem classes, heterogeneous seeds. The kernel
-    # backend routes queue_lock/async requests; use it when demoing it.
+    # A mixed workload: four built-in objectives over two solve shapes. With
+    # registry coalescing each shape is ONE heterogeneous dispatch; with
+    # --no-coalesce each (shape, problem) pair compiles and runs alone.
     if args.variant == "auto":
         variant = "queue_lock" if args.backend == "kernel" else "queue"
     else:
         variant = args.variant
-    reqs = [SolveRequest(dim=1, particle_cnt=256, fitness="cubic",
-                         seed=i, iters=args.iters, variant=variant,
+    mix = [("cubic", 1, 256), ("sphere", 1, 256),
+           ("rastrigin", 10, 128), ("ackley", 10, 128)]
+    reqs = [SolveRequest(dim=d, particle_cnt=n, fitness=f, seed=i,
+                         iters=args.iters, variant=variant,
                          sync_every=args.sync_every)
-            if i % 2 == 0 else
-            SolveRequest(dim=10, particle_cnt=128, fitness="rastrigin",
-                         seed=i, iters=args.iters, variant=variant,
-                         sync_every=args.sync_every)
-            for i in range(args.requests)]
-    srv = SolveServer(max_batch=args.max_batch, backend=args.backend)
+            for i, (f, d, n) in ((i, mix[i % len(mix)])
+                                 for i in range(args.requests))]
+    srv = SolveServer(max_batch=args.max_batch, backend=args.backend,
+                      coalesce_registry=not args.no_coalesce)
     t0 = time.time()
     results = srv.solve_all(reqs)
     dt = time.time() - t0
     for r in results[:4]:
-        print(f"req(dim={r.request.dim}, seed={r.request.seed}) "
-              f"gbest_fit={r.gbest_fit:.6g} (batch={r.batch_size})")
+        print(f"req({r.request.fitness}, dim={r.request.dim}, "
+              f"seed={r.request.seed}) gbest_fit={r.gbest_fit:.6g} "
+              f"(batch={r.batch_size})")
     s = srv.stats
     print(f"{s.requests} requests in {s.dispatches} dispatches "
-          f"({s.padded_rows} padded rows), wall={dt:.3f}s "
+          f"({s.hetero_dispatches} heterogeneous, {s.padded_rows} padded "
+          f"rows, fill={s.batch_fill:.1f}), wall={dt:.3f}s "
           f"({s.requests / dt:.1f} solves/s)")
     return 0
 

@@ -42,6 +42,19 @@ def _ball_repair(tries=8):
             mode="repair", repair_tries=tries))
 
 
+def _plane_ball(tries=64):
+    """Repair-mode problem whose UNCONSTRAINED optimum is infeasible:
+    maximize sum(x) in [-2, 2]^D subject to ||x||^2 <= 1.5^2. The box
+    corner beats every feasible point, so a raw ``fit > pbest`` fold
+    drives pbests out of the feasible set — the Deb-rule litmus."""
+    return Problem(
+        name="plane_ball", fn=lambda x: jnp.sum(x, -1), lo=-2.0, hi=2.0,
+        constraints=ConstraintSet(
+            constraints=(Constraint(fn=lambda x: jnp.sum(x * x, -1) - 2.25,
+                                    name="ball"),),
+            mode="repair", repair_tries=tries))
+
+
 # --------------------------------------------------------------------------
 # Constraint / ConstraintSet semantics
 # --------------------------------------------------------------------------
@@ -236,10 +249,11 @@ def test_jnp_queue_lock_bit_exact_vs_constrained_oracle(prob_name):
 @pytest.mark.parametrize("prob_name,sync_every,n_blocks",
                          [("sphere_simplex", 4, 4),
                           ("sphere_simplex_pen", 4, 2),
-                          ("sphere_simplex_pen", 3, 4)])
+                          ("sphere_simplex_pen", 3, 4),
+                          ("repair", 4, 2)])
 def test_jnp_async_bit_exact_vs_constrained_oracle(prob_name, sync_every,
                                                    n_blocks):
-    prob = get_problem(prob_name)
+    prob = _ball_repair() if prob_name == "repair" else get_problem(prob_name)
     cfg = PSOConfig(dim=5, particle_cnt=64, fitness=prob).resolved()
     iters = 14
     o = ref.run_constrained_oracle(cfg, 3, iters, variant="async",
@@ -258,6 +272,48 @@ def test_jnp_async_bit_exact_vs_constrained_oracle(prob_name, sync_every,
                                rtol=1e-4, atol=1e-5)
     assert float(sf.gbest_fit) == pytest.approx(float(o.gbest_fit),
                                                 rel=1e-6)
+
+
+def test_deb_improved_predicate():
+    """The shared Deb mask: feasible beats infeasible regardless of fitness,
+    two feasible compare on fitness, two infeasible on violation; strict
+    comparisons keep the incumbent on ties."""
+    from repro.core.constraints import deb_improved
+    fit_n = jnp.asarray([5.0, 5.0, 1.0, 1.0, 5.0, 1.0])
+    viol_n = jnp.asarray([0.0, 2.0, 0.0, 1.0, 3.0, 1.0])
+    fit_o = jnp.asarray([1.0, 1.0, 5.0, 5.0, 1.0, 0.0])
+    viol_o = jnp.asarray([1.0, 0.0, 0.0, 2.0, 2.0, 1.0])
+    np.testing.assert_array_equal(
+        np.asarray(deb_improved(fit_n, viol_n, fit_o, viol_o)),
+        [True, False, False, True, False, False])
+    # unconstrained degeneration: all-zero violations == raw fitness fold
+    z = jnp.zeros_like(fit_n)
+    np.testing.assert_array_equal(
+        np.asarray(deb_improved(fit_n, z, fit_o, z)),
+        np.asarray(fit_n > fit_o))
+
+
+@pytest.mark.parametrize("variant", ["reduction", "queue", "queue_lock",
+                                     "async"])
+def test_deb_pbest_selection_keeps_feasible_pbests(variant):
+    """Engine-level Deb rule (every jnp variant): on a repair-mode problem
+    whose unconstrained optimum is infeasible, the raw fold would drive
+    pbests out of the feasible set; with Deb selection no infeasible
+    candidate ever displaces a feasible pbest, so the (feasible-at-init)
+    pbest population stays feasible through the run."""
+    p = _plane_ball()
+    cfg = PSOConfig(dim=3, particle_cnt=64, fitness=p, w=0.7).resolved()
+    vf = p.violation_fn
+    s0 = init_swarm(cfg, 0)
+    assert float(np.asarray(vf(s0.pbest_pos)).max()) <= 0.0   # feasible init
+    s = solve(cfg, seed=0, iters=40, variant=variant)
+    assert float(np.asarray(vf(s.pbest_pos)).max()) <= 0.0
+    # ...and the rule actually bit: the final population holds infeasible
+    # candidates whose raw fitness beats their (feasible) pbest — exactly
+    # the swaps the old fold would have taken
+    blocked = ((np.asarray(vf(s.pos)) > 0)
+               & (np.asarray(s.fit) > np.asarray(s.pbest_fit)))
+    assert blocked.any()
 
 
 # --------------------------------------------------------------------------
@@ -388,6 +444,24 @@ def test_constrained_kernel_projection_output_feasible():
     np.testing.assert_allclose(pos.sum(-1), 1.0, atol=1e-5)
 
 
+def test_constrained_kernel_repair_deb_pbest():
+    """Kernel-level Deb rule: repair-mode ``_plane_ball`` through the fused
+    kernel matches the (Deb-ized) d-major oracle bit-for-bit, and the pbest
+    population stays feasible — the raw fold would have let the infeasible
+    box corner displace feasible pbests. Gbest feasibility is NOT asserted:
+    the kernel publishes from the current fitness (documented seam)."""
+    p = _plane_ball()
+    cfg = PSOConfig(dim=3, particle_cnt=64, fitness=p, w=0.7).resolved()
+    s0, (pos, vel, pbp, pbf, gp, gf), fitness, kw = _oracle_inputs(cfg, 0)
+    out = ops.run_queue_lock_fused(cfg, s0, iters=8, block_n=64)
+    o = ref.run_fused_oracle(int(s0.seed), 0, pos, vel, pbp, pbf, gp, gf,
+                             8, 64, fitness=fitness, **kw)
+    assert np.array_equal(np.asarray(ops.pack_dmajor(out.pos, 3)),
+                          np.asarray(o[0]))
+    assert float(out.gbest_fit) == float(o[5])
+    assert float(np.asarray(p.violation_fn(out.pbest_pos)).max()) <= 0.0
+
+
 def test_constrained_batched_kernel_row_matches_standalone():
     from repro.core.multi_swarm import init_batch, batch_row
     prob = get_problem("sphere_simplex_pen")
@@ -499,10 +573,43 @@ def test_penalty_ramp_segments_and_improves_feasibility():
     rs = repro.solve_many(ramped, [0, 1], dim=6, particles=64, iters=100,
                           w=0.7, variant="queue_lock")
     assert len(rs) == 2 and all(np.isfinite(r.best_fit) for r in rs)
-    # islands reject the ramp explicitly
-    with pytest.raises(ValueError, match="ramp"):
-        repro.solve(ramped, dim=6, particles=64, iters=100,
-                    method=Method(variant="queue", islands=1))
+
+
+def test_penalty_ramp_composes_with_islands():
+    """The ramp now rides islands: one ``make_distributed_run`` per
+    segment, carried fitness re-weighted at the boundaries. Ground truth
+    is the manual per-segment composition — bit-identical."""
+    import dataclasses
+    import jax
+    from repro.api import _reweight_state
+    from repro.core.distributed import (init_sharded_swarm,
+                                        make_distributed_run)
+    cset = ConstraintSet(
+        constraints=simplex_constraints(), mode="penalty",
+        weight=1.0, ramp=4.0, ramp_every=50)
+    ramped = Problem(name="simplex_ramp_i", fn=lambda x: jnp.sum(x * x, -1),
+                     lo=0.0, hi=1.0, sense="min", constraints=cset)
+    m = Method(variant="queue", islands=1)
+    r = repro.solve(ramped, dim=6, particles=64, iters=100, w=0.7, method=m)
+    assert np.isfinite(r.best_fit)
+    mesh = jax.make_mesh((1,), ("data",))
+    st = init_sharded_swarm(r.config, 0, mesh)
+    for k, wgt in enumerate([1.0, 4.0]):
+        cfg_k = dataclasses.replace(
+            r.config, fitness=ramped.with_penalty_weight(wgt))
+        if k:
+            st = _reweight_state(cfg_k, st)
+        st = make_distributed_run(cfg_k, mesh, iters=50, variant="queue",
+                                  exchange_interval=m.exchange_interval)(st)
+    assert float(st.gbest_fit) == float(r.state.gbest_fit)
+    np.testing.assert_array_equal(np.asarray(st.pos), np.asarray(r.state.pos))
+    np.testing.assert_array_equal(np.asarray(st.gbest_pos),
+                                  np.asarray(r.state.gbest_pos))
+    # the async ring re-seeds its block locals at each segment boundary
+    # (the reweight drops them) — the composition must run end to end
+    ra = repro.solve(ramped, dim=6, particles=64, iters=100, w=0.7,
+                     method=Method(variant="async", islands=1))
+    assert np.isfinite(ra.best_fit) and ra.state.lbest_fit is not None
 
 
 def test_solve_many_feasibility_roundtrip():

@@ -1,0 +1,276 @@
+"""Heterogeneous multi-problem batching: per-row ``lax.switch`` dispatch
+through the jnp engine (``solve_many(problems=...)``), the batched fused
+Pallas kernels (``fids``/``table``), the ``repro.solve_many`` facade and
+the serving layer's registry coalescing.
+
+Exactness assertions follow the validated envelope (see the
+heterogeneous-dispatch notes in ``repro.core.pso``): trajectory fields
+(pos/vel/pbest_pos) and the gbest fields are bitwise at the validated
+shapes; fitness-VALUED fields (fit/pbest_fit) may round 1-2 ulp on
+griewank/rastrigin rows in the jnp engine (the vmapped switch evaluates
+every branch via select_n, which perturbs the fitness reduction's fusion),
+and rosenbrock rows drift a few ulp in the sync kernel (its pair-coupled
+FMA chain rounds differently inside a real conditional branch).
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.core import PSOConfig, init_swarm, solve
+from repro.core.multi_swarm import (batch_row, hetero_fid, init_batch,
+                                    problem_rows, solve_many)
+from repro.core.problem import Problem, resolve_problem
+from repro.kernels import ops
+
+ALL_BUILTINS = ["cubic", "sphere", "rosenbrock", "griewank", "rastrigin",
+                "ackley"]
+SEEDS = list(range(len(ALL_BUILTINS)))
+TRAJ_FIELDS = ("pos", "vel", "pbest_pos")
+FIT_FIELDS = ("fit", "pbest_fit")
+
+
+def _cfg(dim, n, fitness="cubic"):
+    return PSOConfig(dim=dim, particle_cnt=n, fitness=fitness).resolved()
+
+
+def test_hetero_fid_eligibility():
+    assert hetero_fid("sphere") is not None
+    assert hetero_fid(resolve_problem("rastrigin")) is not None
+    custom = Problem(name="mine", fn=lambda x: -(x * x).sum(-1),
+                     lo=-1.0, hi=1.0)
+    assert hetero_fid(custom) is None
+    # a lookalike re-built sphere is NOT the registered instance
+    sphere = resolve_problem("sphere")
+    lookalike = Problem(name="sphere", fn=lambda x: -(x * x).sum(-1),
+                        lo=sphere.lo, hi=sphere.hi)
+    assert hetero_fid(lookalike) is None
+
+
+def test_problem_rows_bounds_match_standalone_configs():
+    rows, table = problem_rows(ALL_BUILTINS, 3, "float32")
+    for s, nm in enumerate(ALL_BUILTINS):
+        r = PSOConfig(dim=3, fitness=nm).resolved()
+        np.testing.assert_array_equal(np.asarray(rows.lo[s]),
+                                      np.full(3, r.min_pos, np.float32))
+        np.testing.assert_array_equal(np.asarray(rows.hi[s]),
+                                      np.full(3, r.max_pos, np.float32))
+        np.testing.assert_array_equal(np.asarray(rows.mv[s]),
+                                      np.full(3, r.max_v, np.float32))
+        assert table[int(rows.fid[s])] == resolve_problem(nm)
+
+
+def test_problem_rows_rejects_non_table_and_hooked_members():
+    custom = Problem(name="mine", fn=lambda x: -(x * x).sum(-1),
+                     lo=-1.0, hi=1.0)
+    with pytest.raises(ValueError, match="dispatch table"):
+        problem_rows(["sphere", custom], 2, "float32")
+    proj = resolve_problem("sphere_simplex")    # mode="projection"
+    assert proj.projection_fn is not None
+    with pytest.raises(ValueError, match="projection/repair"):
+        problem_rows([proj], 2, "float32", table=(proj,))
+
+
+def test_hetero_init_rows_bit_identical_to_standalone():
+    cfg = _cfg(10, 128)
+    rows, table = problem_rows(ALL_BUILTINS, 10, cfg.dtype)
+    batch = init_batch(cfg, SEEDS, rows=rows, table=table)
+    for s, (nm, sd) in enumerate(zip(ALL_BUILTINS, SEEDS)):
+        ref = init_swarm(_cfg(10, 128, nm), sd)
+        row = batch_row(batch, s)
+        for f in ("pos", "vel", "fit", "pbest_fit", "gbest_pos",
+                  "gbest_fit"):
+            np.testing.assert_array_equal(np.asarray(getattr(row, f)),
+                                          np.asarray(getattr(ref, f)),
+                                          err_msg=f"row {s} ({nm}): {f}")
+
+
+@pytest.mark.parametrize("variant", ["reduction", "queue", "queue_lock",
+                                     "async"])
+def test_jnp_switch_dispatch_parity_all_builtins(variant):
+    """All six built-ins in ONE batch: every row's trajectory and gbest
+    fields are bitwise the standalone solve; fitness-valued fields within
+    the documented ulp envelope."""
+    cfg = PSOConfig(dim=10, particle_cnt=128)
+    out = solve_many(cfg, SEEDS, iters=20, variant=variant,
+                     problems=ALL_BUILTINS)
+    for s, (nm, sd) in enumerate(zip(ALL_BUILTINS, SEEDS)):
+        ref = solve(_cfg(10, 128, nm), seed=sd, iters=20, variant=variant)
+        row = batch_row(out, s)
+        for f in TRAJ_FIELDS + ("gbest_pos", "gbest_fit"):
+            np.testing.assert_array_equal(np.asarray(getattr(row, f)),
+                                          np.asarray(getattr(ref, f)),
+                                          err_msg=f"row {s} ({nm}): {f}")
+        for f in FIT_FIELDS:
+            np.testing.assert_allclose(np.asarray(getattr(row, f)),
+                                       np.asarray(getattr(ref, f)),
+                                       rtol=1e-5, atol=1e-4,
+                                       err_msg=f"row {s} ({nm}): {f}")
+
+
+def test_kernel_sync_hetero_batch_parity():
+    """Kernel 3h (scalar-fid conditional dispatch) vs per-row standalone
+    fused kernel runs: trajectory and gbest_pos bitwise; gbest_fit bitwise
+    except rosenbrock's few-ulp FMA drift."""
+    cfg = _cfg(10, 128)
+    rows, table = problem_rows(ALL_BUILTINS, 10, cfg.dtype)
+    batch = init_batch(cfg, SEEDS, rows=rows, table=table)
+    out = ops.run_queue_lock_fused_batch(cfg, batch, iters=8,
+                                         fids=rows.fid, table=table)
+    for s, (nm, sd) in enumerate(zip(ALL_BUILTINS, SEEDS)):
+        ck = _cfg(10, 128, nm)
+        ref = ops.run_queue_lock_fused(ck, init_swarm(ck, sd), iters=8)
+        row = batch_row(out, s)
+        for f in ("pos", "vel", "pbest_pos", "gbest_pos"):
+            np.testing.assert_array_equal(np.asarray(getattr(row, f)),
+                                          np.asarray(getattr(ref, f)),
+                                          err_msg=f"row {s} ({nm}): {f}")
+        if nm == "rosenbrock":
+            np.testing.assert_allclose(float(row.gbest_fit),
+                                       float(ref.gbest_fit), rtol=1e-5)
+        else:
+            assert float(row.gbest_fit) == float(ref.gbest_fit), nm
+
+
+def test_kernel_async_hetero_batch_parity():
+    """Kernel 4h at its validated shape (d10/n128): fully bitwise."""
+    cfg = _cfg(10, 128)
+    rows, table = problem_rows(ALL_BUILTINS, 10, cfg.dtype)
+    batch = init_batch(cfg, SEEDS, rows=rows, table=table)
+    out = ops.run_queue_lock_fused_async_batch(cfg, batch, iters=8,
+                                               sync_every=4,
+                                               fids=rows.fid, table=table)
+    for s, (nm, sd) in enumerate(zip(ALL_BUILTINS, SEEDS)):
+        ck = _cfg(10, 128, nm)
+        ref = ops.run_queue_lock_fused_async(ck, init_swarm(ck, sd),
+                                             iters=8, sync_every=4)
+        row = batch_row(out, s)
+        for f in ("pos", "vel", "pbest_pos", "pbest_fit", "gbest_pos",
+                  "gbest_fit"):
+            np.testing.assert_array_equal(np.asarray(getattr(row, f)),
+                                          np.asarray(getattr(ref, f)),
+                                          err_msg=f"row {s} ({nm}): {f}")
+
+
+def test_core_solve_many_problems_validation():
+    with pytest.raises(ValueError, match="bounds"):
+        solve_many(PSOConfig(dim=2, min_pos=-1.0, max_pos=1.0), [0, 1],
+                   problems=["sphere", "cubic"])
+    with pytest.raises(ValueError, match="problems for"):
+        solve_many(PSOConfig(dim=2), [0, 1, 2],
+                   problems=["sphere", "cubic"])
+
+
+def test_facade_solve_many_problems():
+    res = repro.solve_many(problems=ALL_BUILTINS, seeds=SEEDS, dim=10,
+                           particles=128, iters=10, variant="queue")
+    assert [r.problem.name for r in res] == ALL_BUILTINS
+    for r, nm, sd in zip(res, ALL_BUILTINS, SEEDS):
+        ref = repro.solve(nm, dim=10, particles=128, iters=10, seed=sd,
+                          variant="queue")
+        assert float(r.state.gbest_fit) == float(ref.state.gbest_fit)
+        np.testing.assert_array_equal(np.asarray(r.state.gbest_pos),
+                                      np.asarray(ref.state.gbest_pos))
+        # per-row Result accessors report in the row problem's own sense
+        assert r.best_fit == ref.best_fit
+        assert r.config.fitness == resolve_problem(nm)
+
+
+def test_facade_solve_many_problems_validation():
+    with pytest.raises(ValueError, match="exactly one"):
+        repro.solve_many("sphere", [0, 1], problems=["sphere", "cubic"])
+    with pytest.raises(ValueError, match="exactly one"):
+        repro.solve_many(seeds=[0, 1])
+    with pytest.raises(ValueError, match="problems for"):
+        repro.solve_many(problems=["sphere"], seeds=[0, 1])
+    with pytest.raises(ValueError, match="bounds"):
+        repro.solve_many(problems=["sphere", "cubic"], seeds=[0, 1],
+                         min_pos=-1.0)
+
+
+def test_facade_solve_many_problems_kernel_backend():
+    res = repro.solve_many(problems=["sphere", "rastrigin", "ackley"],
+                           seeds=[0, 1, 2], dim=2, particles=128, iters=6,
+                           backend="kernel", variant="queue_lock")
+    for r, nm, sd in zip(res, ["sphere", "rastrigin", "ackley"], [0, 1, 2]):
+        ck = _cfg(2, 128, nm)
+        ref = ops.run_queue_lock_fused(ck, init_swarm(ck, sd), iters=6)
+        assert float(r.state.gbest_fit) == float(ref.gbest_fit)
+        np.testing.assert_array_equal(np.asarray(r.state.gbest_pos),
+                                      np.asarray(ref.gbest_pos))
+
+
+# --------------------------------------------------------------------------
+# Serving: registry coalescing
+# --------------------------------------------------------------------------
+
+def test_serve_mixed_builtin_trace_coalesces_to_one_dispatch():
+    from repro.launch.serve import SolveRequest, SolveServer
+    reqs = [SolveRequest(dim=10, particle_cnt=128, fitness=nm, seed=i,
+                         iters=20, variant="queue")
+            for i, nm in enumerate(ALL_BUILTINS)]
+    srv = SolveServer()
+    res = srv.solve_all(reqs)
+    assert srv.stats.dispatches == 1
+    assert srv.stats.hetero_dispatches == 1
+    assert srv.stats.batch_fill == len(reqs)
+    for r in res:
+        ref = solve(_cfg(10, 128, r.request.fitness), seed=r.request.seed,
+                    iters=20, variant="queue")
+        assert r.gbest_fit == float(ref.gbest_fit)
+        np.testing.assert_array_equal(r.gbest_pos,
+                                      np.asarray(ref.gbest_pos))
+
+
+def test_serve_coalesce_off_restores_content_hash_grouping():
+    from repro.launch.serve import SolveRequest, SolveServer
+    reqs = [SolveRequest(dim=3, particle_cnt=64, fitness=nm, seed=i,
+                         iters=10, variant="queue")
+            for i, nm in enumerate(["sphere", "cubic", "rastrigin"])]
+    srv = SolveServer(coalesce_registry=False)
+    srv.solve_all(reqs)
+    assert srv.stats.dispatches == 3       # one per problem (legacy keys)
+    assert srv.stats.hetero_dispatches == 0
+    srv2 = SolveServer()
+    srv2.solve_all(reqs)
+    assert srv2.stats.dispatches == 1
+    assert srv2.stats.batch_fill >= 2 * srv.stats.batch_fill
+
+
+def test_serve_custom_problem_keeps_content_hash_isolation():
+    from repro.launch.serve import SolveRequest, SolveServer
+    custom = Problem(name="mine", fn=lambda x: -(x * x).sum(-1),
+                     lo=-1.0, hi=1.0)
+    reqs = [SolveRequest(dim=3, particle_cnt=64, fitness="sphere", seed=0,
+                         iters=10, variant="queue"),
+            SolveRequest(dim=3, particle_cnt=64, fitness=custom, seed=1,
+                         iters=10, variant="queue")]
+    assert reqs[0].hetero_eligible and not reqs[1].hetero_eligible
+    srv = SolveServer()
+    res = srv.solve_all(reqs)
+    assert srv.stats.dispatches == 2       # custom cannot join the mix
+    assert srv.stats.hetero_dispatches == 1
+    ref = solve(PSOConfig(dim=3, particle_cnt=64, fitness=custom).resolved(),
+                seed=1, iters=10, variant="queue")
+    assert res[1].gbest_fit == float(ref.gbest_fit)
+
+
+def test_serve_kernel_backend_hetero_dispatch():
+    from repro.launch.serve import SolveRequest, SolveServer
+    names = ["sphere", "rastrigin", "ackley"]
+    for variant in ("queue_lock", "async"):
+        reqs = [SolveRequest(dim=2, particle_cnt=128, fitness=nm, seed=i,
+                             iters=6, variant=variant)
+                for i, nm in enumerate(names)]
+        srv = SolveServer(backend="kernel")
+        res = srv.solve_all(reqs)
+        assert srv.stats.dispatches == 1
+        for r in res:
+            ck = _cfg(2, 128, r.request.fitness)
+            st = init_swarm(ck, r.request.seed)
+            if variant == "queue_lock":
+                ref = ops.run_queue_lock_fused(ck, st, iters=6)
+            else:
+                ref = ops.run_queue_lock_fused_async(ck, st, iters=6)
+            np.testing.assert_array_equal(r.gbest_pos,
+                                          np.asarray(ref.gbest_pos))
+            assert r.gbest_fit == float(ref.gbest_fit)
