@@ -26,12 +26,24 @@ warning, because a threshold this tight is only meaningful for
 same-runner A/Bs. CI keeps it armed by auto-refreshing the committed
 baseline from the same job on main (see .github/workflows/ci.yml), so
 after one merge the baseline tracks the CI runner.
+
+Records matching ``WARN_ONLY_PREFIXES`` (currently the ``autotune/``
+auto-vs-fixed suite) are reported but can never fail the run, gated or
+not — see the constant below for the promotion path.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+#: Record-name prefixes that are reported but never fail the run — not
+#: even under ``--gate``. The ``autotune/`` records compare a *tuned*
+#: schedule against the fixed default, so their us/call moves whenever the
+#: tuner changes its pick; until they have a few baseline-refresh cycles
+#: of noise-floor history they stay warn-only. Promote by removing the
+#: prefix here and adding it to the CI gate list.
+WARN_ONLY_PREFIXES = ("autotune/",)
 
 
 def load(path):
@@ -94,6 +106,14 @@ def main() -> int:
               + (" ..." if len(removed) > 6 else ""))
 
     rc = 0
+    warn_only = [r for r in rows
+                 if any(r[1].startswith(p) for p in WARN_ONLY_PREFIXES)]
+    rows = [r for r in rows if r not in warn_only]
+    if warn_only:
+        bad = [r for r in warn_only if r[0] > args.threshold]
+        print(f"# {len(warn_only)} warn-only records "
+              f"({', '.join(WARN_ONLY_PREFIXES)}): "
+              f"{len(bad)} beyond threshold, never gated")
     worst = [r for r in rows if r[0] > args.threshold]
     if worst:
         print(f"\n{len(worst)}/{len(rows)} records regressed more than "

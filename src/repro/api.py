@@ -42,6 +42,7 @@ records the gbest-per-sync-point trajectory (``Result.history``,
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -54,6 +55,9 @@ from repro.core.pso import (ASYNC_SYNC_EVERY, PSOConfig, SwarmState,
 
 _KERNEL_VARIANTS = ("queue_lock", "async")
 
+# one-time: Method(backend="auto", record_history=True) forcing jnp
+_WARNED_HISTORY_FORCES_JNP = False
+
 
 def _default_backend() -> str:
     import jax
@@ -63,6 +67,23 @@ def _default_backend() -> str:
 @dataclasses.dataclass(frozen=True)
 class Method:
     """How to run a solve: aggregation variant + execution backend.
+
+    ``backend="auto"`` applies the fixed rule: the kernel backend on an
+    actual TPU for the two fused variants (``queue_lock``/``async``), jnp
+    everywhere else — EXCEPT when ``record_history=True``, which always
+    resolves to jnp (history is a jnp-engine feature: the fused Pallas
+    kernels never surface per-iteration gbest, so auto must not pick the
+    kernel and then reject its own choice; ``resolve_backend`` warns once
+    when this rule overrides what auto would otherwise pick).
+
+    ``schedule="auto"`` goes further: instead of the fixed rule, the
+    roofline autotuner (``repro.core.autotune``) picks the whole
+    ``(variant, backend, block_n, sync_every)`` schedule per solve shape —
+    cost-model ranking with a measured micro-run fallback, cached per
+    shape. Under ``schedule="auto"`` the ``variant`` field is a
+    preference, not a pin (the tuner may select a different variant); pin
+    ``backend="jnp"``/``"kernel"`` to restrict the tuner's backend scope.
+    The default ``schedule="fixed"`` keeps every knob exactly as given.
 
     ``islands > 0`` shards the swarm over that many devices
     (``repro.core.distributed``): particles split into equal islands, each
@@ -82,8 +103,16 @@ class Method:
     exchange_interval: int = 1            # iterations between island syncs
     record_history: bool = False          # Result.history: gbest per sync
     # point (jnp single-swarm engines only — see run_with_history)
+    schedule: str = "fixed"               # fixed | auto (roofline autotuner)
 
     def __post_init__(self):
+        if self.schedule not in ("fixed", "auto"):
+            raise ValueError(
+                f"unknown schedule {self.schedule!r}; one of fixed|auto")
+        if self.schedule == "auto" and self.islands:
+            raise ValueError(
+                "schedule='auto' tunes single-device schedules; the island "
+                "runners pick their own block layout — use schedule='fixed'")
         if self.variant not in VARIANTS:
             raise ValueError(
                 f"unknown variant {self.variant!r}; one of {VARIANTS}")
@@ -118,11 +147,50 @@ class Method:
         if self.backend != "auto":
             return self.backend
         if self.record_history:
-            return "jnp"        # history is a jnp-engine feature: auto must
-            # not pick the kernel on TPU and then reject its own choice
+            # history is a jnp-engine feature: auto must not pick the
+            # kernel on TPU and then reject its own choice
+            global _WARNED_HISTORY_FORCES_JNP
+            if not _WARNED_HISTORY_FORCES_JNP and \
+                    self.variant in _KERNEL_VARIANTS:
+                _WARNED_HISTORY_FORCES_JNP = True
+                warnings.warn(
+                    "Method(backend='auto', record_history=True) always "
+                    "resolves to the jnp engine — on a TPU the "
+                    f"{self.variant!r} Pallas kernel would normally win, "
+                    "but the fused kernels never surface the "
+                    "per-iteration gbest that Result.history needs. Pass "
+                    "record_history=False to allow the kernel, or "
+                    "backend='jnp' to silence this.",
+                    stacklevel=2)
+            return "jnp"
         if self.variant in _KERNEL_VARIANTS and _default_backend() == "tpu":
             return "kernel"
         return "jnp"
+
+    def resolve_schedule(self, problem, d: int, n: int, iters: int, *,
+                         dtype: str = "float32", batch: int = 1,
+                         hetero_table: int = 0, measure: bool = True):
+        """The grown form of ``resolve_backend``: a full execution
+        schedule for one solve shape. ``schedule="fixed"`` returns this
+        Method's own knobs (backend resolved by the fixed rule);
+        ``schedule="auto"`` asks the roofline autotuner — cost-model
+        ranking, measured micro-run fallback (``measure=False`` stops at
+        the model), on-disk cache per shape."""
+        from repro.core.autotune import Schedule, resolve_schedule
+        if self.schedule != "auto":
+            return Schedule(variant=self.variant,
+                            backend=self.resolve_backend(),
+                            block_n=self.block_n,
+                            sync_every=self.sync_every, source="fixed")
+        kernel_ok = None
+        if self.backend == "jnp" or self.record_history:
+            kernel_ok = False
+        elif self.backend == "kernel":
+            kernel_ok = True
+        return resolve_schedule(
+            problem, d, n, iters, dtype=dtype, batch=batch,
+            hetero_table=hetero_table, record_history=self.record_history,
+            measure=measure, kernel_ok=kernel_ok)
 
     def resolve_interpret(self) -> bool:
         if self.interpret is not None:
@@ -200,11 +268,34 @@ class Result:
         return int(self.history.iteration[feas[0]]) if feas.size else None
 
 
+def _effective_method(m: Method, problem, cfg: PSOConfig, iters: int,
+                      batch: int = 1, hetero_table: int = 0) -> Method:
+    """Collapse ``schedule="auto"`` into a concrete fixed Method via the
+    autotuner (one resolution per solve, covering every ramp segment)."""
+    if m.schedule != "auto":
+        return m
+    s = m.resolve_schedule(problem, cfg.dim, cfg.particle_cnt, iters,
+                           dtype=cfg.dtype, batch=batch,
+                           hetero_table=hetero_table)
+    return dataclasses.replace(m, variant=s.variant, backend=s.backend,
+                               block_n=s.block_n, sync_every=s.sync_every,
+                               schedule="fixed")
+
+
+def _jnp_async_blocks(m: Method, n: int) -> Optional[int]:
+    """The jnp engines take a block COUNT where the kernels take a block
+    size; translate a tuned ``block_n`` for the async fallback."""
+    if m.variant != "async" or m.block_n is None:
+        return None
+    return max(1, n // m.block_n)
+
+
 def _make_method(method: Optional[Method], variant, backend, sync_every,
-                 block_n, interpret, record_history=None) -> Method:
+                 block_n, interpret, record_history=None,
+                 schedule=None) -> Method:
     explicit = dict(variant=variant, backend=backend, sync_every=sync_every,
                     block_n=block_n, interpret=interpret,
-                    record_history=record_history)
+                    record_history=record_history, schedule=schedule)
     given = {k: v for k, v in explicit.items() if v is not None}
     if method is not None:
         if given:
@@ -237,17 +328,21 @@ def solve(problem: Union[str, Problem], *,
           w: Optional[float] = None, c1: Optional[float] = None,
           c2: Optional[float] = None, dtype: str = "float32",
           min_pos=None, max_pos=None, max_v=None,
-          record_history: Optional[bool] = None) -> Result:
+          record_history: Optional[bool] = None,
+          schedule: Optional[str] = None) -> Result:
     """Solve ``problem`` with ``particles`` particles for ``iters``
     iterations. Either pass a full ``method=Method(...)`` or the loose
     ``variant=``/``backend=``/... kwargs (not both). ``dim`` defaults to
     the problem's per-dimension bound length (else 1).
+    ``schedule="auto"`` lets the roofline autotuner pick the execution
+    schedule for this shape (see ``Method``).
     """
     prob = resolve_problem(problem)
     m = _make_method(method, variant, backend, sync_every, block_n,
-                     interpret, record_history)
+                     interpret, record_history, schedule)
     cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
                        min_pos, max_pos, max_v)
+    m = _effective_method(m, prob, cfg, iters)
     if m.islands:
         state = _run_islands(prob, cfg, seed, iters, m)
         hist = None
@@ -390,7 +485,8 @@ def _run_state(cfg: PSOConfig, state: SwarmState, iters: int, m: Method):
                 block_n=m.block_n, interpret=m.resolve_interpret()), None
         return run_queue_lock_fused(cfg, state, iters, block_n=m.block_n,
                                     interpret=m.resolve_interpret()), None
-    return run(cfg, state, iters, m.variant, sync_every=m.sync_every), None
+    return run(cfg, state, iters, m.variant, sync_every=m.sync_every,
+               n_blocks=_jnp_async_blocks(m, state.pos.shape[0])), None
 
 
 def solve_many(problem: Union[str, Problem, None] = None,
@@ -406,7 +502,8 @@ def solve_many(problem: Union[str, Problem, None] = None,
                coeffs: Optional[Tuple] = None,
                w: Optional[float] = None, c1: Optional[float] = None,
                c2: Optional[float] = None, dtype: str = "float32",
-               min_pos=None, max_pos=None, max_v=None) -> List[Result]:
+               min_pos=None, max_pos=None, max_v=None,
+               schedule: Optional[str] = None) -> List[Result]:
     """Batched facade: one independent solve per entry of ``seeds``, all in
     ONE device program (vmapped jnp engine, or the batched fused/async
     Pallas kernels for ``backend="kernel"``). Row ``s`` is bit-identical to
@@ -425,7 +522,7 @@ def solve_many(problem: Union[str, Problem, None] = None,
     envelope).
     """
     m = _make_method(method, variant, backend, sync_every, block_n,
-                     interpret)
+                     interpret, schedule=schedule)
     if m.islands:
         raise ValueError("islands shard ONE swarm over devices; use solve()"
                          " — solve_many batches independent swarms instead")
@@ -443,6 +540,7 @@ def solve_many(problem: Union[str, Problem, None] = None,
     prob = resolve_problem(problem)
     cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
                        min_pos, max_pos, max_v)
+    m = _effective_method(m, prob, cfg, iters, batch=len(seeds))
     batch = init_batch(cfg, np.asarray(seeds, dtype=np.int64))
     batch, _ = _ramp_loop(
         prob, cfg, batch, iters,
@@ -473,6 +571,8 @@ def _solve_many_hetero(problems, seeds, m: Method, dim, particles, iters,
         if v is not None:
             kw[key] = v
     cfg = PSOConfig(**kw)
+    m = _effective_method(m, probs[0], cfg, iters, batch=len(seeds),
+                          hetero_table=len({p.cache_key() for p in probs}))
     seeds_arr = np.asarray(seeds, dtype=np.int64)
     if m.resolve_backend() == "kernel":
         if coeffs is not None:
@@ -496,7 +596,9 @@ def _solve_many_hetero(problems, seeds, m: Method, dim, particles, iters,
         from repro.core.multi_swarm import solve_many as _core_solve_many
         batch = _core_solve_many(cfg, seeds_arr, iters=iters,
                                  variant=m.variant, coeffs=coeffs,
-                                 sync_every=m.sync_every, problems=probs)
+                                 sync_every=m.sync_every, problems=probs,
+                                 n_blocks=_jnp_async_blocks(
+                                     m, cfg.particle_cnt))
     return [Result(problem=probs[s],
                    config=hetero_member_config(cfg, probs[s]),
                    method=m, iters=iters, state=batch_row(batch, s))
@@ -534,7 +636,8 @@ def _run_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int, m: Method,
             cfg, batch, iters, block_n=m.block_n,
             interpret=m.resolve_interpret())
     return run_many(cfg, batch, iters, m.variant, coeffs,
-                    sync_every=m.sync_every)
+                    sync_every=m.sync_every,
+                    n_blocks=_jnp_async_blocks(m, batch.pos.shape[1]))
 
 
 def best(results: Sequence[Result]) -> Result:

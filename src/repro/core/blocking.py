@@ -1,6 +1,12 @@
-"""Particle-block sizing, shared by the Pallas kernels and the jnp async
-fallback (ROADMAP: previously duplicated between ``kernels/ops.py`` and
-``core/pso.py._default_async_blocks``; unified here).
+"""Particle-block sizing: the heuristic DEFAULT schedule, shared by the
+Pallas kernels and the jnp async fallback.
+
+This module is the fixed-rule floor under the roofline autotuner
+(``repro.core.autotune``): when nothing tunes the schedule,
+``pick_block_n`` supplies the block size, and the autotuner uses the same
+pick as its fallback candidate and as the anchor of its block-size search
+space (``_block_choices``). Tuned solves override it with an explicit
+``block_n`` threaded through ``kernels/ops.py`` / ``core.pso.run_async``.
 
 ``LANE`` is the TPU vector lane width: kernel block sizes want to be a
 multiple of it so a block fills whole [8, 128] tiles. The jnp fallback has
@@ -10,7 +16,17 @@ bit-for-bit.
 """
 from __future__ import annotations
 
+import warnings
+
 LANE = 128
+
+#: Grid-degeneracy guard: a block layout with more than this many blocks
+#: (e.g. a prime ``n > target`` whose only small divisor is 1 -> ``n``
+#: single-particle blocks) costs more in per-block aggregation and grid
+#: steps than any block-size target can save. ``pick_block_n`` then
+#: ignores the target and picks the smallest divisor keeping the count
+#: under the cap — for a prime ``n`` that is ``n`` itself (one block).
+MAX_BLOCK_COUNT = 256
 
 
 def pick_block_n(n: int, target: int = 512, lane: int = LANE) -> int:
@@ -18,22 +34,44 @@ def pick_block_n(n: int, target: int = 512, lane: int = LANE) -> int:
     ``lane``-aligned ones.
 
     One descending pass: the first ``lane``-aligned (multiple-of-``lane``)
-    divisor wins outright; otherwise the first (i.e. largest) divisor of any
-    kind is the fallback. With ``lane=1`` every divisor is "aligned", so the
-    largest divisor <= target wins unconditionally. A prime ``n`` larger
-    than ``target`` has no divisor <= target except 1.
+    divisor wins outright; otherwise the first (i.e. largest) divisor of
+    any kind is the fallback.  With ``lane=1`` every divisor is "aligned",
+    so the largest divisor <= target wins unconditionally.
+
+    Degenerate grids are refused: if the best divisor <= ``target`` would
+    shatter ``n`` into more than ``MAX_BLOCK_COUNT`` blocks (a prime
+    ``n > target`` is the extreme — its only such divisor is 1), the
+    target is overridden by the smallest divisor of ``n`` that keeps the
+    block count capped, with a warning. The returned value is therefore
+    always a divisor of ``n`` but NOT always <= ``target``.
     """
     best = 1
     for bn in range(min(n, target), 0, -1):
         if n % bn == 0:
             if bn % lane == 0:
-                return bn
+                best = bn
+                break
             if best == 1:
                 best = bn
-    return best
+    if n // best <= MAX_BLOCK_COUNT:
+        return best
+    # Degenerate: cap the block count. Smallest divisor >= n / cap wins
+    # (largest block count still under the cap, i.e. closest to the
+    # original target's intent).
+    floor = -(-n // MAX_BLOCK_COUNT)                 # ceil(n / cap)
+    capped = next(b for b in range(floor, n + 1) if n % b == 0)
+    warnings.warn(
+        f"pick_block_n({n}, target={target}): best dividing block size "
+        f"{best} would give {n // best} single-file blocks (> "
+        f"{MAX_BLOCK_COUNT}); overriding the target with block_n={capped} "
+        f"({n // capped} block(s)). Pad or resize the swarm to a "
+        f"composite particle count to keep blocks near the target.",
+        stacklevel=2)
+    return capped
 
 
 def default_block_count(n: int, target: int = 512) -> int:
     """Block COUNT for the jnp async fallback: the largest block size <=
-    ``target`` that divides ``n``, alignment-free (``lane=1``)."""
+    ``target`` that divides ``n``, alignment-free (``lane=1``), with the
+    same ``MAX_BLOCK_COUNT`` degeneracy guard."""
     return n // pick_block_n(n, target, lane=1)

@@ -246,26 +246,28 @@ def _run_many_async(cfg: PSOConfig, batch: SwarmBatch, iters: int,
                     sync_every: int,
                     coeffs: Optional[Tuple[Array, Array, Array]] = None,
                     phase: int = 0, rows: Optional[ProblemRows] = None,
-                    table=None) -> SwarmBatch:
+                    table=None,
+                    n_blocks: Optional[int] = None) -> SwarmBatch:
     hr = None if rows is None else _hetero_rows(rows)
     if coeffs is None and hr is None:
         fn = jax.vmap(lambda s: run_async(
-            cfg, s, iters, sync_every=sync_every, phase=phase))
+            cfg, s, iters, sync_every=sync_every, phase=phase,
+            n_blocks=n_blocks))
         return SwarmBatch(*fn(SwarmState(*batch)))
     if coeffs is None:
         fn = jax.vmap(lambda s, f: run_async(
             cfg, s, iters, sync_every=sync_every, phase=phase,
-            hetero_row=f, table=table))
+            hetero_row=f, table=table, n_blocks=n_blocks))
         return SwarmBatch(*fn(SwarmState(*batch), hr))
     w, c1, c2 = (jnp.asarray(c) for c in coeffs)
     if hr is None:
         fn = jax.vmap(lambda s, w_, c1_, c2_: run_async(
             cfg, s, iters, sync_every=sync_every, coeffs=(w_, c1_, c2_),
-            phase=phase))
+            phase=phase, n_blocks=n_blocks))
         return SwarmBatch(*fn(SwarmState(*batch), w, c1, c2))
     fn = jax.vmap(lambda s, w_, c1_, c2_, f: run_async(
         cfg, s, iters, sync_every=sync_every, coeffs=(w_, c1_, c2_),
-        phase=phase, hetero_row=f, table=table))
+        phase=phase, hetero_row=f, table=table, n_blocks=n_blocks))
     return SwarmBatch(*fn(SwarmState(*batch), w, c1, c2, hr))
 
 
@@ -351,7 +353,8 @@ def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
              coeffs: Optional[Tuple[Array, Array, Array]] = None,
              sync_every: int = ASYNC_SYNC_EVERY,
              rows: Optional[ProblemRows] = None,
-             table: Optional[Tuple[Problem, ...]] = None) -> SwarmBatch:
+             table: Optional[Tuple[Problem, ...]] = None,
+             n_blocks: Optional[int] = None) -> SwarmBatch:
     """Advance every swarm of the batch ``iters`` iterations in lockstep.
 
     One fori_loop over one vmapped step: a single compiled program, a single
@@ -387,7 +390,7 @@ def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
                                          (pad - s_cnt,) + a.shape[1:])]),
                 tuple(rows)))
         out = run_many(cfg, batch, iters, variant, coeffs, sync_every,
-                       rows, table)
+                       rows, table, n_blocks)
         return SwarmBatch(*jax.tree_util.tree_map(lambda a: a[:s_cnt],
                                                   tuple(out)))
     if variant == "async":
@@ -395,7 +398,7 @@ def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
         uniq = sorted(set(phases))
         if len(uniq) == 1:
             return _run_many_async(cfg, batch, iters, sync_every, coeffs,
-                                   uniq[0], rows, table)
+                                   uniq[0], rows, table, n_blocks)
         # Mixed resume points (rows checkpointed at different iterations):
         # phase is static per compiled program, so dispatch one padded
         # program per phase group and scatter the rows back in place.
@@ -411,7 +414,7 @@ def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
                 lambda a: a[take], tuple(rows)))
                 if rows is not None else None)
             out = run_many(cfg, sub, iters, variant, sub_coeffs, sync_every,
-                           sub_rows, table)
+                           sub_rows, table, n_blocks)
             for j, i in enumerate(idx):
                 out_rows[i] = jax.tree_util.tree_map(lambda a: a[j],
                                                      tuple(out))
@@ -428,7 +431,8 @@ def solve_many(cfg: PSOConfig, seeds, iters: int = 1000,
                variant: str = "queue",
                coeffs: Optional[Tuple[Array, Array, Array]] = None,
                sync_every: int = ASYNC_SYNC_EVERY,
-               problems: Optional[Sequence] = None) -> SwarmBatch:
+               problems: Optional[Sequence] = None,
+               n_blocks: Optional[int] = None) -> SwarmBatch:
     """Batched one-shot: init + run for S independent solves.
 
     ``seeds`` is any int sequence/array of length S; ``variant`` is one of
@@ -464,10 +468,10 @@ def solve_many(cfg: PSOConfig, seeds, iters: int = 1000,
         cfg = cfg.resolved()
         batch = init_batch(cfg, seeds, rows=rows, table=table)
         return run_many(cfg, batch, iters, variant, coeffs, sync_every,
-                        rows, table)
+                        rows, table, n_blocks)
     cfg = cfg.resolved()
     return run_many(cfg, init_batch(cfg, seeds), iters, variant, coeffs,
-                    sync_every)
+                    sync_every, n_blocks=n_blocks)
 
 
 def best_of_batch(batch: SwarmBatch) -> Tuple[Array, Array, Array]:

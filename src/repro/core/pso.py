@@ -669,16 +669,20 @@ def _run_stepped(cfg: PSOConfig, state: SwarmState, iters: int,
 
 def run(cfg: PSOConfig, state: SwarmState, iters: int,
         variant: str = "queue",
-        sync_every: int = ASYNC_SYNC_EVERY) -> SwarmState:
+        sync_every: int = ASYNC_SYNC_EVERY,
+        n_blocks: Optional[int] = None) -> SwarmState:
     """Run ``iters`` PSO iterations with the chosen aggregation variant.
 
-    ``sync_every`` only affects ``variant="async"`` (publication interval).
+    ``sync_every`` and ``n_blocks`` only affect ``variant="async"``
+    (publication interval and particle-block count — the schedule knobs
+    the autotuner picks; ``n_blocks=None`` keeps the heuristic default).
     A thin dispatcher over the jitted implementations, so synchronous
     variants never key their jit cache on the (irrelevant) ``sync_every``.
     """
     cfg = cfg.resolved()
     if variant == "async":
-        return run_async(cfg, state, iters, sync_every=sync_every)
+        return run_async(cfg, state, iters, sync_every=sync_every,
+                         n_blocks=n_blocks)
     if state.lbest_fit is not None:
         # Sync variants advance gbest without maintaining the async
         # block-local cache; drop it so a later async run re-seeds fresh.

@@ -30,6 +30,18 @@ from .pso_step import (fused_async_batch_call, fused_async_call,
                        queue_step_call)
 
 
+def _resolve_block(n: int, block_n: Optional[int]) -> int:
+    """Validate an explicit ``block_n`` override (the autotuner and users
+    both pass them now) or fall back to the heuristic pick. Every kernel
+    wrapper routes through here so a non-dividing override fails loudly at
+    the call site instead of as a shape error inside the pallas_call."""
+    bn = block_n or pick_block_n(n)
+    if bn < 1 or n % bn:
+        raise ValueError(
+            f"block_n={bn} must be a positive divisor of particle_cnt={n}")
+    return bn
+
+
 def pack_dmajor(pos, d: int):
     """[N, D] -> [Dpad, N] (zero-padded sublanes)."""
     n = pos.shape[0]
@@ -86,7 +98,7 @@ def queue_step(cfg: PSOConfig, s: SwarmState, block_n: Optional[int] = None,
     """
     cfg = cfg.resolved()
     n, d = s.pos.shape
-    bn = block_n or pick_block_n(n)
+    bn = _resolve_block(n, block_n)
     scal, pos, vel, pbp, pbf, gp, gf = state_to_kernel(s, d)
     call = queue_step_call(n, d, bn, s.pos.dtype, interpret=interpret,
                            **_cfg_kwargs(cfg))
@@ -116,7 +128,7 @@ def run_queue_lock_fused(cfg: PSOConfig, s: SwarmState, iters: int,
     """
     cfg = cfg.resolved()
     n, d = s.pos.shape
-    bn = block_n or pick_block_n(n)
+    bn = _resolve_block(n, block_n)
     scal, pos, vel, pbp, pbf, gp, gf = state_to_kernel(s, d)
     call = fused_call(n, d, iters, bn, s.pos.dtype, interpret=interpret,
                       **_cfg_kwargs(cfg))
@@ -167,7 +179,7 @@ def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
     """
     cfg = cfg.resolved()
     s_cnt, n, d = batch.pos.shape
-    bn = block_n or pick_block_n(n)
+    bn = _resolve_block(n, block_n)
     seeds = batch.seed.astype(jnp.int32)
     its = batch.iteration.astype(jnp.int32)
     pos = pack_dmajor_batch(batch.pos, d)
@@ -248,7 +260,7 @@ def run_queue_lock_fused_async(cfg: PSOConfig, s: SwarmState, iters: int,
     """
     cfg = cfg.resolved()
     n, d = s.pos.shape
-    bn = block_n or pick_block_n(n)
+    bn = _resolve_block(n, block_n)
     nb = n // bn
     scal, pos, vel, pbp, pbf, gp, gf = state_to_kernel(s, d)
     if s.lbest_fit is not None and s.lbest_fit.shape == (nb,):
@@ -287,7 +299,7 @@ def run_queue_lock_fused_async_batch(cfg: PSOConfig, batch: SwarmBatch,
     """
     cfg = cfg.resolved()
     s_cnt, n, d = batch.pos.shape
-    bn = block_n or pick_block_n(n)
+    bn = _resolve_block(n, block_n)
     nb = n // bn
     seeds = batch.seed.astype(jnp.int32)
     its = batch.iteration.astype(jnp.int32)

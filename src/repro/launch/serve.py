@@ -172,9 +172,13 @@ class ServeStats:
         return self.requests / self.dispatches if self.dispatches else 0.0
 
 
-def bucket_size(k: int, max_batch: int = BUCKETS[-1]) -> int:
-    """Smallest bucket >= k (capped): bounds the jit cache per batch_key."""
-    for b in BUCKETS:
+def bucket_size(k: int, max_batch: int = BUCKETS[-1],
+                buckets: Tuple[int, ...] = BUCKETS) -> int:
+    """Smallest bucket >= k (capped): bounds the jit cache per batch_key.
+
+    ``buckets`` defaults to the static ladder; an autotuning server passes
+    a model-tuned ladder instead (``repro.core.autotune.bucket_ladder``)."""
+    for b in buckets:
         if b >= min(k, max_batch):
             return min(b, max_batch)
     return max_batch
@@ -190,11 +194,21 @@ class SolveServer:
     built-in problem at the same solve shape into one heterogeneous batch
     (``lax.switch`` row dispatch); off, grouping falls back to the legacy
     per-problem content-hash keys.
+
+    ``autotune=True`` consults the roofline autotuner
+    (``repro.core.autotune``, model-only: no timed micro-runs on the
+    serving path, but previously measured cache entries win): async
+    requests' ``sync_every`` is rewritten to the tuned value for their
+    shape BEFORE grouping — the tuned interval is part of the batch
+    compile key, so every request at one shape shares one tuned compiled
+    program — and the bucket ladder is re-derived per grouping shape from
+    the cost model (buckets past the point of diminishing per-row returns
+    are dropped, shrinking the jit-cache footprint).
     """
 
     def __init__(self, max_batch: int = 64, backend: str = "jnp",
                  interpret: bool = True, block_n: Optional[int] = None,
-                 coalesce_registry: bool = True):
+                 coalesce_registry: bool = True, autotune: bool = False):
         if backend not in ("jnp", "kernel"):
             raise ValueError(f"unknown backend {backend!r}")
         if max_batch < BUCKETS[0]:
@@ -205,9 +219,35 @@ class SolveServer:
         self.interpret = interpret
         self.block_n = block_n
         self.coalesce_registry = coalesce_registry
+        self.autotune = autotune
         self.stats = ServeStats()
         self._pending: List[Tuple[int, SolveRequest]] = []
         self._ticket = 0
+        self._ladders: Dict[Tuple, Tuple[int, ...]] = {}
+
+    def _tuned_request(self, r: SolveRequest) -> SolveRequest:
+        """Rewrite an async request's publication interval to the tuned
+        value for its shape (no-op for sync variants / autotune off)."""
+        if not self.autotune or r.variant != "async":
+            return r
+        from repro.core.autotune import tuned_sync_every
+        k = tuned_sync_every(r.fitness, r.dim, r.particle_cnt, r.iters,
+                             r.dtype)
+        return dataclasses.replace(r, sync_every=k)
+
+    def _buckets_for(self, r0: SolveRequest) -> Tuple[int, ...]:
+        """The bucket ladder for one grouping shape: static by default,
+        model-tuned (and memoized per shape) when autotuning."""
+        if not self.autotune:
+            return BUCKETS
+        key = (r0.dim, r0.particle_cnt, r0.iters, r0.variant, r0.dtype)
+        if key not in self._ladders:
+            from repro.core.autotune import bucket_ladder
+            self._ladders[key] = bucket_ladder(
+                r0.fitness, r0.dim, r0.particle_cnt, r0.iters,
+                max_batch=self.max_batch, variant=r0.variant,
+                dtype=r0.dtype, min_bucket=_MIN_BUCKET)
+        return self._ladders[key]
 
     def submit(self, req: SolveRequest) -> int:
         """Enqueue a request; returns a ticket resolved by ``flush()``."""
@@ -224,7 +264,8 @@ class SolveServer:
         for lo in range(0, len(reqs), self.max_batch):
             chunk = reqs[lo:lo + self.max_batch]
             k = len(chunk)
-            padded = bucket_size(k, self.max_batch)
+            padded = bucket_size(k, self.max_batch,
+                                 self._buckets_for(chunk[0]))
             seeds = np.array([r.seed for r in chunk]
                              + [chunk[0].seed] * (padded - k), dtype=np.int64)
             r0 = chunk[0]
@@ -292,6 +333,7 @@ class SolveServer:
         """Dispatch all pending requests; returns {ticket: result}."""
         groups: Dict[Tuple, List[Tuple[int, SolveRequest]]] = defaultdict(list)
         for t, r in self._pending:
+            r = self._tuned_request(r)   # tuned sync_every enters group_key
             groups[r.group_key(self.coalesce_registry)].append((t, r))
         self._pending.clear()
         results: Dict[int, SolveResult] = {}
@@ -322,6 +364,8 @@ def main() -> int:
                     help="async variant publication interval")
     ap.add_argument("--no-coalesce", action="store_true",
                     help="legacy per-problem content-hash grouping")
+    ap.add_argument("--autotune", action="store_true",
+                    help="roofline-tuned sync_every + bucket ladder")
     args = ap.parse_args()
     # A mixed workload: four built-in objectives over two solve shapes. With
     # registry coalescing each shape is ONE heterogeneous dispatch; with
@@ -338,7 +382,8 @@ def main() -> int:
             for i, (f, d, n) in ((i, mix[i % len(mix)])
                                  for i in range(args.requests))]
     srv = SolveServer(max_batch=args.max_batch, backend=args.backend,
-                      coalesce_registry=not args.no_coalesce)
+                      coalesce_registry=not args.no_coalesce,
+                      autotune=args.autotune)
     t0 = time.time()
     results = srv.solve_all(reqs)
     dt = time.time() - t0

@@ -1,7 +1,30 @@
+"""Roofline analysis: analytic FLOP/byte accounting for cost-model-driven
+scheduling.
+
+Two layers:
+
+* ``analysis`` — generic machinery: hardware ceilings (``PEAK_FLOPS``,
+  ``HBM_BW``, ``ICI_BW``), the ``Roofline`` report, XLA
+  ``cost_analysis`` normalization, and parameter/flop counting for the
+  model zoo.
+* ``pso_cost`` — the PSO-specific cost model that powers the schedule
+  autotuner (``repro.core.autotune``): per-iteration flop/byte counts
+  for every engine variant (fitness op mix per built-in, gbest
+  publication traffic as a function of ``sync_every``, adapter
+  const-operand streaming, Pallas grid-step/dispatch overheads) and a
+  ``Calibration`` fitted from committed benchmark history. This is what
+  ``Method(schedule="auto")`` ranks candidate schedules with before the
+  measured fallback.
+"""
 from .analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, analyze,
                        collective_bytes, count_active_params, count_params,
                        model_flops)
+from .pso_cost import (DEFAULT_CALIBRATION, Calibration, IterCost, OpMix,
+                       estimate_us_per_iter, fit_calibration,
+                       fitness_op_mix, iteration_cost)
 
 __all__ = ["Roofline", "analyze", "collective_bytes", "count_params",
            "count_active_params", "model_flops", "PEAK_FLOPS", "HBM_BW",
-           "ICI_BW"]
+           "ICI_BW", "Calibration", "DEFAULT_CALIBRATION", "IterCost",
+           "OpMix", "estimate_us_per_iter", "fit_calibration",
+           "fitness_op_mix", "iteration_cost"]

@@ -1,0 +1,458 @@
+"""Analytic per-iteration FLOP/byte cost model for the PSO engines.
+
+The cuPSO result is a *schedule* result: the enhanced async variant wins
+by trading gbest memory traffic against synchronization frequency, and the
+crossover depends on (problem, d, n, block_n, sync_every) — not just on the
+algorithm. This module prices one PSO iteration for every engine the repo
+ships, so ``repro.core.autotune`` can rank candidate schedules analytically
+before (optionally) measuring the top few:
+
+  * jnp engines   — ``reduction | queue | queue_lock | async`` from
+    ``repro.core.pso`` (vmap-batched by ``batch=S``).
+  * Pallas kernels — ``queue`` (per-iteration ``queue_step_call``),
+    ``queue_lock`` (fused, grid ``(iters, blocks)``) and ``async``
+    (block-resident, grid ``(blocks, iters/sync_every)``), plus their
+    swarm-major batched forms — the five pallas_calls in
+    ``repro.kernels.pso_step``.
+
+Three ingredient families, all inspectable (golden-filed in
+tests/test_roofline.py):
+
+1. **Fitness op mix** — ``FITNESS_MIX`` counts the adds/muls and
+   transcendentals each built-in objective (``repro.core.fitness``) spends
+   per particle-dimension, as written in its jnp source (one reduction add
+   per dimension is folded in). Custom ``Problem`` objectives fall back to
+   XLA's own accounting (``cost_analysis`` of the jitted ``max_fn`` at a
+   reference shape, cached per content hash).
+
+2. **Traffic** — per-iteration HBM bytes per engine, with the gbest
+   *publication* traffic split out (``IterCost.gbest_bytes``): the async
+   variants' pull+publish per block per chunk divides by ``sync_every`` —
+   the paper's knob — while the synchronous variants pay every iteration.
+   Adapter-lowered custom objectives additionally stream their hoisted
+   const operands (``lower_statics``) once per grid step
+   (``IterCost.const_bytes``).
+
+3. **Scheduling overhead** — Pallas grid steps and host dispatches per
+   iteration. Interpret-mode grid steps cost ~tens of microseconds (the
+   committed ``async_sweep`` history fits ~27us/step on CPU), which is why
+   the model sends this container to the jnp engines; a TPU fit shrinks
+   the constant and flips the choice.
+
+``Calibration`` turns counts into microseconds. ``fit_calibration`` fits
+the machine constants from a committed ``benchmarks/BENCH_pso.json``
+(table3 records calibrate the jnp throughput terms, async_sweep the
+per-grid-step constant), refusing to mix hosts when the artifact records
+``cpu_count``/``device_kind`` metadata that disagrees with this process.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+# Keep this module import-light: jax only loads for custom-objective
+# accounting and bound lowering, so the tuner can price schedules without
+# touching the device.
+
+DTYPE_BYTES = {"float32": 4, "float64": 8, "bfloat16": 2, "float16": 2}
+
+#: Default fraction of iterations on which the swarm best improves at
+#: steady state — the paper's queue-algorithm premise (§4.1: <0.1%; we use
+#: a conservative 2% so early-run behavior is not underpriced).
+RARE_IMPROVE = 0.02
+
+# --- advance (velocity/position update) op counts, per particle-dim -----
+#: w*vel + c1*r1*(pbest-pos) + c2*r2*(gbest-pos): 5 mul + 4 add/sub.
+VEL_FLOPS = 9
+#: clip(vel) (2) + pos += vel (1) + clip(pos) (2).
+POS_FLOPS = 5
+#: pbest_pos where-select per element.
+PBEST_SELECT_FLOPS = 1
+#: per-particle pbest compare + fit select.
+PBEST_FLOPS_PER_PARTICLE = 2
+#: uniform draws per particle-dim per iteration (r1, r2).
+RNG_DRAWS = 2
+#: lax.switch bookkeeping per kernel grid step for hetero dispatch.
+HETERO_SWITCH_FLOPS = 16.0
+
+
+@dataclasses.dataclass(frozen=True)
+class OpMix:
+    """Arithmetic mix of one objective evaluation.
+
+    ``flops_per_dim`` counts adds/muls per particle per dimension (the sum
+    reduction's add is folded in); ``transc_per_dim`` counts cos/exp/sqrt
+    the same way; the ``*_per_particle`` fields hold the reduction tail
+    (negation, scalar combines) paid once per particle.
+    """
+
+    flops_per_dim: float
+    flops_per_particle: float = 0.0
+    transc_per_dim: float = 0.0
+    transc_per_particle: float = 0.0
+
+    def flops(self, d: int, n: int) -> float:
+        return n * (d * self.flops_per_dim + self.flops_per_particle)
+
+    def transcendentals(self, d: int, n: int) -> float:
+        return n * (d * self.transc_per_dim + self.transc_per_particle)
+
+
+#: Op mix of the six built-ins, counted from their ``repro.core.fitness``
+#: source expressions (golden-filed in tests/test_roofline.py):
+#:   cubic      x³-0.8x²-1000x+8000 : 5 mul + 3 add + sum  -> 9/dim
+#:   sphere     -Σx²                : 1 mul + sum          -> 2/dim + negate
+#:   rosenbrock Σ100(b-a²)²+(1-a)²  : 4 mul + 4 add        -> 8/dim + negate
+#:   griewank   Σx²/4000 - Πcos(x/√i) + 1 : 3 flops + div + cos per dim
+#:   rastrigin  10d + Σ(x²-10cos2πx): 4 flops + cos-scale per dim
+#:   ackley     -20e^(-.2√(Σx²/d)) - e^(Σcos2πx/d) + 20 + e
+FITNESS_MIX: Dict[str, OpMix] = {
+    "cubic": OpMix(9.0, 0.0),
+    "sphere": OpMix(2.0, 1.0),
+    "rosenbrock": OpMix(8.0, 1.0),
+    "griewank": OpMix(4.0, 4.0, 1.0),
+    "rastrigin": OpMix(5.0, 3.0, 1.0),
+    "ackley": OpMix(4.0, 7.0, 1.0, 3.0),
+}
+
+_MEASURE_N = 64  # reference particle count for custom-objective accounting
+
+
+@functools.lru_cache(maxsize=256)
+def _measured_mix(cache_key, fn_id, d: int, dtype: str) -> OpMix:
+    # fn_id keeps the lru entry alive only while the Problem object is;
+    # cache_key (content hash) is the real identity.
+    del fn_id
+    prob = _MIX_PROBES.pop(cache_key)
+    import jax
+
+    compiled = jax.jit(prob.max_fn).lower(
+        jax.ShapeDtypeStruct((_MEASURE_N, d), np.dtype(dtype))).compile()
+    from .analysis import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
+    flops = float(cost.get("flops", 0.0))
+    transc = float(cost.get("transcendentals", 0.0))
+    per_elem = flops / (_MEASURE_N * d)
+    return OpMix(flops_per_dim=per_elem,
+                 transc_per_dim=transc / (_MEASURE_N * d))
+
+
+_MIX_PROBES: Dict[Tuple, object] = {}
+
+
+def fitness_op_mix(problem, d: int, dtype: str = "float32") -> OpMix:
+    """Op mix for a registered name or ``Problem`` (measured fallback)."""
+    from repro.core.problem import resolve_problem
+
+    prob = resolve_problem(problem)
+    mix = FITNESS_MIX.get(prob.name)
+    if mix is not None and not prob.constrained:
+        return mix
+    if mix is not None and prob.constrained:
+        # penalty mode evaluates the violation alongside the objective;
+        # approximate the combined cost as 2x the raw mix.
+        return OpMix(2 * mix.flops_per_dim, 2 * mix.flops_per_particle + 4,
+                     2 * mix.transc_per_dim, 2 * mix.transc_per_particle)
+    key = prob.cache_key()
+    _MIX_PROBES.setdefault((key, d, dtype), prob)
+    probe = _MIX_PROBES  # keep name for clarity
+    try:
+        return _measured_mix((key, d, dtype), id(prob), d, dtype)
+    finally:
+        probe.pop((key, d, dtype), None)
+
+
+def const_operand_bytes(problem, d: int, block_n: int,
+                        dtype: str = "float32") -> float:
+    """Bytes of hoisted const operands an adapter-lowered kernel streams
+    per grid step (``repro.kernels.pso_step.lower_statics``): the custom
+    objective's captured arrays plus any per-dimension bound columns.
+    Hand-tuned built-ins lower const-free and return 0."""
+    from repro.core.problem import resolve_problem
+    from repro.core.pso import PSOConfig
+
+    prob = resolve_problem(problem)
+    cfg = PSOConfig(dim=d, fitness=prob, dtype=dtype).resolved()
+    from repro.kernels.pso_step import lower_statics, pad_dim
+
+    _, consts = lower_statics(
+        cfg.fitness, d=d, dpad=pad_dim(d), bn=block_n, dtype=cfg.jnp_dtype,
+        min_pos=cfg.min_pos, max_pos=cfg.max_pos, max_v=cfg.max_v)
+    return float(sum(np.asarray(c).nbytes for c in consts))
+
+
+@dataclasses.dataclass(frozen=True)
+class IterCost:
+    """Priced work of ONE PSO iteration (whole batch, all swarms).
+
+    ``gbest_bytes`` (publication traffic) and ``const_bytes`` (adapter
+    const streaming) are *subsets* of ``bytes_hbm``, split out because they
+    are the schedule-sensitive terms: publication divides by ``sync_every``
+    on the async engines, const streaming scales with grid steps."""
+
+    flops: float
+    transcendentals: float
+    bytes_hbm: float
+    gbest_bytes: float
+    const_bytes: float
+    grid_steps: float      # Pallas grid steps per iteration (0 for jnp)
+    dispatches: float      # host dispatches per iteration
+
+
+def _blocks(n: int, block_n: Optional[int], backend: str) -> Tuple[int, int]:
+    from repro.core.blocking import pick_block_n
+
+    bn = block_n or pick_block_n(n, lane=(128 if backend == "kernel" else 1))
+    return bn, max(1, n // bn)
+
+
+def iteration_cost(variant: str, problem, d: int, n: int, *,
+                   dtype: str = "float32", backend: str = "jnp",
+                   block_n: Optional[int] = None, sync_every: int = 8,
+                   batch: int = 1, hetero_table: int = 0,
+                   rare: float = RARE_IMPROVE) -> IterCost:
+    """Price one iteration of ``variant`` on ``backend``.
+
+    ``hetero_table > 0`` marks a heterogeneous multi-problem batch with
+    that many dispatch-table members: the vmapped jnp ``lax.switch``
+    lowers to select_n (every branch evaluated -> fitness cost times the
+    table size), while the kernels run a real conditional (one branch per
+    grid step, plus small switch bookkeeping). ``sync_every`` only shapes
+    the async terms. All counts scale linearly with ``batch``.
+    """
+    if variant not in ("reduction", "queue", "queue_lock", "async"):
+        raise ValueError(f"unknown variant {variant!r}")
+    if backend not in ("jnp", "kernel"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "kernel" and variant == "reduction":
+        raise ValueError("no reduction kernel exists")
+    b = DTYPE_BYTES[dtype]
+    sync_every = max(1, sync_every)
+    mix = fitness_op_mix(problem, d, dtype)
+    bn, nb = _blocks(n, block_n, backend)
+
+    # --- flops ------------------------------------------------------------
+    fit_mult = max(1, hetero_table) if backend == "jnp" else 1
+    fit_flops = fit_mult * mix.flops(d, n)
+    transc = fit_mult * mix.transcendentals(d, n)
+    adv = n * d * (VEL_FLOPS + POS_FLOPS + PBEST_SELECT_FLOPS)
+    pbest = n * PBEST_FLOPS_PER_PARTICLE
+    rng = n * d * RNG_DRAWS  # scaled by Calibration.rng_flops at estimate
+    if variant == "reduction":
+        agg = n + d + 1                      # unconditional argmax + gather
+    elif variant in ("queue", "queue_lock"):
+        agg = 2 * n + rare * (2 * n + d)     # cmp + any; rare argmax+gather
+    else:  # async: per-block argmax every iter, publish every sync_every
+        agg = n + nb * (1 + d) + (nb + d) / sync_every
+    flops = fit_flops + adv + pbest + agg
+    if backend == "kernel" and hetero_table:
+        flops += HETERO_SWITCH_FLOPS * nb
+
+    # --- bytes ------------------------------------------------------------
+    # pos/vel/pbest_pos read+write (6 n d) + materialized r1/r2 (2 n d);
+    # fit/pbest_fit read+write (4 n).
+    state = b * (8 * n * d + 4 * n)
+    consts = (const_operand_bytes(problem, d, bn, dtype)
+              if backend == "kernel" else 0.0)
+    if variant == "reduction":
+        gbest = b * (d + 1) * 2
+    elif variant in ("queue", "queue_lock"):
+        gbest = b * (d + 1) * (1 + rare)
+    else:
+        # pull + predicated publish per block per chunk, plus the per-
+        # iteration block-local best maintenance (read+select per block).
+        gbest = (b * 2 * (d + 1) * nb / sync_every
+                 + b * 2 * (d + 1) * nb)
+    if backend == "kernel" and variant == "async":
+        # block-resident chunks: state traffic amortizes over the chunk.
+        state = state / sync_every
+        const_traffic = consts * nb / sync_every
+    elif backend == "kernel":
+        const_traffic = consts * nb
+    else:
+        const_traffic = 0.0
+    bytes_hbm = state + gbest + const_traffic
+
+    # --- scheduling -------------------------------------------------------
+    if backend == "jnp":
+        grid_steps, dispatches = 0.0, 0.0    # one dispatch per RUN, not iter
+    elif variant == "queue":
+        grid_steps, dispatches = float(nb), 1.0   # per-iteration kernel
+    elif variant == "queue_lock":
+        grid_steps, dispatches = float(nb), 0.0
+    else:
+        grid_steps, dispatches = nb / sync_every, 0.0
+
+    s = max(1, batch)
+    return IterCost(flops=s * flops, transcendentals=s * transc,
+                    bytes_hbm=s * bytes_hbm, gbest_bytes=s * gbest,
+                    const_bytes=s * const_traffic,
+                    grid_steps=s * grid_steps, dispatches=s * dispatches)
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Machine constants that turn an ``IterCost`` into microseconds.
+
+    Defaults describe a mid-range CPU running jit-compiled XLA with Pallas
+    in interpret mode (this container); ``fit_calibration`` replaces them
+    with constants fitted from benchmark history."""
+
+    flops_per_us: float = 1500.0      # effective element-op throughput
+    bytes_per_us: float = 6000.0      # effective stream bandwidth
+    iter_overhead_us: float = 0.35    # fori_loop/bookkeeping per iteration
+    dispatch_us: float = 50.0         # host -> device dispatch
+    grid_step_us: float = 25.0        # per Pallas grid step (interpret!)
+    transcendental_flops: float = 8.0  # one cos/exp ~ this many flops
+    rng_flops: float = 12.0           # one counter-RNG draw, per element
+    source: str = "default"
+
+    def us_per_iter(self, cost: IterCost, rng_elems: float = 0.0) -> float:
+        """Roofline estimate: max(compute, memory) + scheduling terms."""
+        flops = (cost.flops
+                 + cost.transcendentals * self.transcendental_flops
+                 + rng_elems * self.rng_flops)
+        work = max(flops / self.flops_per_us,
+                   cost.bytes_hbm / self.bytes_per_us)
+        return (self.iter_overhead_us + work
+                + cost.grid_steps * self.grid_step_us
+                + cost.dispatches * self.dispatch_us)
+
+
+DEFAULT_CALIBRATION = Calibration()
+
+
+def estimate_us_per_iter(variant: str, problem, d: int, n: int, *,
+                         dtype: str = "float32", backend: str = "jnp",
+                         block_n: Optional[int] = None, sync_every: int = 8,
+                         batch: int = 1, hetero_table: int = 0,
+                         calib: Calibration = DEFAULT_CALIBRATION) -> float:
+    """One-call convenience: ``iteration_cost`` -> microseconds."""
+    cost = iteration_cost(variant, problem, d, n, dtype=dtype,
+                          backend=backend, block_n=block_n,
+                          sync_every=sync_every, batch=batch,
+                          hetero_table=hetero_table)
+    return calib.us_per_iter(cost, rng_elems=batch * n * d * RNG_DRAWS)
+
+
+# --------------------------------------------------------------------------
+# Calibration fitting from benchmark history (BENCH_pso.json).
+# --------------------------------------------------------------------------
+
+def _host_fingerprint() -> Dict[str, object]:
+    import platform
+
+    fp = {"host": os.environ.get("BENCH_HOST_ID") or platform.node(),
+          "cpu_count": os.cpu_count()}
+    try:
+        import jax
+        fp["device_kind"] = jax.devices()[0].device_kind
+    except Exception:
+        fp["device_kind"] = None
+    return fp
+
+
+def hosts_comparable(meta: Dict) -> bool:
+    """True unless the artifact records host metadata that disagrees with
+    this process. Artifacts predating the cpu_count/device_kind fields are
+    treated as unknown-but-usable (the fit is marked unverified)."""
+    fp = _host_fingerprint()
+    for key in ("cpu_count", "device_kind", "host"):
+        if meta.get(key) is not None and fp.get(key) is not None \
+                and meta[key] != fp[key]:
+            return False
+    return True
+
+
+def _fit_jnp_terms(records: Dict[str, Dict]) -> Optional[Tuple[float, float]]:
+    """(flops_per_us, iter_overhead_us) from table3 jnp records (d=1 cubic,
+    flop-bound: the memory term is not separately identifiable there)."""
+    rows = []
+    for name, rec in records.items():
+        parts = name.split("/")
+        if (len(parts) != 3 or parts[0] != "table3"
+                or parts[2] not in ("reduction", "queue", "queue_lock")):
+            continue
+        n = int(parts[1].lstrip("p"))
+        cost = iteration_cost(parts[2], "cubic", 1, n)
+        flops = (cost.flops + RNG_DRAWS * n * 1 *
+                 DEFAULT_CALIBRATION.rng_flops)
+        rows.append((flops, rec["us_per_call"]))
+    if len(rows) < 3:
+        return None
+    a = np.array([[f, 1.0] for f, _ in rows])
+    y = np.array([t for _, t in rows])
+    (inv_f, c), *_ = np.linalg.lstsq(a, y, rcond=None)
+    if inv_f <= 0:
+        return None
+    return 1.0 / inv_f, max(float(c), 0.0)
+
+
+def _fit_grid_step(records: Dict[str, Dict]) -> Optional[float]:
+    """Per-grid-step microseconds from the async_sweep kernel records:
+    us/iter = base + grid_step_us * blocks / sync_every."""
+    rows = []
+    for name, rec in records.items():
+        parts = name.split("/")
+        if (len(parts) != 3 or parts[0] != "async_sweep"
+                or "_b" not in parts[1]):
+            continue
+        try:
+            nb = (int(parts[1].split("_n")[1].split("_b")[0])
+                  // int(parts[1].split("_b")[1]))
+        except (IndexError, ValueError):
+            continue
+        if parts[2] == "sync_kernel":
+            rows.append((float(nb), rec["us_per_call"]))
+        elif parts[2].startswith("sync_every_"):
+            k = int(parts[2].rsplit("_", 1)[1])
+            rows.append((nb / k, rec["us_per_call"]))
+    if len(rows) < 2:
+        return None
+    a = np.array([[g, 1.0] for g, _ in rows])
+    y = np.array([t for _, t in rows])
+    (g, _base), *_ = np.linalg.lstsq(a, y, rcond=None)
+    return float(g) if g > 0 else None
+
+
+def fit_calibration(bench: Union[str, Dict, None]) -> Calibration:
+    """Fit machine constants from a ``BENCH_pso.json`` document or path.
+
+    Returns ``DEFAULT_CALIBRATION`` (source ``"default"``) when the
+    artifact is missing/unreadable, and a host-mismatch default (source
+    names the reason) when the artifact's recorded host fingerprint —
+    ``host``/``cpu_count``/``device_kind`` in the meta — disagrees with
+    this process: model fits must never mix hosts."""
+    if bench is None:
+        return DEFAULT_CALIBRATION
+    if isinstance(bench, str):
+        try:
+            with open(bench) as f:
+                bench = json.load(f)
+        except (OSError, ValueError):
+            return DEFAULT_CALIBRATION
+    meta = bench.get("meta", {})
+    if not hosts_comparable(meta):
+        return dataclasses.replace(
+            DEFAULT_CALIBRATION,
+            source=f"default(host-mismatch:{meta.get('host')})")
+    records = {r["name"]: r for r in bench.get("benchmarks", [])
+               if r.get("us_per_call", 0) > 0}
+    kw = {}
+    jnp_fit = _fit_jnp_terms(records)
+    if jnp_fit is not None:
+        kw["flops_per_us"], kw["iter_overhead_us"] = jnp_fit
+    grid = _fit_grid_step(records)
+    if grid is not None:
+        kw["grid_step_us"] = grid
+    if not kw:
+        return DEFAULT_CALIBRATION
+    verified = all(meta.get(k) is not None
+                   for k in ("cpu_count", "device_kind"))
+    src = "bench-fit" if verified else "bench-fit(unverified-host)"
+    return dataclasses.replace(DEFAULT_CALIBRATION, source=src, **kw)

@@ -33,14 +33,12 @@ SHAPE_SWEEP = [
 @pytest.mark.parametrize("n,expect", [
     (128, 128),        # lane-aligned divisor wins
     (1024, 512),       # largest lane-aligned divisor <= target
-    (131072, 512),
+    (131072, 512),     # 256 blocks: exactly at the degeneracy cap, kept
     (384, 384),        # 384 = 3*128: lane-aligned
     (100, 100),        # no lane-aligned divisor: largest divisor <= target
     (96, 96),
     (7, 7),            # prime <= target: itself
     (33, 33),          # odd composite <= target: itself
-    (1009, 1),         # prime > target: only divisor <= target is 1
-    (2 * 521, 2),      # 1042 = 2*521: largest divisor <= 512 is 2
     (1, 1),
 ])
 def test_pick_block_n(n, expect):
@@ -49,11 +47,40 @@ def test_pick_block_n(n, expect):
     assert n % bn == 0 and bn <= max(512, 1)
 
 
+@pytest.mark.parametrize("n,expect,count", [
+    (1009, 1009, 1),     # prime > target: only small divisor is 1 -> one
+    #                      whole-swarm block, not 1009 single-file blocks
+    (2 * 521, 521, 2),   # 1042: best divisor <= 512 is 2 (521 blocks);
+    #                      the cap overrides the target with 521
+    (3 * 521, 521, 3),   # 1563: best divisor <= 512 is 3 (521 blocks);
+    #                      both prime factors exceed the target
+])
+def test_pick_block_n_degenerate_grid_capped(n, expect, count):
+    from repro.core.blocking import MAX_BLOCK_COUNT
+    with pytest.warns(UserWarning, match="single-file blocks"):
+        bn = ops.pick_block_n(n)
+    assert bn == expect
+    assert n % bn == 0 and n // bn == count <= MAX_BLOCK_COUNT
+    # the jnp fallback's block COUNT inherits the same guard
+    from repro.core.blocking import default_block_count
+    with pytest.warns(UserWarning, match="single-file blocks"):
+        assert default_block_count(n) == count
+
+
 def test_pick_block_n_prefers_lane_alignment_over_size():
     # 640 = 5*128: both 320 (bigger, unaligned) and 128 (aligned) divide;
     # the lane-aligned one must win even though it is smaller... except 640
     # itself is unaligned; largest aligned divisor <= 512 is 128.
     assert ops.pick_block_n(640) == 128
+
+
+def test_explicit_block_n_must_divide():
+    cfg = PSOConfig(dim=2, particle_cnt=128, fitness="cubic").resolved()
+    s = init_swarm(cfg, 0)
+    with pytest.raises(ValueError, match="divisor"):
+        ops.run_queue_lock_fused(cfg, s, iters=1, block_n=100)
+    with pytest.raises(ValueError, match="divisor"):
+        ops.queue_step(cfg, s, block_n=3)
 
 
 @pytest.mark.parametrize("dim,n,bn", SHAPE_SWEEP)

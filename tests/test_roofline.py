@@ -90,3 +90,263 @@ def test_scan_body_counted_once_documented():
     fs = ra.cost_analysis_dict(jax.jit(scan10).lower(x).compile())["flops"]
     # body counted once (+ O(1) loop bookkeeping), NOT 10x:
     assert fs < 1.5 * f1   # piecewise analysis must correct for trips
+
+
+# ==========================================================================
+# pso_cost: the analytic schedule cost model behind the autotuner.
+# Golden files pin the per-iteration flop/byte arithmetic for fixed
+# shapes (a refactor that silently changes a term must fail loudly —
+# the tuner's ranking depends on these numbers); property tests pin the
+# orderings the tuner exploits.
+# ==========================================================================
+import dataclasses
+
+import pytest
+
+from repro.roofline import pso_cost
+from repro.roofline.pso_cost import (DEFAULT_CALIBRATION, FITNESS_MIX,
+                                     OpMix, estimate_us_per_iter,
+                                     fit_calibration, fitness_op_mix,
+                                     iteration_cost)
+
+
+def test_golden_fitness_mix_table():
+    """The op-mix table matches the fitness source expressions."""
+    assert FITNESS_MIX["cubic"] == OpMix(9.0, 0.0)
+    assert FITNESS_MIX["sphere"] == OpMix(2.0, 1.0)
+    assert FITNESS_MIX["rosenbrock"] == OpMix(8.0, 1.0)
+    assert FITNESS_MIX["griewank"] == OpMix(4.0, 4.0, 1.0)
+    assert FITNESS_MIX["rastrigin"] == OpMix(5.0, 3.0, 1.0)
+    assert FITNESS_MIX["ackley"] == OpMix(4.0, 7.0, 1.0, 3.0)
+    # sphere at d=4, n=256: 256 * (4*2 + 1) flops, no transcendentals
+    mix = fitness_op_mix("sphere", 4)
+    assert mix.flops(4, 256) == 256 * 9
+    assert mix.transcendentals(4, 256) == 0
+
+
+def test_golden_reduction_jnp_sphere():
+    """reduction/jnp, sphere, d=4, n=256, f32 — every term by hand."""
+    c = iteration_cost("reduction", "sphere", 4, 256)
+    d, n = 4, 256
+    fit = n * (d * 2 + 1)                       # sphere mix
+    adv = n * d * (9 + 5 + 1)                   # vel + pos + pbest select
+    pbest = n * 2
+    agg = n + d + 1                             # unconditional argmax+gather
+    assert c.flops == fit + adv + pbest + agg
+    assert c.transcendentals == 0
+    assert c.bytes_hbm == 4 * (8 * n * d + 4 * n) + 4 * (d + 1) * 2
+    assert c.gbest_bytes == 4 * (d + 1) * 2
+    assert c.const_bytes == 0 and c.grid_steps == 0 and c.dispatches == 0
+
+
+def test_golden_queue_rare_improvement_term():
+    """queue/jnp aggregation: 2n compare+any every iter, argmax+gather
+    only on the RARE_IMPROVE fraction of iterations."""
+    d, n = 4, 256
+    cq = iteration_cost("queue", "sphere", d, n)
+    cr = iteration_cost("reduction", "sphere", d, n)
+    rare = pso_cost.RARE_IMPROVE
+    agg_q = 2 * n + rare * (2 * n + d)
+    agg_r = n + d + 1
+    assert cq.flops - cr.flops == pytest.approx(agg_q - agg_r)
+    # gbest traffic: (d+1) scalars, written only on the rare improvements
+    assert cq.gbest_bytes == pytest.approx(4 * (d + 1) * (1 + rare))
+
+
+def test_golden_async_jnp_sphere():
+    """async/jnp, d=4, n=256, block_n=64 (4 blocks), sync_every=8."""
+    d, n, bn, k = 4, 256, 64, 8
+    nb = n // bn
+    c = iteration_cost("async", "sphere", d, n, block_n=bn, sync_every=k)
+    base = iteration_cost("reduction", "sphere", d, n)
+    agg = n + nb * (1 + d) + (nb + d) / k
+    agg_r = n + d + 1
+    assert c.flops - (base.flops - agg_r) == pytest.approx(agg)
+    # publication traffic: pull+publish /k, plus per-iter block-local upkeep
+    assert c.gbest_bytes == pytest.approx(
+        4 * 2 * (d + 1) * nb / k + 4 * 2 * (d + 1) * nb)
+    assert c.grid_steps == 0        # jnp engine: no Pallas grid
+
+
+def test_golden_async_kernel_state_amortization():
+    """The block-resident async kernel reads/writes swarm state once per
+    chunk, not per iteration: state bytes divide by sync_every."""
+    d, n, bn, k = 4, 256, 128, 8
+    cj = iteration_cost("async", "sphere", d, n, block_n=bn, sync_every=k,
+                        backend="jnp")
+    ck = iteration_cost("async", "sphere", d, n, block_n=bn, sync_every=k,
+                        backend="kernel")
+    state = 4 * (8 * n * d + 4 * n)
+    assert (cj.bytes_hbm - cj.gbest_bytes) == pytest.approx(state)
+    assert (ck.bytes_hbm - ck.gbest_bytes - ck.const_bytes) == \
+        pytest.approx(state / k)
+    assert ck.grid_steps == pytest.approx((n // bn) / k)
+
+
+def test_golden_queue_kernel_dispatch():
+    """The queue kernel launches once per iteration (nb grid steps + one
+    host dispatch); the fused queue_lock kernel folds iters into the
+    grid so it dispatches once per RUN, not per iteration."""
+    d, n, bn = 2, 256, 128
+    cq = iteration_cost("queue", "sphere", d, n, block_n=bn,
+                        backend="kernel")
+    cf = iteration_cost("queue_lock", "sphere", d, n, block_n=bn,
+                        backend="kernel")
+    assert cq.grid_steps == n // bn and cq.dispatches == 1.0
+    assert cf.grid_steps == n // bn and cf.dispatches == 0.0
+
+
+def test_golden_batch_scaling():
+    a = iteration_cost("queue", "rastrigin", 8, 512, batch=1)
+    b = iteration_cost("queue", "rastrigin", 8, 512, batch=16)
+    for f in ("flops", "transcendentals", "bytes_hbm", "gbest_bytes"):
+        assert getattr(b, f) == pytest.approx(16 * getattr(a, f))
+
+
+def test_golden_hetero_table_pricing():
+    """jnp lax.switch lowers to select_n — every branch evaluated, so
+    fitness flops scale with the table size; kernels run a real
+    conditional and pay only per-grid-step switch bookkeeping."""
+    d, n, t = 4, 256, 6
+    base = iteration_cost("queue", "sphere", d, n)
+    het = iteration_cost("queue", "sphere", d, n, hetero_table=t)
+    mix = fitness_op_mix("sphere", d)
+    assert het.flops - base.flops == pytest.approx((t - 1) * mix.flops(d, n))
+    kb = iteration_cost("queue_lock", "sphere", d, n, block_n=128,
+                        backend="kernel")
+    kh = iteration_cost("queue_lock", "sphere", d, n, block_n=128,
+                        backend="kernel", hetero_table=t)
+    assert kh.flops - kb.flops == pytest.approx(
+        pso_cost.HETERO_SWITCH_FLOPS * (n // 128))
+
+
+def test_constrained_problem_doubles_mix():
+    """A constrained variant of a TABLED problem prices at ~2x the raw
+    mix (objective + violation evaluated together)."""
+    import dataclasses as dc
+    from repro.core.constraints import (ConstraintSet, project_simplex,
+                                        simplex_constraints)
+    from repro.core.problem import resolve_problem
+    plain_prob = resolve_problem("sphere")
+    con_prob = dc.replace(plain_prob, constraints=ConstraintSet(
+        constraints=simplex_constraints(), mode="projection",
+        projection=project_simplex))
+    plain = fitness_op_mix(plain_prob, 4)
+    con = fitness_op_mix(con_prob, 4)
+    assert con.flops_per_dim == 2 * plain.flops_per_dim
+    assert con.flops_per_particle == 2 * plain.flops_per_particle + 4
+    # the registered constrained built-ins (custom fn, not in the table)
+    # fall through to measured accounting without error
+    assert fitness_op_mix("sphere_simplex", 4).flops_per_dim > 0
+
+
+def test_builtin_lowering_is_const_free():
+    assert pso_cost.const_operand_bytes("sphere", 4, 128) == 0.0
+    assert pso_cost.const_operand_bytes("rastrigin", 8, 128) == 0.0
+
+
+@pytest.mark.parametrize("variant", ["reduction", "queue", "queue_lock",
+                                     "async"])
+def test_cost_monotone_in_n(variant):
+    """More particles never cost less — in flops, bytes, and estimated
+    microseconds (for the default calibration)."""
+    prev = None
+    for n in (64, 128, 256, 512, 1024, 2048):
+        c = iteration_cost(variant, "rastrigin", 8, n, sync_every=8)
+        us = estimate_us_per_iter(variant, "rastrigin", 8, n, sync_every=8)
+        if prev is not None:
+            assert c.flops > prev[0].flops
+            assert c.bytes_hbm > prev[0].bytes_hbm
+            assert us > prev[1]
+        prev = (c, us)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "kernel"])
+def test_async_gbest_traffic_decreasing_in_sync_every(backend):
+    """The paper's knob: sparser publication must strictly shrink the
+    gbest term (and never increase total traffic)."""
+    d, n, bn = 8, 512, 128
+    prev = None
+    for k in (1, 2, 4, 8, 16, 32, 64):
+        c = iteration_cost("async", "sphere", d, n, block_n=bn,
+                           sync_every=k, backend=backend)
+        if prev is not None:
+            assert c.gbest_bytes < prev.gbest_bytes
+            assert c.bytes_hbm <= prev.bytes_hbm
+        prev = c
+
+
+def test_async_estimate_decreasing_in_sync_every_kernel():
+    """On the kernel backend sync_every also amortizes grid steps and
+    state traffic, so the full microsecond estimate must decrease too."""
+    prev = None
+    for k in (1, 4, 16, 64):
+        us = estimate_us_per_iter("async", "sphere", 8, 512, block_n=128,
+                                  sync_every=k, backend="kernel")
+        if prev is not None:
+            assert us < prev
+        prev = us
+
+
+def test_transcendental_problems_cost_more():
+    """ackley (cos+exp+sqrt) must price above sphere at equal shape."""
+    assert (estimate_us_per_iter("queue", "ackley", 8, 512)
+            > estimate_us_per_iter("queue", "sphere", 8, 512))
+
+
+def test_cost_model_invalid_inputs_raise():
+    with pytest.raises(ValueError, match="variant"):
+        iteration_cost("bogus", "sphere", 4, 64)
+    with pytest.raises(ValueError, match="backend"):
+        iteration_cost("queue", "sphere", 4, 64, backend="gpu")
+    with pytest.raises(ValueError, match="reduction kernel"):
+        iteration_cost("reduction", "sphere", 4, 64, backend="kernel")
+
+
+def _synthetic_bench(meta=None):
+    """A BENCH doc generated FROM a known calibration — the fit must
+    recover its constants."""
+    true = dataclasses.replace(DEFAULT_CALIBRATION, flops_per_us=2000.0,
+                               iter_overhead_us=1.0, grid_step_us=30.0)
+    recs = []
+    for n in (64, 256, 1024):
+        for v in ("reduction", "queue", "queue_lock"):
+            cost = iteration_cost(v, "cubic", 1, n)
+            us = true.us_per_iter(cost, rng_elems=n * pso_cost.RNG_DRAWS)
+            recs.append({"name": f"table3/p{n}/{v}", "us_per_call": us})
+    for k in (1, 4, 16, 64):
+        nb = 1024 // 256
+        recs.append({"name": f"async_sweep/d1_n1024_b256/sync_every_{k}",
+                     "us_per_call": 100.0 + true.grid_step_us * nb / k})
+    return {"meta": meta or {}, "benchmarks": recs}, true
+
+
+def test_fit_calibration_recovers_synthetic_constants():
+    doc, true = _synthetic_bench()
+    fit = fit_calibration(doc)
+    assert fit.source.startswith("bench-fit")
+    assert fit.flops_per_us == pytest.approx(true.flops_per_us, rel=0.25)
+    assert fit.grid_step_us == pytest.approx(true.grid_step_us, rel=0.05)
+
+
+def test_fit_calibration_refuses_host_mismatch():
+    doc, _ = _synthetic_bench(meta={"host": "other-box", "cpu_count": 9999})
+    fit = fit_calibration(doc)
+    assert "host-mismatch" in fit.source
+    assert fit.flops_per_us == DEFAULT_CALIBRATION.flops_per_us
+    assert fit.grid_step_us == DEFAULT_CALIBRATION.grid_step_us
+
+
+def test_fit_calibration_missing_artifact_is_default():
+    assert fit_calibration(None) == DEFAULT_CALIBRATION
+    assert fit_calibration("/nonexistent/BENCH.json") == DEFAULT_CALIBRATION
+
+
+def test_fit_calibration_committed_baseline():
+    """The committed baseline must always yield a usable calibration
+    (fitted when host-comparable, default otherwise — never a crash)."""
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "BENCH_pso.json")
+    fit = fit_calibration(path)
+    assert fit.flops_per_us > 0 and fit.grid_step_us > 0
