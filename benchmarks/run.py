@@ -11,6 +11,12 @@
             built-in objectives at one solve shape, heterogeneous batches
             (launch/serve.py, lax.switch row dispatch) vs the legacy
             content-hash grouping — batch fill, dispatches, flush p50/p99.
+  serving — continuous-batching scheduler (repro.serving) vs the flush
+            server on ONE mixed trace (six built-ins x four iteration
+            budgets, staggered waves): requests/s, e2e p50/p99, batch
+            fill per leg (benchmarks/loadgen.py; steady-state pass).
+            Warn-only in compare.py until it accumulates noise-floor
+            history.
   async_sweep — the enhanced (asynchronous) queue-lock: per-iteration cost
             and solution quality vs the synchronous kernel across
             sync_every ∈ {1, 4, 16, 64}. Fewer chunk boundaries = fewer
@@ -363,6 +369,38 @@ def mixed_traffic(smoke=False) -> None:
              **kv)
 
 
+def serving_bench(smoke=False) -> None:
+    """Continuous batching vs flush batching on the mixed-traffic stream
+    (benchmarks/loadgen.py): six built-ins crossed with four iteration
+    budgets at one solve shape, arriving in waves. Flush group keys
+    include ``iters`` so every wave fragments into padded groups; the
+    continuous scheduler's lane keys drop ``iters`` and admit at chunk
+    boundaries, so the same trace rides one full lane. Both legs are
+    steady-state (warmup pass untimed) and the per-request results are
+    cross-checked bitwise (``gbest_agree`` must be True). The continuous
+    leg's ``speedup_vs_flush`` (steady-state requests/s ratio) is the
+    serving claim; ``batch_fill`` is the mechanism."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import loadgen
+    rep = loadgen.run_loadgen(smoke=smoke)
+    tag = "serving/mixed_d6_n64"
+    for leg in ("flush", "continuous"):
+        s = rep[leg]
+        kv = dict(requests_per_s=s["requests_per_s"], p50_us=s["p50_us"],
+                  p99_us=s["p99_us"], batch_fill=s["batch_fill"],
+                  dispatches=s["dispatches"],
+                  first_pass_s=rep[f"{leg}_first_pass_s"])
+        if leg == "continuous":
+            kv["speedup_vs_flush"] = rep["speedup_vs_flush"]
+            kv["gbest_agree"] = rep["gbest_agree"]
+            sc = rep["continuous_snapshot"]["counters"]
+            kv["row_swaps"] = int(sc.get("row_swaps", 0))
+            kv["tail_ejections"] = int(sc.get("tail_ejections", 0))
+        emit(f"{tag}/{leg}", s["us_per_request"], **kv)
+
+
 def custom_objective(smoke=False) -> None:
     """Problem-API adapter overhead: the generic d-major adapter
     (``repro.kernels.pso_step.dmajor_adapter`` — transpose + sliced user
@@ -528,6 +566,7 @@ def main() -> None:
     table5(args.smoke)
     multi_swarm(args.smoke)
     mixed_traffic(args.smoke)
+    serving_bench(args.smoke)
     async_sweep(args.smoke)
     islands_ring(args.smoke)
     custom_objective(args.smoke)

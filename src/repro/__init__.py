@@ -10,6 +10,9 @@ Top-level surface (lazily imported so ``import repro`` stays cheap):
     repro.Problem / repro.register_problem    # first-class objectives
     repro.get_problem / repro.list_problems
     repro.PSOConfig
+    repro.solve_stream(requests, ...)         # continuous-batching serving
+    repro.ContinuousScheduler / repro.CompileCache / repro.ServingMetrics
+    repro.SolveServer / repro.SolveRequest    # flush-batching front end
 
 See ``repro.api`` and ``repro.core.problem`` for the full documentation,
 ``examples/quickstart.py`` and ``examples/custom_objective.py`` for usage.
@@ -21,7 +24,13 @@ import importlib
 _EXPORTS = {
     "solve": "repro.api",
     "solve_many": "repro.api",
+    "solve_stream": "repro.api",
     "best": "repro.api",
+    "ContinuousScheduler": "repro.serving",
+    "CompileCache": "repro.serving",
+    "ServingMetrics": "repro.serving",
+    "SolveServer": "repro.launch.serve",
+    "SolveRequest": "repro.launch.serve",
     "Method": "repro.api",
     "Result": "repro.api",
     "History": "repro.api",

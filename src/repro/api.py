@@ -640,6 +640,37 @@ def _run_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int, m: Method,
                     n_blocks=_jnp_async_blocks(m, batch.pos.shape[1]))
 
 
+def solve_stream(requests: Sequence, *, lane_width: int = 8,
+                 coalesce_registry: bool = True,
+                 compile_cache=None, autotune: bool = False,
+                 metrics=None) -> List:
+    """Streaming facade: run a stream of independent solve requests
+    through the continuous-batching scheduler
+    (``repro.serving.ContinuousScheduler``).
+
+    ``requests`` are ``repro.launch.serve.SolveRequest``s (or dicts of
+    their fields). Async-variant requests ride persistent batched lanes
+    with chunk-boundary admission — every result bit-identical to the
+    standalone ``solve`` of its request — while synchronous-variant and
+    sub-chunk requests fall back to standalone solves. ``compile_cache``
+    (a ``repro.serving.CompileCache``, or a directory path for one) makes
+    the lane programs persist across process restarts; ``metrics`` (a
+    ``repro.serving.ServingMetrics``) collects latency spans and
+    batch-fill counters. Returns one ``SolveResult`` per request, in
+    request order.
+    """
+    from repro.launch.serve import SolveRequest
+    from repro.serving import CompileCache, ContinuousScheduler
+    if isinstance(compile_cache, str):
+        compile_cache = CompileCache(path=compile_cache)
+    reqs = [r if isinstance(r, SolveRequest) else SolveRequest(**r)
+            for r in requests]
+    sched = ContinuousScheduler(
+        lane_width=lane_width, coalesce_registry=coalesce_registry,
+        compile_cache=compile_cache, autotune=autotune, metrics=metrics)
+    return sched.run(reqs)
+
+
 def best(results: Sequence[Result]) -> Result:
     """The best Result of a batch, by the Deb feasibility rule: a feasible
     result beats any infeasible one; feasible results compare on fitness

@@ -410,6 +410,45 @@ def tuned_sync_every(problem, d: int, n: int, iters: int,
     return s.sync_every
 
 
+def seed_priors(cache: Optional[AutotuneCache] = None,
+                problems: Optional[Sequence] = None,
+                dims: Sequence[int] = (1, 8),
+                particles: Sequence[int] = (256, 1024),
+                iters: int = 1024, dtype: str = "float32") -> int:
+    """Pre-populate the cache with model-ranked schedules for the
+    registry x a small shape grid (per-problem autotune priors).
+
+    A fresh replica resolving ``schedule="auto"`` for an unseen shape
+    pays timed micro-runs; a CI-built priors file (uploaded as an
+    artifact and installed via ``REPRO_AUTOTUNE_CACHE``) means the first
+    solve of every common shape starts from the cost model's best pick
+    instead — bounded latency, no measurement. Already-cached keys
+    (including genuinely measured optima) are never overwritten. Returns
+    the number of entries seeded.
+    """
+    from repro.core.fitness import BUILTIN_PROBLEMS
+
+    cache = cache or default_cache()
+    if problems is None:
+        problems = [p.name for p in BUILTIN_PROBLEMS]
+    scope = "kernel" if _kernel_ok() else "jnp"
+    seeded = 0
+    for prob in problems:
+        for d in dims:
+            for n in particles:
+                key = shape_key(prob, d, n, iters, dtype)
+                if cache.get(scope, key) is not None:
+                    continue
+                cands = candidate_schedules(d, n, iters,
+                                            kernel_ok=_kernel_ok())
+                ranked = rank_schedules(cands, prob, d, n, iters,
+                                        dtype=dtype)
+                if ranked:
+                    cache.put(scope, key, ranked[0])
+                    seeded += 1
+    return seeded
+
+
 def bucket_ladder(problem, d: int, n: int, iters: int, *,
                   max_batch: int = 128, variant: str = "queue",
                   dtype: str = "float32", min_bucket: int = 4,
@@ -439,3 +478,37 @@ def bucket_ladder(problem, d: int, n: int, iters: int, *,
         prev_row = row
         b *= 2
     return tuple(ladder)
+
+
+def _main(argv=None) -> int:
+    """CLI: ``python -m repro.core.autotune --seed-priors`` (the CI step
+    that builds the priors artifact)."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Autotune cache utilities (schedule priors)")
+    ap.add_argument("--seed-priors", action="store_true",
+                    help="seed model-ranked schedules for the registry "
+                         "x shape grid")
+    ap.add_argument("--cache", default=None,
+                    help="cache file (default: REPRO_AUTOTUNE_CACHE or "
+                         "~/.cache/repro/autotune.json)")
+    ap.add_argument("--dims", default="1,8")
+    ap.add_argument("--particles", default="256,1024")
+    ap.add_argument("--iters", type=int, default=1024)
+    args = ap.parse_args(argv)
+    cache = AutotuneCache(args.cache) if args.cache else default_cache()
+    if args.seed_priors:
+        n = seed_priors(
+            cache=cache,
+            dims=tuple(int(x) for x in args.dims.split(",")),
+            particles=tuple(int(x) for x in args.particles.split(",")),
+            iters=args.iters)
+        print(f"seeded {n} schedule prior(s) into {cache.path}")
+        return 0
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

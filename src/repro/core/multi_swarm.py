@@ -240,8 +240,40 @@ def stack_states(states: Sequence[SwarmState]) -> SwarmBatch:
     return SwarmBatch(*stacked)
 
 
+def set_batch_row(batch: SwarmBatch, s: int, state: SwarmState) -> SwarmBatch:
+    """Splice a standalone swarm into row ``s`` (the scheduler's admission
+    primitive: a continuous-batching lane swaps a finished row for a fresh
+    request without restarting the program).
+
+    The batch's pytree structure is fixed by the in-flight compiled
+    program, so ``state`` must match it field-for-field — in particular an
+    async batch carries ``lbest_*`` and the admitted row must too (build
+    it with ``repro.core.pso.init_swarm_async``).
+    """
+    if (batch.lbest_fit is None) != (state.lbest_fit is None):
+        raise ValueError(
+            "row/batch lbest structure mismatch: splice rows built with "
+            "init_swarm_async into async batches (and bare init_swarm "
+            "rows into synchronous ones)")
+    return SwarmBatch(*jax.tree_util.tree_map(
+        lambda a, v: a.at[s].set(v), tuple(batch), tuple(state)))
+
+
+def set_problem_row(rows: ProblemRows, s: int, one: ProblemRows
+                    ) -> ProblemRows:
+    """Splice row 0 of a 1-row descriptor set into row ``s`` of ``rows``.
+
+    The hetero half of lane admission: descriptors are TRACED operands of
+    the batched program (only the table is static), so retargeting a lane
+    slot at a different registered problem recompiles nothing.
+    """
+    return ProblemRows(*jax.tree_util.tree_map(
+        lambda a, v: a.at[s].set(v[0]), tuple(rows), tuple(one)))
+
+
 @partial(jax.jit,
-         static_argnames=("cfg", "iters", "sync_every", "phase", "table"))
+         static_argnames=("cfg", "iters", "sync_every", "phase", "table",
+                          "n_blocks"))
 def _run_many_async(cfg: PSOConfig, batch: SwarmBatch, iters: int,
                     sync_every: int,
                     coeffs: Optional[Tuple[Array, Array, Array]] = None,

@@ -477,6 +477,28 @@ def init_async_locals(state: SwarmState, n_blocks: int
     return jnp.asarray(lbp), jnp.asarray(lbf)
 
 
+def init_swarm_async(cfg: PSOConfig, seed: int,
+                     n_blocks: Optional[int] = None,
+                     hetero=None) -> SwarmState:
+    """``init_swarm`` with the async block-local bests already attached.
+
+    The serving scheduler's admission seam: a freshly admitted request's
+    row must splice into an in-flight batch whose pytree structure carries
+    ``lbest_pos``/``lbest_fit`` (the batch was built for the async
+    variant), so the fresh row needs the buffers too. Seeding them with
+    ``init_async_locals`` at iteration 0 is exactly what ``run_async``
+    would have done on its first call for a bare ``init_swarm`` state —
+    the carried-locals resume path and the fresh-seed path coincide at
+    phase 0 — so an admitted row is bit-identical to the standalone
+    solve of its request (tests/test_serving.py).
+    """
+    cfg = cfg.resolved()
+    s = init_swarm(cfg, seed, hetero=hetero)
+    nb = n_blocks or _default_async_blocks(s.pos.shape[0])
+    lbp, lbf = init_async_locals(s, nb)
+    return s._replace(lbest_pos=lbp, lbest_fit=lbf)
+
+
 def step_async(cfg: PSOConfig, s: SwarmState,
                local: Tuple[Array, Array],
                coeffs: Optional[Tuple[Array, Array, Array]] = None,

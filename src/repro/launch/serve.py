@@ -1,50 +1,52 @@
-"""Request-batching front end for PSO solves (the serving layer over
-``repro.core.multi_swarm``).
+"""Flush-batching front end for PSO solves: collect a queue generation,
+group by compile key, dispatch padded batches.
 
-A serving deployment receives a stream of independent solve requests —
-different seeds, and different problems. One device dispatch per request
-wastes the accelerator (the cuPSO paper's own motivation, one level up:
-amortize fixed costs across work). This module groups pending requests by
-their *compilation key*, pads each group to a bucketed batch size (so
-the jit cache stays small: one compiled program per (key, bucket), not per
-request count), and routes every group through a single ``solve_many`` — or
-through the batched fused Pallas kernels (``run_queue_lock_fused_batch`` /
-``run_queue_lock_fused_async_batch``) for the ``queue_lock`` and ``async``
-variants with ``backend="kernel"``.
+This is the simpler of the repo's two serving front ends. ``SolveServer``
+collects submitted requests until ``flush()``, groups them by their
+*compilation key*, pads each group to a bucketed batch size (one
+compiled program per (key, bucket), not per request count), and routes
+every group through a single ``solve_many`` — or through the batched
+fused Pallas kernels for the ``queue_lock``/``async`` variants with
+``backend="kernel"``. It is the right tool for OFFLINE batches: all
+requests known up front, throughput over latency, no arrivals mid-solve.
 
-Grouping is two-tier. Requests whose problem is one of the registered
-built-ins (``hetero_fid`` matches it against the dispatch table) coalesce
-into a single HETEROGENEOUS batch keyed only on the shape of the solve —
-``(dim, particle_cnt, iters, variant, dtype, sync_every)`` — regardless of
-which built-in each row asks for: the engines dispatch each row's
-objective and box bounds by ``lax.switch`` inside one compiled program
-(``solve_many(problems=...)`` / the hetero fused kernels), so a mixed
-sphere/rastrigin/ackley trace rides one dispatch instead of one per
-objective. Row results lean on the ``gbest_fit``/``gbest_pos`` fields,
-which are the validated bit-exactness surface of the heterogeneous
-engines (see ``repro.core.pso``'s convention notes for the envelope).
+For STREAMING traffic — staggered arrivals, mixed iteration budgets,
+tail-latency targets — use the continuous-batching scheduler built on
+top of this module's request/result types:
+``repro.serving.ContinuousScheduler`` keeps persistent batched async
+lanes running and admits new requests at chunk boundaries instead of
+waiting for a whole flush to return (architecture, admission invariants
+and the restart story: docs/serving.md). The two front ends share
+``SolveRequest``/``SolveResult``/``ServingMetrics``, and
+``benchmarks/loadgen.py`` races them on the same trace.
+
+Grouping here is two-tier. Requests whose problem is one of the
+registered built-ins (``hetero_fid``) coalesce into a single
+HETEROGENEOUS batch keyed only on the shape of the solve — ``(dim,
+particle_cnt, iters, variant, dtype, sync_every)`` — with each row's
+objective and box bounds dispatched by ``lax.switch`` inside one
+compiled program, so a mixed sphere/rastrigin/ackley trace rides one
+dispatch. Row results lean on ``gbest_fit``/``gbest_pos``, the validated
+bit-exactness surface of the heterogeneous engines.
 ``coalesce_registry=False`` restores the legacy content-hash-only keys.
+Custom ``Problem``s keep the second tier: their grouping key hashes the
+problem's CONTENT (``Problem.cache_key``), never its name or identity,
+so distinct objectives never share a batch and re-submitted identical
+ones still do. Constrained problems ride the same machinery, and
+``SolveResult.feasible``/``violation`` report Deb-rule feasibility.
 
-``fitness`` may also be a first-class ``repro.core.problem.Problem``
-(user-defined objective; the kernel backend lowers it automatically — see
-``repro.kernels.pso_step.dmajor_adapter``). Custom problems keep the
-second tier: their grouping key hashes the problem's CONTENT (objective
-bytecode + consts + bounds + sense + constraint set,
-``Problem.cache_key``), never its name or object identity, so two
-distinct custom objectives can never share a batch even if both are
-called "mine" — and re-submitted identical objectives still batch
-together. Constrained problems
-(``repro.core.constraints``) ride the same machinery: two requests whose
-constraint sets differ (mode, weight, constraint code) get distinct batch
-keys, and ``SolveResult.feasible``/``violation`` report the Deb-rule
-feasibility of each answer. Penalty-ramp schedules are a facade feature
-(``repro.solve``/``solve_many``); serving runs the static weight.
+Failure isolation: a group whose solve raises no longer poisons the
+whole flush — the other groups return normally and the offending
+tickets resolve to error results (``SolveResult.error`` set,
+``SolveResult.ok`` False; see ``flush``).
 
     PYTHONPATH=src python -m repro.launch.serve --requests 24 --iters 200
 
 Padding rows reuse the group's first seed and are dropped before results
 are returned; they cost compute but never correctness. ``ServeStats``
-reports how much padding each flush paid.
+reports how much padding each flush paid, and an attached
+``repro.serving.ServingMetrics`` additionally records per-request
+queue/solve latency spans and dispatch counters for the JSON snapshot.
 """
 from __future__ import annotations
 
@@ -136,11 +138,21 @@ class SolveResult:
     gbest_fit: float         # canonical (maximized) fitness
     gbest_pos: np.ndarray
     batch_size: int          # padded batch the request rode in
+    error: Optional[BaseException] = None  # set when the solve raised
+
+    @property
+    def ok(self) -> bool:
+        """False when this request's group failed: ``error`` holds the
+        exception and the ``gbest_*`` fields are meaningless."""
+        return self.error is None
 
     @property
     def objective(self) -> float:
         """The objective value in the problem's OWN sense (a sense="min"
         problem reports the minimized value)."""
+        if not self.ok:
+            raise RuntimeError(
+                f"request failed: {self.error!r}") from self.error
         return float(resolve_problem(self.request.fitness)
                      .user_value(self.gbest_fit))
 
@@ -164,12 +176,18 @@ class ServeStats:
     dispatches: int = 0      # batched device programs launched
     padded_rows: int = 0     # wasted swarm slots from bucket padding
     hetero_dispatches: int = 0  # of which: heterogeneous (mixed-problem)
+    failed: int = 0          # requests whose group's solve raised
 
     @property
     def batch_fill(self) -> float:
         """Mean real (non-padding) rows per dispatch — the coalescing
         payoff metric: higher means fewer, fuller device programs."""
         return self.requests / self.dispatches if self.dispatches else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["batch_fill"] = self.batch_fill
+        return d
 
 
 def bucket_size(k: int, max_batch: int = BUCKETS[-1],
@@ -208,7 +226,8 @@ class SolveServer:
 
     def __init__(self, max_batch: int = 64, backend: str = "jnp",
                  interpret: bool = True, block_n: Optional[int] = None,
-                 coalesce_registry: bool = True, autotune: bool = False):
+                 coalesce_registry: bool = True, autotune: bool = False,
+                 metrics=None):
         if backend not in ("jnp", "kernel"):
             raise ValueError(f"unknown backend {backend!r}")
         if max_batch < BUCKETS[0]:
@@ -221,7 +240,8 @@ class SolveServer:
         self.coalesce_registry = coalesce_registry
         self.autotune = autotune
         self.stats = ServeStats()
-        self._pending: List[Tuple[int, SolveRequest]] = []
+        self.metrics = metrics   # optional repro.serving.ServingMetrics
+        self._pending: List[Tuple[int, SolveRequest, float]] = []
         self._ticket = 0
         self._ladders: Dict[Tuple, Tuple[int, ...]] = {}
 
@@ -253,7 +273,9 @@ class SolveServer:
         """Enqueue a request; returns a ticket resolved by ``flush()``."""
         t = self._ticket
         self._ticket += 1
-        self._pending.append((t, req))
+        self._pending.append((t, req, time.perf_counter()))
+        if self.metrics is not None:
+            self.metrics.inc("submitted")
         return t
 
     def _solve_group(self, reqs: List[SolveRequest]) -> List[SolveResult]:
@@ -286,6 +308,10 @@ class SolveServer:
             self.stats.dispatches += 1
             self.stats.hetero_dispatches += int(hetero)
             self.stats.padded_rows += padded - k
+            if self.metrics is not None:
+                self.metrics.inc("dispatches")
+                self.metrics.inc("lane_slots", padded)
+                self.metrics.inc("lane_active_slots", k)
             out.extend(SolveResult(request=r, gbest_fit=float(gf[i]),
                                    gbest_pos=gp[i], batch_size=padded)
                        for i, r in enumerate(chunk))
@@ -330,18 +356,44 @@ class SolveServer:
                           sync_every=r0.sync_every, problems=probs)
 
     def flush(self) -> Dict[int, SolveResult]:
-        """Dispatch all pending requests; returns {ticket: result}."""
-        groups: Dict[Tuple, List[Tuple[int, SolveRequest]]] = defaultdict(list)
-        for t, r in self._pending:
+        """Dispatch all pending requests; returns {ticket: result}.
+
+        Failures are isolated per GROUP (the dispatch unit): if one
+        group's solve raises, its tickets resolve to error results
+        (``SolveResult.error`` set, ``ok`` False) and every other group
+        returns normally — a poisoned custom objective cannot take down
+        unrelated requests sharing the flush.
+        """
+        groups: Dict[Tuple, List[Tuple[int, SolveRequest, float]]] = \
+            defaultdict(list)
+        for t, r, ts in self._pending:
             r = self._tuned_request(r)   # tuned sync_every enters group_key
-            groups[r.group_key(self.coalesce_registry)].append((t, r))
+            groups[r.group_key(self.coalesce_registry)].append((t, r, ts))
         self._pending.clear()
         results: Dict[int, SolveResult] = {}
         for _, members in sorted(groups.items(), key=lambda kv: repr(kv[0])):
-            tickets = [t for t, _ in members]
-            solved = self._solve_group([r for _, r in members])
+            tickets = [t for t, _, _ in members]
+            t0 = time.perf_counter()
+            try:
+                solved = self._solve_group([r for _, r, _ in members])
+            except Exception as e:
+                self.stats.failed += len(members)
+                if self.metrics is not None:
+                    self.metrics.inc("failed", len(members))
+                results.update(
+                    (t, SolveResult(request=r, gbest_fit=float("nan"),
+                                    gbest_pos=np.full((r.dim,), np.nan),
+                                    batch_size=0, error=e))
+                    for t, r, _ in members)
+                continue
             results.update(zip(tickets, solved))
             self.stats.requests += len(members)
+            if self.metrics is not None:
+                now = time.perf_counter()
+                self.metrics.inc("completed", len(members))
+                self.metrics.observe("dispatch_us", (now - t0) * 1e6)
+                for _, _, ts in members:
+                    self.metrics.observe("e2e_us", (now - ts) * 1e6)
         return results
 
     def solve_all(self, requests: Sequence[SolveRequest]) -> List[SolveResult]:
@@ -349,6 +401,14 @@ class SolveServer:
         tickets = [self.submit(r) for r in requests]
         resolved = self.flush()
         return [resolved[t] for t in tickets]
+
+    def snapshot(self) -> dict:
+        """ServeStats (+ the attached metrics sink, if any) as JSON-able
+        dict — the flush-server half of the serving observability story."""
+        doc = {"stats": self.stats.as_dict()}
+        if self.metrics is not None:
+            doc["metrics"] = self.metrics.snapshot()
+        return doc
 
 
 def main() -> int:

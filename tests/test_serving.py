@@ -1,0 +1,271 @@
+"""The serving subsystem: continuous-batching scheduler, persistent AOT
+compile cache, metrics — plus the flush server's failure isolation and
+bucket-ladder edge cases (repro.serving, repro.launch.serve).
+
+The load-bearing assertions:
+
+* every result out of ``ContinuousScheduler`` is BITWISE identical to
+  the standalone ``solve(cfg, seed, T, "async", sync_every)`` of that
+  request — across heterogeneous lanes, row swaps mid-flight, tail
+  ejections (sub-chunk remainders) and sub-chunk standalone fallbacks;
+* a second ``CompileCache`` over the same directory serves the same
+  trace from deserialized ``jax.export`` blobs with ``trace_events ==
+  0`` (the zero-recompile restart story) and bitwise-equal results.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.pso import PSOConfig, solve
+from repro.launch.serve import SolveRequest
+
+NAMES = ("cubic", "sphere", "rastrigin", "ackley", "griewank", "rosenbrock")
+# The hetero engines' validated bit-exactness shape (tests/test_hetero.py):
+# at tiny shapes XLA:CPU fuses the switch-dispatched fitness a few ulp
+# differently from the standalone program, so the bitwise contract is
+# pinned where the engine pins it.
+DIM, N, SE = 10, 128, 8
+
+
+def _req(k, iters, fitness=None, variant="async"):
+    return SolveRequest(dim=DIM, particle_cnt=N,
+                        fitness=fitness or NAMES[k % len(NAMES)],
+                        seed=k, iters=iters, variant=variant, sync_every=SE)
+
+
+def _standalone(r):
+    cfg = PSOConfig(dim=r.dim, particle_cnt=r.particle_cnt,
+                    fitness=r.fitness, dtype=r.dtype)
+    return solve(cfg, r.seed, r.iters, r.variant, r.sync_every)
+
+
+def _assert_bit_exact(results, reqs):
+    for res, r in zip(results, reqs):
+        st = _standalone(r)
+        assert res.ok
+        assert res.gbest_fit == float(st.gbest_fit), (r.fitness, r.iters)
+        np.testing.assert_array_equal(res.gbest_pos,
+                                      np.asarray(st.gbest_pos))
+
+
+# -- the tentpole: chunk-boundary admission, bit-exact ---------------------
+
+def test_scheduler_bit_exact_vs_standalone_mixed_trace():
+    """11 mixed requests through one hetero lane of width 8: multiples of
+    sync_every (pure lane rides), a non-multiple (tail ejection), a
+    sub-chunk budget (standalone fallback), and more requests than slots
+    (row swaps at chunk boundaries). Every answer must be bitwise equal
+    to its standalone solve."""
+    from repro.serving import ContinuousScheduler
+    reqs = [_req(k, iters) for k, iters in
+            enumerate((16, 8, 24, 16, 8, 16, 24, 8, 16))]
+    reqs.append(_req(9, 20))      # 2 chunks + remainder 4 -> ejection
+    reqs.append(_req(10, 4))      # < sync_every -> standalone
+    sched = ContinuousScheduler(lane_width=8)
+    results = sched.run(reqs)
+    _assert_bit_exact(results, reqs)
+    m = sched.metrics
+    assert m.get("completed") == len(reqs)
+    assert m.get("row_swaps") >= 1        # a freed slot was re-admitted
+    assert m.get("tail_ejections") == 1
+    assert m.get("standalone_solves") == 1
+    assert 0.0 < m.batch_fill <= 1.0
+    snap = sched.snapshot()
+    assert snap["lanes"] and snap["lanes"][0]["active"] == 0
+
+
+def test_scheduler_sync_variant_runs_standalone():
+    """Synchronous variants have no chunk boundary to preempt at: they
+    bypass the lanes entirely and still come back exact."""
+    from repro.serving import ContinuousScheduler
+    reqs = [_req(0, 12, variant="queue"), _req(1, 16)]
+    sched = ContinuousScheduler()
+    results = sched.run(reqs)
+    _assert_bit_exact(results, reqs)
+    assert sched.metrics.get("standalone_solves") == 1
+
+
+def test_scheduler_homogeneous_lane_for_custom_problem():
+    """A custom Problem is not hetero-eligible: it gets its own
+    content-keyed lane, same bit-exactness contract."""
+    import jax.numpy as jnp
+
+    from repro.core.problem import Problem
+    from repro.serving import ContinuousScheduler
+    prob = Problem(name="serving_quad",
+                   fn=lambda x: -jnp.sum((x - 1.0) ** 2, axis=-1),
+                   lo=-5.0, hi=5.0)
+    reqs = [_req(k, 16, fitness=prob) for k in range(3)]
+    results = ContinuousScheduler(lane_width=8).run(reqs)
+    _assert_bit_exact(results, reqs)
+
+
+# -- the restart story: persistent AOT compile cache -----------------------
+
+def test_compile_cache_restart_zero_retrace_bit_exact(tmp_path):
+    """Process A traces + exports the lane program; 'process' B (a fresh
+    CompileCache over the same directory — empty memo, so resolution goes
+    through the serialized blob) prewarms and serves the same trace with
+    ZERO trace events and bitwise-equal results."""
+    from repro.serving import CompileCache, ContinuousScheduler
+    reqs = [_req(k, 16) for k in range(4)]
+
+    cold = CompileCache(str(tmp_path))
+    a = ContinuousScheduler(lane_width=8, compile_cache=cold).run(reqs)
+    assert cold.aot_misses == 1 and cold.trace_events == 1
+
+    warm = CompileCache(str(tmp_path))
+    assert warm.prewarm() == 1
+    sched = ContinuousScheduler(lane_width=8, compile_cache=warm)
+    b = sched.run(reqs)
+    assert warm.aot_hits == 1 and warm.aot_misses == 0
+    assert warm.trace_events == 0          # the acceptance criterion
+    for ra, rb in zip(a, b):
+        assert ra.gbest_fit == rb.gbest_fit
+        np.testing.assert_array_equal(ra.gbest_pos, rb.gbest_pos)
+    _assert_bit_exact(b, reqs)
+    assert sched.snapshot()["compile_cache"]["trace_events"] == 0
+
+
+def test_compile_cache_memory_only_dedup():
+    """No path, no env: the cache still memoizes within the process."""
+    import jax.numpy as jnp
+
+    from repro.serving import CompileCache
+    cc = CompileCache(path="")
+    calls = []
+
+    def build(x):
+        calls.append(1)
+        return x * 2.0
+    spec = jnp.ones((3,))
+    f1 = cc.get("k", build, spec)
+    f2 = cc.get("k", build, spec)
+    assert f1 is f2
+    assert cc.aot_misses == 1 and cc.aot_hits == 1
+    assert cc.trace_events == 1 and len(calls) == 1
+    np.testing.assert_allclose(np.asarray(f1(spec)), 2.0 * np.ones((3,)))
+
+
+def test_compile_cache_manifest_fingerprint_mismatch(tmp_path):
+    """A manifest from another jax/backend is ignored: the cache rebuilds
+    rather than replaying an incompatible blob."""
+    import json
+    import os
+
+    from repro.serving import CompileCache
+    os.makedirs(tmp_path, exist_ok=True)
+    with open(tmp_path / "manifest.json", "w") as f:
+        json.dump({"fingerprint": {"jax": "0.0.0", "backend": "vaporware"},
+                   "entries": {"deadbeef": {"key": "k", "file": "x.jaxexport",
+                                            "bytes": 1}}}, f)
+    cc = CompileCache(str(tmp_path))
+    assert cc.prewarm() == 0               # incompatible manifest dropped
+
+
+def test_solve_stream_facade(tmp_path):
+    """repro.solve_stream: dict requests + a directory path for the
+    compile cache, results in submit order."""
+    import repro
+    reqs = [dict(dim=DIM, particle_cnt=N, fitness=NAMES[k], seed=k,
+                 iters=16, variant="async", sync_every=SE)
+            for k in range(3)]
+    results = repro.solve_stream(reqs, compile_cache=str(tmp_path))
+    _assert_bit_exact(results, [SolveRequest(**r) for r in reqs])
+
+
+# -- metrics ---------------------------------------------------------------
+
+def test_latency_stat_percentiles_and_reservoir():
+    from repro.serving import LatencyStat
+    st = LatencyStat(cap=8)
+    for v in (10.0, 20.0, 30.0, 40.0):
+        st.add(v)
+    assert st.mean_us == 25.0
+    assert st.p50_us == 30.0               # nearest-rank over 4 samples
+    assert st.p99_us == 40.0
+    for v in range(100):                   # wrap the reservoir
+        st.add(float(v))
+    assert st.count == 104
+    assert len(st._samples) == 8
+    snap = st.snapshot()
+    assert snap["count"] == 104 and snap["p99_us"] <= 99.0
+
+
+def test_serving_metrics_snapshot_and_fill():
+    from repro.serving import ServingMetrics
+    m = ServingMetrics()
+    assert m.batch_fill == 0.0             # no dispatched slots yet
+    m.inc("lane_slots", 16)
+    m.inc("lane_active_slots", 12)
+    m.observe("e2e_us", 100.0)
+    snap = m.snapshot()
+    assert snap["batch_fill"] == 0.75
+    assert snap["spans"]["e2e_us"]["count"] == 1
+    m2 = ServingMetrics()
+    m2.merge_from(m)
+    assert m2.batch_fill == 0.75
+
+
+# -- satellites: flush-server hardening ------------------------------------
+
+def test_flush_partial_failure_isolated():
+    """A poisoned custom objective fails ITS group only: other groups in
+    the same flush return normally, the offending tickets carry the
+    error, and ``objective`` refuses to report garbage."""
+    from repro.core.problem import Problem
+    from repro.launch.serve import SolveServer
+
+    def poison(x):
+        raise RuntimeError("poisoned objective")
+
+    bad = Problem(name="serving_poison", fn=poison, lo=-1.0, hi=1.0)
+    good = [_req(k, 16, variant="queue") for k in range(2)]
+    reqs = [good[0], _req(2, 16, fitness=bad, variant="queue"), good[1]]
+    srv = SolveServer()
+    results = srv.solve_all(reqs)
+    assert not results[1].ok
+    assert isinstance(results[1].error, RuntimeError)
+    with pytest.raises(RuntimeError, match="request failed"):
+        results[1].objective
+    for res, r in ((results[0], good[0]), (results[2], good[1])):
+        assert res.ok
+        st = _standalone(r)
+        assert res.gbest_fit == float(st.gbest_fit)
+    assert srv.stats.failed == 1
+    assert srv.stats.requests == 2         # only the successful ones
+
+
+def test_serve_stats_batch_fill_zero_flushes():
+    from repro.launch.serve import ServeStats
+    s = ServeStats()
+    assert s.batch_fill == 0.0             # no dispatches: no div-by-zero
+    d = s.as_dict()
+    assert d["batch_fill"] == 0.0 and d["failed"] == 0
+
+
+def test_bucket_size_edges():
+    from repro.launch.serve import BUCKETS, _MIN_BUCKET, bucket_size
+    assert bucket_size(1) == _MIN_BUCKET   # below the smallest rung
+    assert bucket_size(_MIN_BUCKET) == _MIN_BUCKET
+    assert bucket_size(5) == 8             # rounds up to the next rung
+    assert bucket_size(BUCKETS[-1]) == BUCKETS[-1]
+    assert bucket_size(10 ** 6) == BUCKETS[-1]    # capped at the top
+    # max_batch below a ladder rung caps the pick
+    assert bucket_size(100, max_batch=16) == 16
+    assert bucket_size(3, max_batch=4) == 4
+    # a custom (autotune-pruned) ladder is honored
+    assert bucket_size(5, max_batch=64, buckets=(4, 32)) == 32
+    assert bucket_size(40, max_batch=64, buckets=(4, 32)) == 64
+
+
+def test_buckets_for_autotune_ladder_memoized():
+    from repro.launch.serve import _MIN_BUCKET, SolveServer
+    srv = SolveServer(max_batch=16, autotune=True)
+    r = _req(0, 32, variant="queue")
+    ladder = srv._buckets_for(r)
+    assert ladder and ladder[0] >= _MIN_BUCKET
+    assert all(b <= 16 for b in ladder)
+    assert sorted(ladder) == list(ladder)
+    assert srv._buckets_for(r) is ladder   # memoized per shape
