@@ -35,6 +35,11 @@
             block_n, sync_every) vs the fixed default schedule per suite
             shape, plus the measured-optima cache-hit check. Warn-only in
             compare.py until it accumulates noise-floor history.
+  portfolio — update-rule portfolio: solution quality at EQUAL WALL-CLOCK
+            across the registered rules (pso / sso / lowcost) on one
+            landscape — per-rule us/iter plus final gbest when each rule
+            spends the default rule's time budget. Warn-only in
+            compare.py until it accumulates noise-floor history.
   lm_bench— LM substrate micro-bench (tokens/s on the smoke configs).
 
 Cross-PR trend: ``compare.py OLD.json NEW.json`` diffs two artifacts
@@ -532,6 +537,44 @@ def autotune_bench(smoke=False) -> None:
              source=tuned.source, cache_hit=bool(hit.source == "cache"))
 
 
+def portfolio(smoke=False) -> None:
+    """Update-rule portfolio: quality at equal wall-clock.
+
+    Rules trade per-iteration cost against per-iteration progress (sso
+    has no velocity chain, lowcost drops the stochastic multiplies), so
+    comparing them at equal ITERATION counts is the wrong frame for a
+    serving deployment. This suite times each registered rule's us/iter
+    on the jnp queue-lock engine, then reruns each rule with the
+    iteration count that fits the DEFAULT rule's wall-clock budget —
+    ``gbest_fit`` is the quality-at-equal-time column and
+    ``gbest_gap_vs_pso`` the portfolio signal (positive = the canonical
+    rule is ahead at this budget on this landscape)."""
+    from repro.core import PSOConfig, init_swarm, run
+    from repro.core.update_rules import rule_names
+    dim, particles = 8, 512
+    base_iters = 60 if smoke else 300
+    rules = rule_names()
+    cfgs = {r: PSOConfig(dim=dim, particle_cnt=particles,
+                         fitness="rastrigin", update_rule=r).resolved()
+            for r in rules}
+    s0 = {r: init_swarm(cfgs[r], 0) for r in rules}
+    t = {r: _time(lambda r=r: jax.block_until_ready(
+        run(cfgs[r], s0[r], base_iters, "queue_lock").gbest_fit))
+        for r in rules}
+    budget = t["pso"]                     # the default rule's wall-clock
+    tag = f"portfolio/rastrigin_d{dim}_n{particles}"
+    quality = {}
+    iters_at = {}
+    for r in rules:
+        iters_at[r] = max(1, int(round(base_iters * budget / t[r])))
+        quality[r] = float(jax.block_until_ready(
+            run(cfgs[r], s0[r], iters_at[r], "queue_lock").gbest_fit))
+    for r in rules:
+        emit(f"{tag}/{r}", 1e6 * t[r] / base_iters,
+             iters_at_budget=iters_at[r], gbest_fit=quality[r],
+             gbest_gap_vs_pso=quality["pso"] - quality[r])
+
+
 def lm_bench() -> None:
     """LM substrate: smoke-config train-step tokens/s per arch family."""
     from repro.configs import get_arch
@@ -572,6 +615,7 @@ def main() -> None:
     custom_objective(args.smoke)
     constrained(args.smoke)
     autotune_bench(args.smoke)
+    portfolio(args.smoke)
     if not args.smoke:
         lm_bench()
     if args.out:

@@ -52,6 +52,7 @@ from repro.core.multi_swarm import (SwarmBatch, batch_row, init_batch,
 from repro.core.problem import Problem, resolve_problem
 from repro.core.pso import (ASYNC_SYNC_EVERY, PSOConfig, SwarmState,
                             VARIANTS, init_swarm, run, run_with_history)
+from repro.core.update_rules import (TOPOLOGIES, resolve_rule, rule_names)
 
 _KERNEL_VARIANTS = ("queue_lock", "async")
 
@@ -104,6 +105,10 @@ class Method:
     record_history: bool = False          # Result.history: gbest per sync
     # point (jnp single-swarm engines only — see run_with_history)
     schedule: str = "fixed"               # fixed | auto (roofline autotuner)
+    rule: str = "pso"                     # per-particle update rule
+    # (repro.core.update_rules: pso | sso | lowcost | custom registrations)
+    topology: str = "gbest"               # async block-neighborhood pull
+    # (gbest star | ring | vonneumann — repro.core.topology)
 
     def __post_init__(self):
         if self.schedule not in ("fixed", "auto"):
@@ -121,8 +126,25 @@ class Method:
                 f"unknown backend {self.backend!r}; one of auto|jnp|kernel")
         if self.backend == "kernel" and self.variant not in _KERNEL_VARIANTS:
             raise ValueError(
-                f"backend='kernel' implements {_KERNEL_VARIANTS}, not "
-                f"{self.variant!r}")
+                f"backend='kernel' implements the kernel-eligible variants "
+                f"{_KERNEL_VARIANTS}, not {self.variant!r}; use "
+                f"backend='jnp'/'auto' for the other members of {VARIANTS}")
+        r = resolve_rule(self.rule)       # raises listing rule_names()
+        if self.backend == "kernel" and not r.kernel_eligible:
+            eligible = tuple(n for n in rule_names()
+                             if resolve_rule(n).kernel_eligible)
+            raise ValueError(
+                f"update rule {r.name!r} is not kernel-eligible; "
+                f"kernel-eligible rules: {eligible} — use backend='jnp'")
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(
+                f"unknown topology {self.topology!r}; one of {TOPOLOGIES}")
+        if self.topology != "gbest" and self.variant != "async":
+            raise ValueError(
+                f"topology={self.topology!r} generalizes the async "
+                f"variant's block-local pull; variant={self.variant!r} has "
+                f"no block-local bests — use variant='async' (lbest "
+                f"topologies: {TOPOLOGIES[1:]})")
         if self.islands < 0 or self.exchange_interval < 1:
             raise ValueError(
                 f"islands={self.islands} must be >= 0 and "
@@ -190,7 +212,7 @@ class Method:
         return resolve_schedule(
             problem, d, n, iters, dtype=dtype, batch=batch,
             hetero_table=hetero_table, record_history=self.record_history,
-            measure=measure, kernel_ok=kernel_ok)
+            measure=measure, kernel_ok=kernel_ok, rule=self.rule)
 
     def resolve_interpret(self) -> bool:
         if self.interpret is not None:
@@ -277,7 +299,10 @@ def _effective_method(m: Method, problem, cfg: PSOConfig, iters: int,
     s = m.resolve_schedule(problem, cfg.dim, cfg.particle_cnt, iters,
                            dtype=cfg.dtype, batch=batch,
                            hetero_table=hetero_table)
-    return dataclasses.replace(m, variant=s.variant, backend=s.backend,
+    # lbest topologies only exist on the async variant's block-local
+    # machinery — the tuner may not migrate such a request off async
+    variant = s.variant if m.topology == "gbest" else m.variant
+    return dataclasses.replace(m, variant=variant, backend=s.backend,
                                block_n=s.block_n, sync_every=s.sync_every,
                                schedule="fixed")
 
@@ -292,10 +317,11 @@ def _jnp_async_blocks(m: Method, n: int) -> Optional[int]:
 
 def _make_method(method: Optional[Method], variant, backend, sync_every,
                  block_n, interpret, record_history=None,
-                 schedule=None) -> Method:
+                 schedule=None, rule=None, topology=None) -> Method:
     explicit = dict(variant=variant, backend=backend, sync_every=sync_every,
                     block_n=block_n, interpret=interpret,
-                    record_history=record_history, schedule=schedule)
+                    record_history=record_history, schedule=schedule,
+                    rule=rule, topology=topology)
     given = {k: v for k, v in explicit.items() if v is not None}
     if method is not None:
         if given:
@@ -307,11 +333,14 @@ def _make_method(method: Optional[Method], variant, backend, sync_every,
 
 
 def _make_config(problem: Problem, dim, particles, w, c1, c2, dtype,
-                 min_pos, max_pos, max_v) -> PSOConfig:
+                 min_pos, max_pos, max_v, m: Optional[Method] = None
+                 ) -> PSOConfig:
     if dim is None:
         dim = problem.ndim or 1
     kw = dict(dim=dim, particle_cnt=particles, fitness=problem, dtype=dtype,
               min_pos=min_pos, max_pos=max_pos, max_v=max_v)
+    if m is not None:
+        kw.update(update_rule=m.rule, topology=m.topology)
     for k, v in (("w", w), ("c1", c1), ("c2", c2)):
         if v is not None:
             kw[k] = v
@@ -329,7 +358,9 @@ def solve(problem: Union[str, Problem], *,
           c2: Optional[float] = None, dtype: str = "float32",
           min_pos=None, max_pos=None, max_v=None,
           record_history: Optional[bool] = None,
-          schedule: Optional[str] = None) -> Result:
+          schedule: Optional[str] = None,
+          rule: Optional[str] = None,
+          topology: Optional[str] = None) -> Result:
     """Solve ``problem`` with ``particles`` particles for ``iters``
     iterations. Either pass a full ``method=Method(...)`` or the loose
     ``variant=``/``backend=``/... kwargs (not both). ``dim`` defaults to
@@ -339,9 +370,9 @@ def solve(problem: Union[str, Problem], *,
     """
     prob = resolve_problem(problem)
     m = _make_method(method, variant, backend, sync_every, block_n,
-                     interpret, record_history, schedule)
+                     interpret, record_history, schedule, rule, topology)
     cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
-                       min_pos, max_pos, max_v)
+                       min_pos, max_pos, max_v, m)
     m = _effective_method(m, prob, cfg, iters)
     if m.islands:
         state = _run_islands(prob, cfg, seed, iters, m)
@@ -503,7 +534,9 @@ def solve_many(problem: Union[str, Problem, None] = None,
                w: Optional[float] = None, c1: Optional[float] = None,
                c2: Optional[float] = None, dtype: str = "float32",
                min_pos=None, max_pos=None, max_v=None,
-               schedule: Optional[str] = None) -> List[Result]:
+               schedule: Optional[str] = None,
+               rule: Optional[str] = None,
+               topology: Optional[str] = None) -> List[Result]:
     """Batched facade: one independent solve per entry of ``seeds``, all in
     ONE device program (vmapped jnp engine, or the batched fused/async
     Pallas kernels for ``backend="kernel"``). Row ``s`` is bit-identical to
@@ -522,7 +555,8 @@ def solve_many(problem: Union[str, Problem, None] = None,
     envelope).
     """
     m = _make_method(method, variant, backend, sync_every, block_n,
-                     interpret, schedule=schedule)
+                     interpret, schedule=schedule, rule=rule,
+                     topology=topology)
     if m.islands:
         raise ValueError("islands shard ONE swarm over devices; use solve()"
                          " — solve_many batches independent swarms instead")
@@ -539,7 +573,7 @@ def solve_many(problem: Union[str, Problem, None] = None,
                                   min_pos, max_pos, max_v)
     prob = resolve_problem(problem)
     cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
-                       min_pos, max_pos, max_v)
+                       min_pos, max_pos, max_v, m)
     m = _effective_method(m, prob, cfg, iters, batch=len(seeds))
     batch = init_batch(cfg, np.asarray(seeds, dtype=np.int64))
     batch, _ = _ramp_loop(
@@ -566,7 +600,8 @@ def _solve_many_hetero(problems, seeds, m: Method, dim, particles, iters,
     # objectives, and a fixed value lets every mix share one compiled
     # program. Bounds stay unset — the core validates that.
     kw = dict(dim=dim if dim is not None else 1, particle_cnt=particles,
-              fitness="cubic", dtype=dtype)
+              fitness="cubic", dtype=dtype,
+              update_rule=m.rule, topology=m.topology)
     for key, v in (("w", w), ("c1", c1), ("c2", c2)):
         if v is not None:
             kw[key] = v

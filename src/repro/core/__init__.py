@@ -16,10 +16,11 @@ from .multi_swarm import (MIN_VALIDATED_SWARMS, SwarmBatch, batch_row,
                           best_of_batch, init_batch, run_many, solve_many,
                           stack_states)
 from .serial import SerialSwarm, run_serial_fast
-from .topology import (best_of_swarms, init_multi_swarm, run_multi_swarm,
-                       run_ring, step_ring)
+from .topology import block_neighbor_best, grid_dims
 from .tuner import (PSO_COEFF_DIMS, PSOTuner, SearchDim, TunerResult,
                     make_solve_many_fitness)
+from .update_rules import (TOPOLOGIES, UPDATE_RULES, UpdateRule,
+                           resolve_rule, rule_names)
 
 __all__ = [
     "FITNESS_FNS", "FITNESS_IDS", "DEFAULT_BOUNDS", "BUILTIN_PROBLEMS",
@@ -36,8 +37,9 @@ __all__ = [
     "SwarmBatch", "init_batch", "batch_row", "stack_states", "run_many",
     "solve_many", "best_of_batch", "MIN_VALIDATED_SWARMS",
     "SerialSwarm", "run_serial_fast",
-    "run_ring", "step_ring", "init_multi_swarm", "run_multi_swarm",
-    "best_of_swarms",
+    "block_neighbor_best", "grid_dims",
+    "UpdateRule", "UPDATE_RULES", "TOPOLOGIES", "resolve_rule",
+    "rule_names",
     "PSOTuner", "SearchDim", "TunerResult", "PSO_COEFF_DIMS",
     "make_solve_many_fitness",
 ]

@@ -87,10 +87,12 @@ def _kernel_ok() -> bool:
 
 
 def shape_key(problem, d: int, n: int, iters: int, dtype: str,
-              batch: int = 1, hetero_table: int = 0) -> str:
+              batch: int = 1, hetero_table: int = 0,
+              rule: str = "pso") -> str:
     """Stable cache key for one solve shape. ``iters`` is bucketed to its
     power-of-two ceiling — schedule choice is insensitive to small iter
-    differences, and unbucketed keys would fragment the cache."""
+    differences, and unbucketed keys would fragment the cache. The update
+    rule is part of the shape: its op mix moves the compute roofline."""
     from repro.core.problem import resolve_problem
 
     it = 1
@@ -100,7 +102,8 @@ def shape_key(problem, d: int, n: int, iters: int, dtype: str,
     pid = prob.name if not prob.constrained else f"{prob.name}+c"
     if not FITNESS_NAMED(prob):
         pid = f"custom:{hash(prob.cache_key()) & 0xffffffff:x}"
-    return f"{pid}|d{d}|n{n}|i{it}|{dtype}|b{batch}|h{hetero_table}"
+    return (f"{pid}|d{d}|n{n}|i{it}|{dtype}|b{batch}|h{hetero_table}"
+            f"|r{rule}")
 
 
 def FITNESS_NAMED(prob) -> bool:
@@ -257,7 +260,8 @@ def _bench_baseline_path() -> Optional[str]:
 
 def rank_schedules(cands: Sequence[Schedule], problem, d: int, n: int,
                    iters: int, dtype: str = "float32", batch: int = 1,
-                   hetero_table: int = 0, calib=None) -> List[Schedule]:
+                   hetero_table: int = 0, rule: str = "pso",
+                   calib=None) -> List[Schedule]:
     """Model-rank candidates (ascending predicted us/iter). Candidates the
     model cannot price (e.g. a block size the kernel would reject) are
     dropped."""
@@ -276,7 +280,7 @@ def rank_schedules(cands: Sequence[Schedule], problem, d: int, n: int,
         us = pso_cost.estimate_us_per_iter(
             s.variant, problem, d, n, dtype=dtype, backend=s.backend,
             block_n=s.block_n, sync_every=s.sync_every, batch=batch,
-            hetero_table=hetero_table, calib=calib)
+            hetero_table=hetero_table, rule=rule, calib=calib)
         ranked.append(s.replace(source="model", predicted_us=us))
     ranked.sort(key=lambda s: s.predicted_us)
     return ranked
@@ -285,7 +289,8 @@ def rank_schedules(cands: Sequence[Schedule], problem, d: int, n: int,
 def measure_schedule(sched: Schedule, problem, d: int, n: int,
                      dtype: str = "float32", seed: int = 0,
                      iters: int = MEASURE_ITERS,
-                     repeats: int = MEASURE_REPEATS) -> float:
+                     repeats: int = MEASURE_REPEATS,
+                     rule: str = "pso") -> float:
     """Time a micro-run of ``sched`` (us per iteration, best of
     ``repeats`` after a compile warmup). Goes straight at the engine
     entry points — never back through the facade, so measurement cannot
@@ -295,7 +300,7 @@ def measure_schedule(sched: Schedule, problem, d: int, n: int,
 
     prob = resolve_problem(problem)
     cfg = PSOConfig(dim=d, particle_cnt=n, fitness=prob,
-                    dtype=dtype).resolved()
+                    dtype=dtype, update_rule=rule).resolved()
     state = init_swarm(cfg, seed)
 
     if sched.backend == "kernel":
@@ -335,7 +340,8 @@ def resolve_schedule(problem, d: int, n: int, iters: int, *,
                      measure: bool = True, top_k: int = TOP_K,
                      cache: Optional[AutotuneCache] = None,
                      kernel_ok: Optional[bool] = None,
-                     variants: Optional[Sequence[str]] = None) -> Schedule:
+                     variants: Optional[Sequence[str]] = None,
+                     rule: str = "pso") -> Schedule:
     """The ``schedule="auto"`` entry point: cache -> model -> measured.
 
     ``measure=False`` (the serving layer) stops after the model ranking —
@@ -350,14 +356,16 @@ def resolve_schedule(problem, d: int, n: int, iters: int, *,
     if kernel_ok is None:
         kernel_ok = _kernel_ok() and not record_history
     scope = "kernel" if kernel_ok else "jnp"
-    key = shape_key(problem, d, n, iters, dtype, batch, hetero_table)
+    key = shape_key(problem, d, n, iters, dtype, batch, hetero_table,
+                    rule=rule)
     hit = cache.get(scope, key)
     if hit is not None:
         return hit
     cands = candidate_schedules(d, n, iters, kernel_ok=kernel_ok,
                                 variants=variants)
     ranked = rank_schedules(cands, problem, d, n, iters, dtype=dtype,
-                            batch=batch, hetero_table=hetero_table)
+                            batch=batch, hetero_table=hetero_table,
+                            rule=rule)
     if not ranked:
         return fixed_schedule(record_history=record_history)
     if not measure:
@@ -379,7 +387,8 @@ def resolve_schedule(problem, d: int, n: int, iters: int, *,
         try:
             timed.append(s.replace(source="measured",
                                    measured_us=measure_schedule(
-                                       s, problem, d, n, dtype)))
+                                       s, problem, d, n, dtype,
+                                       rule=rule)))
         except Exception:
             continue    # an unmeasurable candidate just drops out
     if not timed:

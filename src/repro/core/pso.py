@@ -47,6 +47,7 @@ from .blocking import default_block_count
 from .constraints import deb_improved, repair_init_positions
 from .fitness import DEFAULT_BOUNDS, FITNESS_FNS  # noqa: F401 (legacy API)
 from .problem import Bound, Problem, broadcast_bounds, resolve_problem
+from .update_rules import TOPOLOGIES, resolve_rule, rule_names
 
 Array = jnp.ndarray
 
@@ -68,6 +69,14 @@ class PSOConfig:
     /``max_v`` override the problem's domain; each is a scalar or a
     length-``dim`` tuple (per-dimension boxes). The config stays hashable —
     it is a jit static argument everywhere.
+
+    ``update_rule`` names the per-particle update rule
+    (``repro.core.update_rules``: ``"pso"``/``"sso"``/``"lowcost"``);
+    ``topology`` names the async variant's block-neighborhood pull
+    (``"gbest"`` star, ``"ring"``, ``"vonneumann"`` —
+    ``repro.core.topology``). Both default to the paper's algorithm and
+    are Python-gated so default configs trace the exact pre-portfolio
+    jaxprs.
     """
 
     dim: int = 1
@@ -80,6 +89,8 @@ class PSOConfig:
     max_pos: Optional[Bound] = None
     max_v: Optional[Bound] = None     # default: half the position range
     dtype: str = "float32"
+    update_rule: str = "pso"
+    topology: str = "gbest"
 
     def __post_init__(self):
         # Normalize any sequence bound to a tuple so the config stays
@@ -88,6 +99,10 @@ class PSOConfig:
             v = getattr(self, f)
             if v is not None and not isinstance(v, (int, float, tuple)):
                 object.__setattr__(self, f, tuple(float(x) for x in v))
+        resolve_rule(self.update_rule)   # raises with the enumeration
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(
+                f"unknown topology {self.topology!r}; one of {TOPOLOGIES}")
 
     @property
     def problem(self) -> Problem:
@@ -303,18 +318,18 @@ def _advance(cfg: PSOConfig, s: SwarmState, index_offset: int = 0,
            + jnp.uint32(index_offset * d))
     r1 = rng.uniform(s.seed, it, STREAM_R1, idx, dtype=dt)
     r2 = rng.uniform(s.seed, it, STREAM_R2, idx, dtype=dt)
-    vel = (w * s.vel
-           + c1 * r1 * (s.pbest_pos - s.pos)
-           + c2 * r2 * (gbp - s.pos))
+    rule = resolve_rule(cfg.update_rule)
     if hetero is not None:
         table, hr = hetero
-        vel = jnp.clip(vel, -hr.mv, hr.mv)
-        pos = jnp.clip(s.pos + vel, hr.lo, hr.hi)
+        pos, vel = rule.advance(r1, r2, s.pos, s.vel, s.pbest_pos, gbp,
+                                w=w, c1=c1, c2=c2, mv=hr.mv, lo=hr.lo,
+                                hi=hr.hi)
         return pos, vel, _hetero_fitness(table, hr.fid, pos)
-    mv = _bound_operand(cfg.max_v, dt)
-    vel = jnp.clip(vel, -mv, mv)
-    pos = jnp.clip(s.pos + vel, _bound_operand(cfg.min_pos, dt),
-                   _bound_operand(cfg.max_pos, dt))
+    pos, vel = rule.advance(r1, r2, s.pos, s.vel, s.pbest_pos, gbp,
+                            w=w, c1=c1, c2=c2,
+                            mv=_bound_operand(cfg.max_v, dt),
+                            lo=_bound_operand(cfg.min_pos, dt),
+                            hi=_bound_operand(cfg.max_pos, dt))
     proj = cfg.problem.projection_fn
     if proj is not None:
         # the constrained post-advance hook (mode="projection"): clip to
@@ -647,12 +662,29 @@ def _run_async(cfg: PSOConfig, state: SwarmState, iters: int,
              else init_async_locals(state, nb))
     state = state._replace(lbest_pos=None, lbest_fit=None)
 
+    # The scheduled sync: star topology publishes + pulls the shared gbest
+    # into every block; lbest topologies flush to the shared gbest (for
+    # monitoring and the final answer) but each block pulls only from its
+    # NEIGHBORHOOD of block-locals, so information diffuses hop by hop
+    # (repro.core.topology). Python-gated: the default "gbest" traces the
+    # exact pre-topology jaxpr.
+    if cfg.topology == "gbest":
+        scheduled_publish = publish_async_locals
+    else:
+        from .topology import block_neighbor_best
+
+        def scheduled_publish(s, local):
+            s, (lbp, lbf) = flush_async_locals(s, local)
+            lbp, lbf = block_neighbor_best(lbf, lbp, cfg.topology)
+            return s, (lbp, lbf)
+
     def one(carry):
         s, local = carry
         return step_async(cfg, s, local, coeffs=coeffs,
                           index_offset=index_offset, hetero=hetero)
 
-    def chunk(span, publish=publish_async_locals):
+    def chunk(span, publish=None):
+        publish = scheduled_publish if publish is None else publish
         def body(_, carry):
             s, local = carry
             s, local = jax.lax.fori_loop(
@@ -672,7 +704,7 @@ def _run_async(cfg: PSOConfig, state: SwarmState, iters: int,
     carry = (state, local)
     if head:
         scheduled = head == sync_every - phase
-        carry = chunk(head, publish_async_locals if scheduled
+        carry = chunk(head, scheduled_publish if scheduled
                       else flush_async_locals)(0, carry)
     if chunks:
         carry = jax.lax.fori_loop(0, chunks, chunk(sync_every), carry)

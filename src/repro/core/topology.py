@@ -1,40 +1,48 @@
-"""Swarm topologies beyond the paper's global-best (gbest) PSO.
+"""Block-neighborhood (lbest) topologies for the async variant.
 
-The paper uses the star topology (every particle sees the swarm-wide best
-— the aggregation its queue/queue-lock algorithms accelerate). Two classic
-variants are provided as composable alternatives:
+The paper uses the star topology: every particle sees the swarm-wide
+best, and the queue/queue-lock algorithms accelerate exactly that
+aggregation. The async (enhanced queue-lock) variant already maintains
+*block-local* bests between publication points — this module generalizes
+the pull half of its sync: with ``PSOConfig(topology="ring")`` or
+``"vonneumann"``, a block refreshes its local best from its
+**neighborhood** of block-locals instead of the shared gbest, so swarm
+knowledge diffuses hop by hop (classic lbest dynamics at block
+granularity) while the shared gbest is still *flushed* every sync for
+monitoring and the final answer.
 
-  * ``step_ring`` — lbest PSO with a ring neighborhood of radius r: each
-    particle is attracted to the best pbest among its 2r+1 neighbors.
-    There is NO global reduction at all — the aggregation the paper
-    optimizes disappears, at the cost of slower information propagation
-    (O(N/r) iterations to cross the swarm). On TPU the neighborhood max
-    is 2r+1 vectorized rolls — no collective needed even when sharded
-    (halo exchange is a collective-permute of r rows).
-  * ``multi_swarm`` — vmap over independent swarms (restart/portfolio
-    strategies; also the natural "meta-PSO" evaluation harness).
+Topologies:
 
-Both reuse SwarmState; ring keeps ``gbest_*`` fields updated (monitoring
-only — they do not influence the dynamics).
+* ``gbest`` — the paper's star (default; handled inline in
+  ``core/pso.run_async`` / the Pallas async kernels, not here).
+* ``ring`` — blocks on a cycle; neighborhood = {b-1, b, b+1} (mod nb).
+* ``vonneumann`` — blocks on a near-square 2D torus (``grid_dims``);
+  neighborhood = the 4-connected von Neumann stencil + self.
+
+Both engines share the neighbor *definition*: the jnp engine folds rolls
+over the ``[nb, D]`` local-best buffers (``block_neighbor_best``), and
+the Pallas async kernels fold the same offsets as dynamic SMEM/column
+reads (``kernel_neighbor_ids`` — see ``kernels/pso_step.py``). The two
+engines still differ in *schedule* (lockstep blocks vs the kernels'
+block-major grid), so each is validated against its own eager oracle,
+exactly like the star-topology async variant.
+
+``_neighborhood_best`` is the original seed helper (particle-granularity
+ring max via vectorized rolls), now the implementation under the ring
+topology's block-level pull.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
-
-from . import rng
-from .pso import (PSOConfig, STREAM_R1, STREAM_R2, SwarmState, init_swarm)
 
 Array = jnp.ndarray
 
 
 def _neighborhood_best(pbest_fit: Array, pbest_pos: Array, radius: int
                        ) -> Tuple[Array, Array]:
-    """Best (fit, pos) among each particle's ring neighborhood."""
-    n = pbest_fit.shape[0]
+    """Best (fit, pos) among each row's ring neighborhood (incl. self)."""
     best_fit = pbest_fit
     best_pos = pbest_pos
     for off in range(1, radius + 1):
@@ -47,69 +55,62 @@ def _neighborhood_best(pbest_fit: Array, pbest_pos: Array, radius: int
     return best_fit, best_pos
 
 
-def step_ring(cfg: PSOConfig, s: SwarmState, radius: int = 1) -> SwarmState:
-    """One lbest iteration (ring of ``radius``)."""
-    n, d = s.pos.shape
-    dt = s.pos.dtype
-    it = s.iteration + 1
-    idx = jnp.arange(n * d, dtype=jnp.uint32).reshape(n, d)
-    r1 = rng.uniform(s.seed, it, STREAM_R1, idx, dtype=dt)
-    r2 = rng.uniform(s.seed, it, STREAM_R2, idx, dtype=dt)
-    _, lbest_pos = _neighborhood_best(s.pbest_fit, s.pbest_pos, radius)
-    vel = (cfg.w * s.vel
-           + cfg.c1 * r1 * (s.pbest_pos - s.pos)
-           + cfg.c2 * r2 * (lbest_pos - s.pos))
-    vel = jnp.clip(vel, -cfg.max_v, cfg.max_v)
-    pos = jnp.clip(s.pos + vel, cfg.min_pos, cfg.max_pos)
-    fit = cfg.fitness_fn(pos)
-    improved = fit > s.pbest_fit
-    pbest_fit = jnp.where(improved, fit, s.pbest_fit)
-    pbest_pos = jnp.where(improved[:, None], pos, s.pbest_pos)
-    # gbest tracked for monitoring only (queue predicate still applies)
-    def publish(op):
-        f, p, _, _ = op
-        b = jnp.argmax(f)
-        return f[b], p[b]
-
-    def skip(op):
-        return op[2], op[3]
-
-    gbest_fit, gbest_pos = jax.lax.cond(
-        jnp.any(pbest_fit > s.gbest_fit), publish, skip,
-        (pbest_fit, pbest_pos, s.gbest_fit, s.gbest_pos))
-    return s._replace(pos=pos, vel=vel, fit=fit, pbest_pos=pbest_pos,
-                      pbest_fit=pbest_fit, gbest_fit=gbest_fit,
-                      gbest_pos=gbest_pos, iteration=it)
+def grid_dims(nb: int) -> Tuple[int, int]:
+    """Near-square (rows, cols) factorization of ``nb`` for the von
+    Neumann torus: rows is the largest divisor ≤ sqrt(nb). Degenerate
+    block counts (primes, nb < 4) fall back to a 1 x nb ring-like grid."""
+    r = 1
+    d = 1
+    while d * d <= nb:
+        if nb % d == 0:
+            r = d
+        d += 1
+    return r, nb // r
 
 
-@partial(jax.jit, static_argnames=("cfg", "iters", "radius"))
-def run_ring(cfg: PSOConfig, s: SwarmState, iters: int,
-             radius: int = 1) -> SwarmState:
-    cfg = cfg.resolved()
-    return jax.lax.fori_loop(0, iters,
-                             lambda _, t: step_ring(cfg, t, radius), s)
+def block_neighbor_best(lbf: Array, lbp: Array, topology: str
+                       ) -> Tuple[Array, Array]:
+    """Neighborhood max over the block-local bests: ``(lbp', lbf')``.
+
+    ``lbf [nb]`` / ``lbp [nb, D]`` are the async variant's block-local
+    bests; each block's slot is replaced by the best over its
+    ``topology`` neighborhood (always including itself, so locals never
+    regress). Pure rolls/wheres — vmap-clean for the batched engine.
+    """
+    if topology == "ring":
+        bf, bp = _neighborhood_best(lbf, lbp, radius=1)
+        return bp, bf
+    if topology == "vonneumann":
+        nb, d = lbp.shape
+        rows, cols = grid_dims(nb)
+        f = lbf.reshape(rows, cols)
+        p = lbp.reshape(rows, cols, d)
+        best_f, best_p = f, p
+        for axis in (0, 1):
+            for shift in (1, -1):
+                ff = jnp.roll(f, shift, axis=axis)
+                pp = jnp.roll(p, shift, axis=axis)
+                take = ff > best_f
+                best_f = jnp.where(take, ff, best_f)
+                best_p = jnp.where(take[..., None], pp, best_p)
+        return best_p.reshape(nb, d), best_f.reshape(nb)
+    raise ValueError(f"unknown lbest topology {topology!r}; "
+                     f"one of ('ring', 'vonneumann')")
 
 
-def init_multi_swarm(cfg: PSOConfig, seeds) -> SwarmState:
-    """Stack of independent swarms (leading axis = swarm)."""
-    cfg = cfg.resolved()
-    return jax.vmap(lambda sd: init_swarm(cfg, sd))(jnp.asarray(seeds))
-
-
-@partial(jax.jit, static_argnames=("cfg", "iters", "variant"))
-def run_multi_swarm(cfg: PSOConfig, states: SwarmState, iters: int,
-                    variant: str = "queue") -> SwarmState:
-    """Portfolio of swarms advancing in lockstep (vmapped)."""
-    from .pso import STEP_FNS
-    cfg = cfg.resolved()
-    step = STEP_FNS[variant]
-
-    def one(s):
-        return jax.lax.fori_loop(0, iters, lambda _, t: step(cfg, t), s)
-
-    return jax.vmap(one)(states)
-
-
-def best_of_swarms(states: SwarmState) -> Tuple[Array, Array]:
-    b = jnp.argmax(states.gbest_fit)
-    return states.gbest_fit[b], states.gbest_pos[b]
+def kernel_neighbor_ids(b, nb: int, topology: str) -> Tuple:
+    """Traced neighbor block ids of block ``b`` (excluding self) under the
+    same neighbor definition as ``block_neighbor_best`` — the Pallas
+    async kernels fold these as dynamic reads of the local-best buffers.
+    ``b`` may be a traced scalar; ``nb``/``topology`` are static."""
+    if topology == "ring":
+        return ((b + nb - 1) % nb, (b + 1) % nb)
+    if topology == "vonneumann":
+        rows, cols = grid_dims(nb)
+        r, c = b // cols, b % cols
+        return (((r + rows - 1) % rows) * cols + c,
+                ((r + 1) % rows) * cols + c,
+                r * cols + (c + cols - 1) % cols,
+                r * cols + (c + 1) % cols)
+    raise ValueError(f"unknown lbest topology {topology!r}; "
+                     f"one of ('ring', 'vonneumann')")

@@ -1,0 +1,170 @@
+"""Pluggable per-particle update rules — the algorithm half of the
+kernel/engine split.
+
+The paper's contribution is the queue-lock *aggregation* scaffold
+(intra-block candidate queue, block-local bests, sparse publication);
+the per-particle *update rule* is orthogonal. This module is the seam:
+an :class:`UpdateRule` is a small frozen spec whose ``advance`` is a
+pure elementwise function of the two per-(particle, dim) uniform draws
+and the swarm tensors. Because it is elementwise and broadcast-clean it
+serves **both** layouts unchanged:
+
+- the Pallas kernels' D-major blocks (``[Dpad, block_n]`` tiles with a
+  ``[Dpad, 1]`` gbest column — ``kernels/pso_step.py``), and
+- the jnp engine's particle-major arrays (``[N, D]`` with a ``[1, D]``
+  or ``[N, D]`` attractor — ``core/pso.py``).
+
+Rules are registered by name in :data:`UPDATE_RULES` and selected via
+``PSOConfig(update_rule=...)`` / ``Method(rule=...)``. All shipped rules
+draw exactly two uniforms per (particle, dim) from the counter-based RNG
+streams ``STREAM_R1``/``STREAM_R2``, so swapping the rule changes *no*
+RNG bookkeeping anywhere in the stack; a custom rule that needs fewer
+draws simply ignores an operand (the draw cost is priced per rule in
+``roofline/pso_cost.py`` via :attr:`UpdateRule.rng_draws`).
+
+Shipped rules:
+
+``pso``
+    The canonical inertia-weight velocity update (the pre-refactor
+    ``_advance_block`` chain, bit-identical):
+    ``v' = w v + c1 r1 (pbest - x) + c2 r2 (gbest - x)`` clipped to
+    ``±max_v``; ``x' = clip(x + v', lo, hi)``.
+
+``sso``
+    Simplified Swarm Optimization (arXiv 2110.01470): velocity-free
+    three-way probabilistic component copy. Per component, draw ``r1``
+    and copy from gbest (``r1 < cg``), pbest (``< cg+cp``), keep the
+    current value (``< cg+cp+cw``), or resample uniformly in the box
+    using ``r2``. ``w``/``c1``/``c2`` are ignored; velocity passes
+    through untouched.
+
+``lowcost``
+    Low-complexity PSO (arXiv 1401.0546): multiply-free update for
+    time-critical serving lanes. The stochastic scaling multiplies are
+    replaced by Bernoulli(1/2) *selection* of the difference terms:
+    ``v' = v + [r1 < 1/2](pbest - x) + [r2 < 1/2](gbest - x)`` with the
+    usual velocity/position clips.
+
+Registering a custom rule (see docs/variants.md): subclass
+:class:`UpdateRule` as a frozen dataclass, implement ``advance`` with
+broadcast-clean elementwise ops only (no reductions, no layout
+assumptions beyond "``gp`` broadcasts against ``pos``"), and add an
+instance to :data:`UPDATE_RULES`. Every variant — jnp and kernel, sync
+and async, uniform and heterogeneous — picks it up through the shared
+scaffolds; only such elementwise rules are kernel-eligible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateRule:
+    """Frozen spec for one per-particle update rule.
+
+    ``advance`` receives the two uniform draws (``r1``/``r2``, already
+    shaped like ``pos``), the swarm tensors, and the resolved static
+    coefficients/bounds, and returns the new ``(pos, vel)`` BEFORE any
+    projection hook or sublane masking — those belong to the scaffold,
+    not the rule. ``mv``/``lo``/``hi`` are scalars or per-dim columns
+    that broadcast against ``pos`` (both layouts arrange this).
+
+    Frozen + hashable so a rule can ride jit-static config objects;
+    ``rng_draws`` feeds the roofline cost model's per-rule op mix.
+    """
+
+    name: str = "pso"
+    #: uniform draws consumed per (particle, dim) per iteration
+    rng_draws: int = 2
+    #: elementwise rules lower into the Pallas scaffolds unmodified
+    kernel_eligible: bool = True
+
+    def advance(self, r1, r2, pos, vel, pbp, gp, *, w, c1, c2, mv, lo, hi
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PSORule(UpdateRule):
+    """Canonical inertia-weight PSO — the default rule.
+
+    The op chain below is the pre-refactor ``_advance_block`` body
+    verbatim; the committed trajectory digests
+    (tests/test_problem.py) pin it bit-identical.
+    """
+
+    def advance(self, r1, r2, pos, vel, pbp, gp, *, w, c1, c2, mv, lo, hi):
+        vel = (w * vel + c1 * r1 * (pbp - pos) + c2 * r2 * (gp - pos))
+        vel = jnp.clip(vel, -mv, mv)
+        pos = jnp.clip(pos + vel, lo, hi)
+        return pos, vel
+
+
+@dataclasses.dataclass(frozen=True)
+class SSORule(UpdateRule):
+    """Simplified Swarm Optimization: three-way probabilistic copy.
+
+    ``cg``/``cp``/``cw`` are the cumulative copy thresholds (gbest,
+    pbest, keep); the residual ``1 - cg - cp - cw`` probability
+    resamples the component uniformly in ``[lo, hi)`` from ``r2``.
+    Velocity is not part of the algorithm and passes through.
+    """
+
+    cg: float = 0.4
+    cp: float = 0.3
+    cw: float = 0.2
+
+    def advance(self, r1, r2, pos, vel, pbp, gp, *, w, c1, c2, mv, lo, hi):
+        fresh = lo + (hi - lo) * r2
+        pos = jnp.where(
+            r1 < self.cg, gp,
+            jnp.where(r1 < self.cg + self.cp, pbp,
+                      jnp.where(r1 < self.cg + self.cp + self.cw, pos,
+                                fresh)))
+        pos = jnp.clip(pos, lo, hi)
+        return pos, vel
+
+
+@dataclasses.dataclass(frozen=True)
+class LowCostRule(UpdateRule):
+    """Low-complexity PSO: Bernoulli-selected difference terms, no
+    stochastic multiplies on the hot path."""
+
+    def advance(self, r1, r2, pos, vel, pbp, gp, *, w, c1, c2, mv, lo, hi):
+        zero = jnp.zeros_like(pos)
+        vel = (vel + jnp.where(r1 < 0.5, pbp - pos, zero)
+               + jnp.where(r2 < 0.5, gp - pos, zero))
+        vel = jnp.clip(vel, -mv, mv)
+        pos = jnp.clip(pos + vel, lo, hi)
+        return pos, vel
+
+
+UPDATE_RULES: Dict[str, UpdateRule] = {
+    "pso": PSORule("pso"),
+    "sso": SSORule("sso"),
+    "lowcost": LowCostRule("lowcost"),
+}
+
+#: block-neighborhood topologies for the async variant's local-best pull
+TOPOLOGIES: Tuple[str, ...] = ("gbest", "ring", "vonneumann")
+
+
+def rule_names() -> Tuple[str, ...]:
+    return tuple(sorted(UPDATE_RULES))
+
+
+def resolve_rule(rule) -> UpdateRule:
+    """Name or instance -> :class:`UpdateRule` (raises with the full
+    valid-name enumeration otherwise)."""
+    if isinstance(rule, UpdateRule):
+        return rule
+    got = UPDATE_RULES.get(rule)
+    if got is None:
+        raise ValueError(
+            f"unknown update rule {rule!r}; one of {rule_names()} "
+            f"(register custom rules in repro.core.update_rules."
+            f"UPDATE_RULES)")
+    return got

@@ -62,7 +62,8 @@ def _cfg_kwargs(cfg: PSOConfig):
     tuples (lowered to [Dpad, 1] columns by ``pso_step._advance_block``)."""
     cfg = cfg.resolved()
     return dict(w=cfg.w, c1=cfg.c1, c2=cfg.c2, min_pos=cfg.min_pos,
-                max_pos=cfg.max_pos, max_v=cfg.max_v, fitness=cfg.fitness)
+                max_pos=cfg.max_pos, max_v=cfg.max_v, fitness=cfg.fitness,
+                rule=cfg.update_rule)
 
 
 def state_to_kernel(s: SwarmState, d: int):
@@ -202,7 +203,7 @@ def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
         call = hetero_fused_batch_call(
             s_cnt, n, d, iters, bn, batch.pos.dtype, w=rcfg.w, c1=rcfg.c1,
             c2=rcfg.c2, members=_hetero_members(cfg, table),
-            interpret=interpret)
+            rule=rcfg.update_rule, interpret=interpret)
         pos, vel, pbp, pbf, gp, gf = call(
             seeds, its, fids.astype(jnp.int32), pos, vel, pbp, pbf, gp, gf)
     pbf = pbf.reshape(s_cnt, n)
@@ -273,6 +274,7 @@ def run_queue_lock_fused_async(cfg: PSOConfig, s: SwarmState, iters: int,
         lf = jnp.tile(gf, nb)
     for off, span, chunk in _async_spans(iters, sync_every):
         call = fused_async_call(n, d, span, bn, chunk, s.pos.dtype,
+                                topology=cfg.topology,
                                 interpret=interpret, **_cfg_kwargs(cfg))
         pos, vel, pbp, pbf, gp, gf, lp, lf = call(
             scal + jnp.array([0, off], jnp.int32),
@@ -320,6 +322,7 @@ def run_queue_lock_fused_async_batch(cfg: PSOConfig, batch: SwarmBatch,
         if fids is None:
             call = fused_async_batch_call(s_cnt, n, d, span, bn, chunk,
                                           batch.pos.dtype,
+                                          topology=cfg.topology,
                                           interpret=interpret,
                                           **_cfg_kwargs(cfg))
             pos, vel, pbp, pbf, gp, gf, lp, lf = call(
@@ -330,6 +333,7 @@ def run_queue_lock_fused_async_batch(cfg: PSOConfig, batch: SwarmBatch,
             call = hetero_fused_async_batch_call(
                 s_cnt, n, d, span, bn, chunk, batch.pos.dtype, w=rcfg.w,
                 c1=rcfg.c1, c2=rcfg.c2, members=_hetero_members(cfg, table),
+                rule=rcfg.update_rule, topology=cfg.topology,
                 interpret=interpret)
             pos, vel, pbp, pbf, gp, gf, lp, lf = call(
                 seeds, its + jnp.int32(off), fids.astype(jnp.int32),

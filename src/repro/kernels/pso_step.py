@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for cuPSO (DESIGN.md §2).
+"""Pallas TPU kernels for cuPSO (DESIGN.md §2) — one scaffold, seven calls.
 
 Layout — SoA, D-major (the paper's §5.1 coalescing rule, translated):
 arrays are ``[Dpad, N]`` with the *particle* index on the 128-wide lane
@@ -7,7 +7,44 @@ A VPU lane plays the role of a CUDA thread: all lanes touch consecutive
 particles of the same dimension — Fig. 2 of the paper, verbatim, in TPU tile
 terms. For D=1 this packs 16× denser than a dim-on-lanes layout.
 
-Two kernels:
+Scaffold vs update rule
+-----------------------
+The paper's contribution is the queue-lock *aggregation* scaffold — grids,
+the intra-block candidate queue, block-local bests, sparse publication —
+which is orthogonal to the per-particle *update rule*. This module keeps
+exactly ONE copy of that scaffold: two generators,
+
+``_make_sync_kernel(queue=..., batched=..., hetero=...)``
+    emits the synchronous bodies (one advance + pbest fold + publication
+    per grid step) — ``_queue_kernel``, ``_fused_kernel``,
+    ``_fused_batch_kernel`` and ``_hetero_fused_batch_kernel`` are its four
+    instantiations;
+
+``_make_async_kernel(batched=..., hetero=...)``
+    emits the block-resident asynchronous bodies (``sync_every``-iteration
+    chunks against a block-local best, shared-best pull at chunk entry and
+    predicated publish at chunk exit) — ``_fused_async_kernel``,
+    ``_fused_async_batch_kernel`` and ``_hetero_fused_async_batch_kernel``
+    are its three instantiations.
+
+Every body closes over an ``repro.core.update_rules.UpdateRule`` — the
+algorithm half. The default ``"pso"`` rule reproduces the pre-refactor
+``_advance_block`` velocity/position chain bit-for-bit (pinned by the
+trajectory digests in tests/test_problem.py); ``"sso"`` and ``"lowcost"``
+ride the same scaffold with zero kernel-side changes, validated per
+``(rule, variant)`` against the matching ``ref.py`` oracles in
+tests/test_update_rules.py. Cross-cutting features (constraints, per-dim
+bounds, hetero dispatch) are now threaded through the scaffold once instead
+of through seven hand-maintained bodies.
+
+The async builders additionally take a block-neighborhood ``topology``
+(``"gbest"`` | ``"ring"`` | ``"vonneumann"``, see ``repro.core.topology``):
+with an lbest topology a block refreshes its chunk-entry local best from
+its *neighbor blocks'* local slots (``kernel_neighbor_ids``) instead of the
+shared gbest, which is still flushed at chunk exit for monitoring and the
+final answer. ``topology="gbest"`` compiles the exact pre-refactor pull.
+
+The seven pallas_call builders:
 
 ``queue`` (single iteration, grid = particle blocks)
     The paper's §4.1 two-kernel structure. Kernel 1 advances particles,
@@ -117,6 +154,8 @@ from repro.core.blocking import LANE
 from repro.core.constraints import deb_improved
 from repro.core.pso import STREAM_R1, STREAM_R2
 from repro.core.problem import Problem
+from repro.core.topology import kernel_neighbor_ids
+from repro.core.update_rules import resolve_rule
 
 from .compat import CompilerParams as _CompilerParams
 
@@ -496,8 +535,13 @@ def _const_specs(consts):
             for c in consts]
 
 
+#: the default rule — its ``advance`` is the seed kernels' velocity chain
+_PSO_RULE = resolve_rule("pso")
+
+
 def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
-                   w, c1, c2, min_pos, max_pos, max_v, d_real, project=None):
+                   w, c1, c2, min_pos, max_pos, max_v, d_real, project=None,
+                   rule=None):
     """Paper Alg. 1 steps 2–3 for one [Dpad, bn] tile.
 
     Shared verbatim by the kernel bodies and the ``ref.py`` oracle so that
@@ -508,7 +552,11 @@ def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
     (lowered to constant [Dpad, 1] columns). ``project`` is the optional
     feasibility projection ``pos [Dpad, bn] -> pos`` applied after the box
     clip (constrained problems, mode="projection" — see
-    ``repro.core.constraints``). Returns (pos, vel, dmask, lane).
+    ``repro.core.constraints``). ``rule`` is the pluggable
+    ``repro.core.update_rules.UpdateRule`` (None -> the default ``"pso"``
+    rule, whose elementwise chain is the pre-refactor body bit-for-bit);
+    the scaffold owns RNG indexing, sublane masking and projection, the
+    rule owns only the pos/vel math. Returns (pos, vel, dmask, lane).
     """
     dpad, bn = pos.shape
     min_pos = _bound_col(min_pos, dpad, pos.dtype)
@@ -521,10 +569,11 @@ def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
     gidx = ((block_base + lane) * d_real + dsub).astype(jnp.uint32)
     r1 = rng.uniform(seed, it, STREAM_R1, gidx, dtype=pos.dtype)
     r2 = rng.uniform(seed, it, STREAM_R2, gidx, dtype=pos.dtype)
-    gp = gp_col  # [Dpad, 1] -> broadcasts over lanes
-    vel = (w * vel + c1 * r1 * (pbp - pos) + c2 * r2 * (gp - pos))
-    vel = jnp.clip(vel, -max_v, max_v)
-    pos = jnp.clip(pos + vel, min_pos, max_pos)
+    rule = _PSO_RULE if rule is None else rule
+    # gp_col [Dpad, 1] broadcasts over lanes inside the rule.
+    pos, vel = rule.advance(r1, r2, pos, vel, pbp, gp_col,
+                            w=w, c1=c1, c2=c2, mv=max_v,
+                            lo=min_pos, hi=max_pos)
     if project is not None:
         pos = project(pos)
     zero = jnp.zeros_like(pos)
@@ -532,52 +581,204 @@ def _advance_block(seed, it, pos, vel, pbp, gp_col, block_base, *,
 
 
 # --------------------------------------------------------------------------
+# Shared scaffold machinery: pbest fold, candidate queue, winner gather.
+# --------------------------------------------------------------------------
+
+def _kernel_rule(rule):
+    """Resolve + gate a rule for the Pallas scaffolds (builder entry)."""
+    rule = resolve_rule(rule)
+    if not rule.kernel_eligible:
+        raise ValueError(
+            f"update rule {rule.name!r} is not kernel-eligible "
+            f"(non-elementwise advance); use the jnp backend")
+    return rule
+
+
+def _fold_pbest(fit, pos, pbf_ref, pbp_ref, viol):
+    """Alg. 1 step 4: fold the pbest refs in place (raw fitness compare,
+    or the Deb rule when a ``kernel_violation`` form is present)."""
+    pbf = pbf_ref[...]
+    pbp = pbp_ref[...]
+    imp = _pbest_improved(fit, pos, pbf, pbp, viol)
+    pbf_ref[...] = jnp.where(imp, fit, pbf)
+    pbp_ref[...] = jnp.where(imp, pos, pbp)
+
+
+def _queue_best(fit, best):
+    """The paper's intra-block queue, degenerated to SIMD folds: membership
+    mask (lanes improving on ``best``) == the queue, one vectorized masked
+    max == thread-0's scan, first-lane tie-break. Returns ``(bf, bidx)``
+    with ``bf == -inf`` when the queue is empty."""
+    neg = jnp.full_like(fit, -jnp.inf)
+    q_fit = jnp.where(fit > best, fit, neg)
+    bf = jnp.max(q_fit)
+    lane_row = lax.broadcasted_iota(jnp.int32, fit.shape, 1)
+    bidx = jnp.min(jnp.where(q_fit >= bf, lane_row, _BIG_I32))
+    return bf, bidx
+
+
+def _gather_winner(pos, dmask, lane, bidx):
+    """§5.3 trick: gather the winning lane's position column as a masked
+    sum — one vectorized pass, only run on (rare) improvement."""
+    sel = (lane == bidx) & dmask
+    return jnp.sum(jnp.where(sel, pos, jnp.zeros_like(pos)),
+                   axis=1, keepdims=True)
+
+
+# --------------------------------------------------------------------------
+# THE synchronous scaffold: one generator, four kernel bodies.
+# --------------------------------------------------------------------------
+
+def _make_sync_kernel(*, queue=False, batched=False, hetero=False):
+    """Generate a synchronous kernel body from the shared scaffold.
+
+    One advance + pbest fold + publication per grid step. Modes:
+
+    * ``queue``   — kernel 1: gbest is a read-only input; publication is an
+      unconditional per-block ``(aux_fit, aux_idx)`` pair (the cross-block
+      argmax is ops.py's tiny jnp epilogue — the paper's "2nd kernel").
+    * default     — kernel 2 (fused queue-lock): in-place predicated
+      publication under sequential-grid serialization (the lock).
+    * ``batched`` — kernel 3: leading swarm grid axis with per-swarm RNG
+      counters and gbest slots; row s is bit-identical to a standalone
+      kernel-2 run.
+    * ``hetero``  — kernel 3h: per-swarm objective via ``lax.switch`` over
+      branch-static member configs (``statics`` is the
+      ``_hetero_branches`` tuple, not a ``lower_statics`` dict); the
+      scalar switch index makes this a real conditional — one branch
+      executes per grid step.
+
+    The returned body is specialized by the call builders via
+    ``functools.partial`` with the static kwargs
+    ``(w, c1, c2, d_real, rule, statics)``; ``rule`` is the resolved
+    :class:`repro.core.update_rules.UpdateRule` every variant closes over.
+    """
+    def kernel(*refs, w, c1, c2, d_real, rule, statics):
+        # --- scalar prefix / aliased-input placeholders / const + out refs
+        if queue:
+            scal_ref, gp_in_ref, gf_in_ref = refs[:3]
+            rest = refs[3 + 4:]              # 4 aliased state inputs
+        elif hetero:
+            seeds_ref, its_ref, fids_ref = refs[:3]
+            rest = refs[3 + 6:]
+        elif batched:
+            seeds_ref, its_ref = refs[:2]
+            rest = refs[2 + 6:]
+        else:
+            scal_ref = refs[0]
+            rest = refs[1 + 6:]
+        if hetero:
+            branches = statics
+            pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest
+        else:
+            nc = statics["n_consts"]
+            const_vals = tuple(r[...] for r in rest[:nc])
+            if queue:
+                (pos_ref, vel_ref, pbp_ref, pbf_ref,
+                 aux_fit_ref, aux_idx_ref) = rest[nc:]
+            else:
+                (pos_ref, vel_ref, pbp_ref, pbf_ref,
+                 gp_ref, gf_ref) = rest[nc:]
+            min_pos, max_pos, max_v, fitness, proj, viol, pin = \
+                _resolve_statics(statics, const_vals)
+        # --- grid coordinates and RNG counters
+        if batched or hetero:
+            s = pl.program_id(0)
+            b = pl.program_id(2)
+            seed = seeds_ref[s]
+            it = its_ref[s] + pl.program_id(1) + 1
+            slot = s
+        elif queue:
+            b = pl.program_id(0)
+            seed = scal_ref[0]
+            it = scal_ref[1] + 1
+            slot = 0
+        else:
+            b = pl.program_id(1)
+            seed = scal_ref[0]
+            it = scal_ref[1] + pl.program_id(0) + 1
+            slot = 0
+        bn = pos_ref.shape[1]
+        base = b * bn      # block base LOCAL to the swarm: RNG indices
+                           # match a standalone swarm bit-for-bit
+        # --- advance + objective
+        if hetero:
+            def mk(st):
+                min_pos, max_pos, max_v, fitness, proj, viol, pin = \
+                    _resolve_statics(st, ())
+                del viol   # hetero tables are unconstrained/penalty-mode
+
+                def branch(op):
+                    pos0, vel0, pbp0, gp0 = op
+                    pos, vel, dmask, _ = _advance_block(
+                        seed, it, pos0, vel0, pbp0, gp0, base,
+                        w=w, c1=c1, c2=c2, min_pos=min_pos,
+                        max_pos=max_pos, max_v=max_v, d_real=d_real,
+                        project=proj, rule=rule)
+                    pos, vel = _pin(pin, pos, vel)
+                    return pos, vel, fitness(pos, dmask, d_real)
+
+                return branch
+
+            pos, vel, fit = lax.switch(
+                fids_ref[s], [mk(st) for st in branches],
+                (pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...]))
+            dpad = pos.shape[0]
+            dmask = lax.broadcasted_iota(jnp.int32, (dpad, bn), 0) < d_real
+            lane = lax.broadcasted_iota(jnp.int32, (dpad, bn), 1)
+            viol = None
+        else:
+            gp_src = gp_in_ref if queue else gp_ref
+            pos, vel, dmask, lane = _advance_block(
+                seed, it, pos_ref[...], vel_ref[...], pbp_ref[...],
+                gp_src[...], base, w=w, c1=c1, c2=c2, min_pos=min_pos,
+                max_pos=max_pos, max_v=max_v, d_real=d_real, project=proj,
+                rule=rule)
+            pos, vel = _pin(pin, pos, vel)
+            fit = fitness(pos, dmask, d_real)                # [1, bn]
+        # --- pbest fold + state writes
+        _fold_pbest(fit, pos, pbf_ref, pbp_ref, viol)
+        pos_ref[...] = pos
+        vel_ref[...] = vel
+        # --- publication
+        if queue:
+            # Candidates are lanes improving on the (stale) global best;
+            # published as (fit, index) only — §5.3, never the position.
+            bf, bidx = _queue_best(fit, gf_in_ref[0])
+            aux_fit_ref[0] = bf                          # -inf if empty
+            aux_idx_ref[0] = base + bidx
+        else:
+            # Queue-lock: serialized in-kernel publication (grid order =
+            # the lock) behind the rare-improvement predicate (§4.1).
+            gf = gf_ref[slot]
+            q_mask = fit > gf
+
+            @pl.when(jnp.any(q_mask))
+            def _publish():
+                bf, bidx = _queue_best(fit, gf)
+                gf_ref[slot] = bf
+                gp_ref[...] = _gather_winner(pos, dmask, lane, bidx)
+
+    kernel.__name__ = ("_queue_kernel" if queue else
+                       "_hetero_fused_batch_kernel" if hetero else
+                       "_fused_batch_kernel" if batched else "_fused_kernel")
+    return kernel
+
+
+# The four synchronous kernel bodies: thin instantiations of the scaffold.
+_queue_kernel = _make_sync_kernel(queue=True)
+_fused_kernel = _make_sync_kernel()
+_fused_batch_kernel = _make_sync_kernel(batched=True)
+_hetero_fused_batch_kernel = _make_sync_kernel(batched=True, hetero=True)
+
+
+# --------------------------------------------------------------------------
 # Kernel 1: queue algorithm — one iteration, grid over particle blocks.
 # --------------------------------------------------------------------------
 
-def _queue_kernel(scal_ref, gp_ref, gf_ref,
-                  pos_in, vel_in, pbp_in, pbf_in,          # aliased inputs
-                  *rest,                 # const inputs, then output refs
-                  w, c1, c2, d_real, statics):
-    del pos_in, vel_in, pbp_in, pbf_in
-    nc = statics["n_consts"]
-    const_vals = tuple(r[...] for r in rest[:nc])
-    (pos_ref, vel_ref, pbp_ref, pbf_ref,
-     aux_fit_ref, aux_idx_ref) = rest[nc:]
-    min_pos, max_pos, max_v, fitness, proj, viol, pin = _resolve_statics(
-        statics, const_vals)
-    b = pl.program_id(0)
-    bn = pos_ref.shape[1]
-    base = b * bn
-    pos, vel, dmask, lane = _advance_block(
-        scal_ref[0], scal_ref[1] + 1,
-        pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
-        base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-        max_v=max_v, d_real=d_real, project=proj)
-    pos, vel = _pin(pin, pos, vel)
-    fit = fitness(pos, dmask, d_real)                        # [1, bn]
-    pbf = pbf_ref[...]
-    pbp = pbp_ref[...]
-    imp = _pbest_improved(fit, pos, pbf, pbp, viol)          # Alg. 1 step 4
-    pbf_ref[...] = jnp.where(imp, fit, pbf)
-    pbp_ref[...] = jnp.where(imp, pos, pbp)
-    pos_ref[...] = pos
-    vel_ref[...] = vel
-    # --- queue: candidates are lanes improving on the (stale) global best.
-    gf = gf_ref[0]
-    q_mask = fit > gf                                        # queue membership
-    neg = jnp.full_like(fit, -jnp.inf)
-    q_fit = jnp.where(q_mask, fit, neg)
-    bf = jnp.max(q_fit)                                      # thread-0's scan
-    lane_row = lax.broadcasted_iota(jnp.int32, fit.shape, 1)
-    bidx = jnp.min(jnp.where(q_fit >= bf, lane_row, _BIG_I32))
-    aux_fit_ref[0] = bf                                      # -inf if empty
-    aux_idx_ref[0] = base + bidx                             # §5.3: index only
-
-
 def queue_step_call(n: int, d: int, block_n: int, dtype, *,
                     w, c1, c2, min_pos, max_pos, max_v, fitness,
-                    interpret=True):
+                    rule="pso", interpret=True):
     """Build the pallas_call for one queue iteration.
 
     Args (runtime): scal[2]i32, gbest_pos[Dpad,1], gbest_fit[1],
@@ -591,7 +792,7 @@ def queue_step_call(n: int, d: int, block_n: int, dtype, *,
                                dtype=dtype, min_pos=min_pos,
                                max_pos=max_pos, max_v=max_v)
     kern = functools.partial(_queue_kernel, w=w, c1=c1, c2=c2, d_real=d,
-                             statics=st)
+                             rule=_kernel_rule(rule), statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda b: (0, b))
     row = pl.BlockSpec((1, block_n), lambda b: (0, b))
     call = pl.pallas_call(
@@ -627,56 +828,9 @@ def queue_step_call(n: int, d: int, block_n: int, dtype, *,
 # Kernel 2: fused queue-lock — grid (iterations, particle blocks).
 # --------------------------------------------------------------------------
 
-def _fused_kernel(scal_ref,
-                  pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,   # aliased
-                  *rest,                 # const inputs, then output refs
-                  w, c1, c2, d_real, statics):
-    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in
-    nc = statics["n_consts"]
-    const_vals = tuple(r[...] for r in rest[:nc])
-    pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest[nc:]
-    min_pos, max_pos, max_v, fitness, proj, viol, pin = _resolve_statics(
-        statics, const_vals)
-    t = pl.program_id(0)
-    b = pl.program_id(1)
-    bn = pos_ref.shape[1]
-    base = b * bn
-    pos, vel, dmask, lane = _advance_block(
-        scal_ref[0], scal_ref[1] + t + 1,
-        pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
-        base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-        max_v=max_v, d_real=d_real, project=proj)
-    pos, vel = _pin(pin, pos, vel)
-    fit = fitness(pos, dmask, d_real)
-    pbf = pbf_ref[...]
-    pbp = pbp_ref[...]
-    imp = _pbest_improved(fit, pos, pbf, pbp, viol)
-    pbf_ref[...] = jnp.where(imp, fit, pbf)
-    pbp_ref[...] = jnp.where(imp, pos, pbp)
-    pos_ref[...] = pos
-    vel_ref[...] = vel
-    # --- queue-lock: serialized in-kernel publication (grid order = lock).
-    gf = gf_ref[0]
-    q_mask = fit > gf
-
-    @pl.when(jnp.any(q_mask))             # rare-improvement predicate (§4.1)
-    def _publish():
-        neg = jnp.full_like(fit, -jnp.inf)
-        q_fit = jnp.where(q_mask, fit, neg)
-        bf = jnp.max(q_fit)
-        lane_row = lax.broadcasted_iota(jnp.int32, fit.shape, 1)
-        bidx = jnp.min(jnp.where(q_fit >= bf, lane_row, _BIG_I32))
-        gf_ref[0] = bf
-        # §5.3 trick: gather the winner's position vector as a masked sum —
-        # one vectorized pass, only on (rare) improvement.
-        sel = (lane == bidx) & dmask
-        gp_ref[...] = jnp.sum(jnp.where(sel, pos, jnp.zeros_like(pos)),
-                              axis=1, keepdims=True)
-
-
 def fused_call(n: int, d: int, iters: int, block_n: int, dtype, *,
                w, c1, c2, min_pos, max_pos, max_v, fitness,
-               interpret=True):
+               rule="pso", interpret=True):
     """Build the fused multi-iteration queue-lock pallas_call.
 
     Args (runtime): scal[2]i32, pos/vel/pbest_pos [Dpad,N], pbest_fit [1,N],
@@ -690,7 +844,7 @@ def fused_call(n: int, d: int, iters: int, block_n: int, dtype, *,
                                dtype=dtype, min_pos=min_pos,
                                max_pos=max_pos, max_v=max_v)
     kern = functools.partial(_fused_kernel, w=w, c1=c1, c2=c2, d_real=d,
-                             statics=st)
+                             rule=_kernel_rule(rule), statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda t, b: (0, b))
     row = pl.BlockSpec((1, block_n), lambda t, b: (0, b))
     gpc = pl.BlockSpec((dpad, 1), lambda t, b: (0, 0))
@@ -722,55 +876,9 @@ def fused_call(n: int, d: int, iters: int, block_n: int, dtype, *,
 # Kernel 3: batched fused queue-lock — grid (swarms, iterations, blocks).
 # --------------------------------------------------------------------------
 
-def _fused_batch_kernel(seeds_ref, its_ref,
-                        pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,
-                        *rest,           # const inputs, then output refs
-                        w, c1, c2, d_real, statics):
-    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in
-    nc = statics["n_consts"]
-    const_vals = tuple(r[...] for r in rest[:nc])
-    pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest[nc:]
-    min_pos, max_pos, max_v, fitness, proj, viol, pin = _resolve_statics(
-        statics, const_vals)
-    s = pl.program_id(0)
-    t = pl.program_id(1)
-    b = pl.program_id(2)
-    bn = pos_ref.shape[1]
-    base = b * bn          # block base LOCAL to the swarm: RNG indices match
-    pos, vel, dmask, lane = _advance_block(  # a standalone swarm bit-for-bit
-        seeds_ref[s], its_ref[s] + t + 1,
-        pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...],
-        base, w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-        max_v=max_v, d_real=d_real, project=proj)
-    pos, vel = _pin(pin, pos, vel)
-    fit = fitness(pos, dmask, d_real)
-    pbf = pbf_ref[...]
-    pbp = pbp_ref[...]
-    imp = _pbest_improved(fit, pos, pbf, pbp, viol)
-    pbf_ref[...] = jnp.where(imp, fit, pbf)
-    pbp_ref[...] = jnp.where(imp, pos, pbp)
-    pos_ref[...] = pos
-    vel_ref[...] = vel
-    # --- per-swarm queue-lock publication (sequential grid = the lock).
-    gf = gf_ref[s]
-    q_mask = fit > gf
-
-    @pl.when(jnp.any(q_mask))
-    def _publish():
-        neg = jnp.full_like(fit, -jnp.inf)
-        q_fit = jnp.where(q_mask, fit, neg)
-        bf = jnp.max(q_fit)
-        lane_row = lax.broadcasted_iota(jnp.int32, fit.shape, 1)
-        bidx = jnp.min(jnp.where(q_fit >= bf, lane_row, _BIG_I32))
-        gf_ref[s] = bf
-        sel = (lane == bidx) & dmask
-        gp_ref[...] = jnp.sum(jnp.where(sel, pos, jnp.zeros_like(pos)),
-                              axis=1, keepdims=True)
-
-
 def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
                      dtype, *, w, c1, c2, min_pos, max_pos, max_v, fitness,
-                     interpret=True):
+                     rule="pso", interpret=True):
     """Build the batched fused queue-lock pallas_call (S swarms x iters).
 
     Args (runtime): seeds[S]i32, iterations[S]i32,
@@ -787,7 +895,7 @@ def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
                                dtype=dtype, min_pos=min_pos,
                                max_pos=max_pos, max_v=max_v)
     kern = functools.partial(_fused_batch_kernel, w=w, c1=c1, c2=c2,
-                             d_real=d, statics=st)
+                             d_real=d, rule=_kernel_rule(rule), statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda s, t, b: (0, s * nb + b))
     row = pl.BlockSpec((1, block_n), lambda s, t, b: (0, s * nb + b))
     gpc = pl.BlockSpec((dpad, 1), lambda s, t, b: (0, s))
@@ -852,68 +960,9 @@ def _hetero_branches(members, *, d, dpad, bn, dtype):
     return tuple(branches)
 
 
-def _hetero_fused_batch_kernel(seeds_ref, its_ref, fids_ref,
-                               pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,
-                               *rest,            # output refs (no consts)
-                               w, c1, c2, d_real, branches):
-    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in
-    pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest
-    s = pl.program_id(0)
-    t = pl.program_id(1)
-    b = pl.program_id(2)
-    bn = pos_ref.shape[1]
-    base = b * bn          # block base LOCAL to the swarm: RNG indices match
-    seed = seeds_ref[s]
-    it = its_ref[s] + t + 1
-
-    def mk(st):
-        min_pos, max_pos, max_v, fitness, proj, viol, pin = \
-            _resolve_statics(st, ())
-        del viol  # hetero tables are unconstrained/penalty-mode: raw fold
-
-        def branch(op):
-            pos0, vel0, pbp0, gp0 = op
-            pos, vel, dmask, _ = _advance_block(
-                seed, it, pos0, vel0, pbp0, gp0, base,
-                w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-                max_v=max_v, d_real=d_real, project=proj)
-            pos, vel = _pin(pin, pos, vel)
-            return pos, vel, fitness(pos, dmask, d_real)
-
-        return branch
-
-    pos, vel, fit = lax.switch(
-        fids_ref[s], [mk(st) for st in branches],
-        (pos_ref[...], vel_ref[...], pbp_ref[...], gp_ref[...]))
-    dpad = pos.shape[0]
-    dmask = lax.broadcasted_iota(jnp.int32, (dpad, bn), 0) < d_real
-    lane = lax.broadcasted_iota(jnp.int32, (dpad, bn), 1)
-    pbf = pbf_ref[...]
-    pbp = pbp_ref[...]
-    imp = _pbest_improved(fit, pos, pbf, pbp, None)
-    pbf_ref[...] = jnp.where(imp, fit, pbf)
-    pbp_ref[...] = jnp.where(imp, pos, pbp)
-    pos_ref[...] = pos
-    vel_ref[...] = vel
-    gf = gf_ref[s]
-    q_mask = fit > gf
-
-    @pl.when(jnp.any(q_mask))
-    def _publish():
-        neg = jnp.full_like(fit, -jnp.inf)
-        q_fit = jnp.where(q_mask, fit, neg)
-        bf = jnp.max(q_fit)
-        lane_row = lax.broadcasted_iota(jnp.int32, fit.shape, 1)
-        bidx = jnp.min(jnp.where(q_fit >= bf, lane_row, _BIG_I32))
-        gf_ref[s] = bf
-        sel = (lane == bidx) & dmask
-        gp_ref[...] = jnp.sum(jnp.where(sel, pos, jnp.zeros_like(pos)),
-                              axis=1, keepdims=True)
-
-
 def hetero_fused_batch_call(s_cnt: int, n: int, d: int, iters: int,
                             block_n: int, dtype, *, w, c1, c2, members,
-                            interpret=True):
+                            rule="pso", interpret=True):
     """Batched fused queue-lock with a per-swarm problem (kernel 3h).
 
     Args (runtime): seeds[S]i32, iterations[S]i32, fids[S]i32, then the six
@@ -927,7 +976,8 @@ def hetero_fused_batch_call(s_cnt: int, n: int, d: int, iters: int,
     branches = _hetero_branches(members, d=d, dpad=dpad, bn=block_n,
                                 dtype=dtype)
     kern = functools.partial(_hetero_fused_batch_kernel, w=w, c1=c1, c2=c2,
-                             d_real=d, branches=branches)
+                             d_real=d, rule=_kernel_rule(rule),
+                             statics=branches)
     mat = pl.BlockSpec((dpad, block_n), lambda s, t, b: (0, s * nb + b))
     row = pl.BlockSpec((1, block_n), lambda s, t, b: (0, s * nb + b))
     gpc = pl.BlockSpec((dpad, 1), lambda s, t, b: (0, s))
@@ -962,7 +1012,7 @@ def hetero_fused_batch_call(s_cnt: int, n: int, d: int, iters: int,
 def _async_chunk_body(scal0, it_base, sync_every, base,
                       pos, vel, pbp, pbf, lp, lf, *,
                       w, c1, c2, min_pos, max_pos, max_v, d_real, fitness,
-                      project=None, viol=None, pin=False):
+                      project=None, viol=None, pin=False, rule=None):
     """``sync_every`` iterations of one block against its block-local best.
 
     Pure value-level fori_loop (no ref writes inside the loop) shared by
@@ -977,7 +1027,7 @@ def _async_chunk_body(scal0, it_base, sync_every, base,
         pos, vel, dmask, lane = _advance_block(
             scal0, it_base + tl + 1, pos, vel, pbp, lp, base,
             w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-            max_v=max_v, d_real=d_real, project=project)
+            max_v=max_v, d_real=d_real, project=project, rule=rule)
         pos, vel = _pin(pin, pos, vel)
         fit = fitness(pos, dmask, d_real)
         imp = _pbest_improved(fit, pos, pbf, pbp, viol)
@@ -985,16 +1035,9 @@ def _async_chunk_body(scal0, it_base, sync_every, base,
         pbp = jnp.where(imp, pos, pbp)
         # Block-local queue: same rule as the fused kernel's _publish, as
         # unconditional where-folds (a fori carry cannot be predicated).
-        q_mask = fit > lf
-        neg = jnp.full_like(fit, -jnp.inf)
-        q_fit = jnp.where(q_mask, fit, neg)
-        bf = jnp.max(q_fit)                    # -inf when the queue is empty
-        lane_row = lax.broadcasted_iota(jnp.int32, fit.shape, 1)
-        bidx = jnp.min(jnp.where(q_fit >= bf, lane_row, _BIG_I32))
-        sel = (lane == bidx) & dmask
-        cand = jnp.sum(jnp.where(sel, pos, jnp.zeros_like(pos)),
-                       axis=1, keepdims=True)
-        anyq = bf > lf                         # == jnp.any(q_mask)
+        bf, bidx = _queue_best(fit, lf)        # bf == -inf when queue empty
+        cand = _gather_winner(pos, dmask, lane, bidx)
+        anyq = bf > lf                         # == jnp.any(fit > lf)
         lf = jnp.where(anyq, bf, lf)
         lp = jnp.where(anyq, cand, lp)
         return pos, vel, pbp, pbf, lp, lf
@@ -1002,54 +1045,172 @@ def _async_chunk_body(scal0, it_base, sync_every, base,
     return lax.fori_loop(0, sync_every, body, (pos, vel, pbp, pbf, lp, lf))
 
 
-def _fused_async_kernel(scal_ref,
-                        pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,
-                        lp_in, lf_in,
-                        *rest,           # const inputs, then output refs
-                        sync_every, w, c1, c2, d_real, statics):
-    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in, lp_in, lf_in
-    nc = statics["n_consts"]
-    const_vals = tuple(r[...] for r in rest[:nc])
-    (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
-     lp_ref, lf_ref) = rest[nc:]
-    min_pos, max_pos, max_v, fitness, proj, viol, pin = _resolve_statics(
-        statics, const_vals)
-    b = pl.program_id(0)
-    c = pl.program_id(1)
-    bn = pos_ref.shape[1]
-    base = b * bn
-    # --- chunk entry: pull the shared gbest into the local best (the read
-    # half of the paper's lock). A no-op for the first grid block and for
-    # nb == 1; later blocks inherit everything earlier blocks published.
-    lf = lf_ref[b]
-    lp = lp_ref[...]
-    gf0 = gf_ref[0]
-    pull = gf0 > lf
-    lf = jnp.where(pull, gf0, lf)
-    lp = jnp.where(pull, gp_ref[...], lp)
-    pos, vel, pbp, pbf, lp, lf = _async_chunk_body(
-        scal_ref[0], scal_ref[1] + c * sync_every, sync_every, base,
-        pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf,
-        w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v,
-        d_real=d_real, fitness=fitness, project=proj, viol=viol, pin=pin)
-    pos_ref[...] = pos
-    vel_ref[...] = vel
-    pbp_ref[...] = pbp
-    pbf_ref[...] = pbf
-    lp_ref[...] = lp
-    lf_ref[b] = lf
+# --------------------------------------------------------------------------
+# THE asynchronous scaffold: one generator, three kernel bodies.
+# --------------------------------------------------------------------------
 
-    # --- chunk boundary: the ONLY cross-block write, and only on the rare
-    # improvement (the paper's occasional lock acquisition).
-    @pl.when(lf > gf_ref[0])
-    def _publish():
-        gf_ref[0] = lf
-        gp_ref[...] = lp
+def _make_async_kernel(*, batched=False, hetero=False):
+    """Generate an asynchronous (block-resident) kernel body from the
+    shared scaffold.
+
+    Each grid step runs one ``sync_every``-iteration chunk of one particle
+    block against its block-local best (``_async_chunk_body``), touching
+    the shared buffers only at the chunk boundary: a local-best refresh on
+    entry (the read half of the paper's lock) and a predicated publish on
+    exit. Modes mirror ``_make_sync_kernel``: ``batched`` adds the leading
+    swarm axis (per-swarm gbest slots, per-(swarm, block) local slots);
+    ``hetero`` dispatches the whole chunk body through ``lax.switch``
+    (``statics`` is the ``_hetero_branches`` tuple).
+
+    ``topology`` selects the chunk-entry refresh source (see
+    ``repro.core.topology``): ``"gbest"`` pulls the shared gbest — the
+    paper's star, compiled exactly as before — while ``"ring"`` /
+    ``"vonneumann"`` fold the NEIGHBOR blocks' local slots instead
+    (``kernel_neighbor_ids``; ``lp_ref`` is whole-array blocked in this
+    mode so neighbor columns are addressable), so swarm knowledge diffuses
+    hop by hop while the shared gbest remains a monitoring/final-answer
+    flush target only.
+    """
+    def kernel(*refs, nb, sync_every, w, c1, c2, d_real, rule, topology,
+               statics):
+        # --- scalar prefix / aliased-input placeholders / const + out refs
+        if hetero:
+            seeds_ref, its_ref, fids_ref = refs[:3]
+            rest = refs[3 + 8:]
+        elif batched:
+            seeds_ref, its_ref = refs[:2]
+            rest = refs[2 + 8:]
+        else:
+            scal_ref = refs[0]
+            rest = refs[1 + 8:]
+        if hetero:
+            branches = statics
+            (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
+             lp_ref, lf_ref) = rest
+        else:
+            nc = statics["n_consts"]
+            const_vals = tuple(r[...] for r in rest[:nc])
+            (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
+             lp_ref, lf_ref) = rest[nc:]
+            min_pos, max_pos, max_v, fitness, proj, viol, pin = \
+                _resolve_statics(statics, const_vals)
+        # --- grid coordinates, RNG counters, local/global slots
+        if batched or hetero:
+            s = pl.program_id(0)
+            b = pl.program_id(1)
+            c = pl.program_id(2)
+            seed = seeds_ref[s]
+            it0 = its_ref[s] + c * sync_every
+            gslot = s
+            slot = s * nb + b      # per-(swarm, block) local-best slot
+        else:
+            b = pl.program_id(0)
+            c = pl.program_id(1)
+            seed = scal_ref[0]
+            it0 = scal_ref[1] + c * sync_every
+            gslot = 0
+            slot = b
+        bn = pos_ref.shape[1]
+        base = b * bn      # swarm-local: RNG matches a standalone run
+        # --- chunk entry: refresh the block-local best (the read half of
+        # the paper's lock).
+        lf = lf_ref[slot]
+        if topology == "gbest":
+            # Star: pull the shared gbest. A no-op for the first grid
+            # block and for nb == 1; later blocks inherit everything
+            # earlier blocks published.
+            lp = lp_ref[...]
+            gf0 = gf_ref[gslot]
+            pull = gf0 > lf
+            lf = jnp.where(pull, gf0, lf)
+            lp = jnp.where(pull, gp_ref[...], lp)
+        else:
+            # lbest: fold the neighbor blocks' local slots instead — the
+            # shared gbest is never read back, so swarm knowledge diffuses
+            # hop by hop (classic lbest dynamics at block granularity).
+            lp = lp_ref[:, pl.ds(slot, 1)]
+            for nbr in kernel_neighbor_ids(b, nb, topology):
+                nslot = s * nb + nbr if (batched or hetero) else nbr
+                nf = lf_ref[nslot]
+                take = nf > lf
+                lf = jnp.where(take, nf, lf)
+                lp = jnp.where(take, lp_ref[:, pl.ds(nslot, 1)], lp)
+        # --- the resident chunk: sync_every iterations vs the local best
+        if hetero:
+            def mk(st):
+                min_pos, max_pos, max_v, fitness, proj, viol, pin = \
+                    _resolve_statics(st, ())
+                del viol   # hetero tables are unconstrained/penalty-mode
+
+                def branch(op):
+                    pos, vel, pbp, pbf, lp_, lf_ = op
+                    return _async_chunk_body(
+                        seed, it0, sync_every, base, pos, vel, pbp, pbf,
+                        lp_, lf_, w=w, c1=c1, c2=c2, min_pos=min_pos,
+                        max_pos=max_pos, max_v=max_v, d_real=d_real,
+                        fitness=fitness, project=proj, viol=None, pin=pin,
+                        rule=rule)
+
+                return branch
+
+            pos, vel, pbp, pbf, lp, lf = lax.switch(
+                fids_ref[s], [mk(st) for st in branches],
+                (pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...],
+                 lp, lf))
+        else:
+            pos, vel, pbp, pbf, lp, lf = _async_chunk_body(
+                seed, it0, sync_every, base,
+                pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...],
+                lp, lf, w=w, c1=c1, c2=c2, min_pos=min_pos,
+                max_pos=max_pos, max_v=max_v, d_real=d_real,
+                fitness=fitness, project=proj, viol=viol, pin=pin,
+                rule=rule)
+        pos_ref[...] = pos
+        vel_ref[...] = vel
+        pbp_ref[...] = pbp
+        pbf_ref[...] = pbf
+        if topology == "gbest":
+            lp_ref[...] = lp
+        else:
+            lp_ref[:, pl.ds(slot, 1)] = lp
+        lf_ref[slot] = lf
+
+        # --- chunk boundary: the ONLY cross-block write, and only on the
+        # rare improvement (the paper's occasional lock acquisition). With
+        # an lbest topology this is the monitoring/final-answer flush; the
+        # entry refresh above never reads it back.
+        @pl.when(lf > gf_ref[gslot])
+        def _publish():
+            gf_ref[gslot] = lf
+            gp_ref[...] = lp
+
+    kernel.__name__ = (
+        "_hetero_fused_async_batch_kernel" if hetero else
+        "_fused_async_batch_kernel" if batched else "_fused_async_kernel")
+    return kernel
+
+
+# The three asynchronous kernel bodies: instantiations of the scaffold.
+_fused_async_kernel = _make_async_kernel()
+_fused_async_batch_kernel = _make_async_kernel(batched=True)
+_hetero_fused_async_batch_kernel = _make_async_kernel(batched=True,
+                                                      hetero=True)
+
+
+def _async_local_spec(topology, dpad, nb_total, index_map_own):
+    """BlockSpec for the ``local_pos`` buffer: the block's own [Dpad, 1]
+    column under the star topology (the seed kernels' spec, untouched), or
+    the whole [Dpad, nb_total] array under an lbest topology so neighbor
+    columns are dynamically addressable."""
+    if topology == "gbest":
+        return pl.BlockSpec((dpad, 1), index_map_own)
+    return pl.BlockSpec((dpad, nb_total), lambda *g: (0, 0))
 
 
 def fused_async_call(n: int, d: int, iters: int, block_n: int,
                      sync_every: int, dtype, *, w, c1, c2, min_pos, max_pos,
-                     max_v, fitness, interpret=True):
+                     max_v, fitness, rule="pso", topology="gbest",
+                     interpret=True):
     """Build the asynchronous queue-lock pallas_call (grid (blocks, chunks)).
 
     Args (runtime): scal[2]i32, pos/vel/pbest_pos [Dpad,N], pbest_fit [1,N],
@@ -1068,12 +1229,14 @@ def fused_async_call(n: int, d: int, iters: int, block_n: int,
     st, consts = lower_statics(fitness, d=d, dpad=dpad, bn=block_n,
                                dtype=dtype, min_pos=min_pos,
                                max_pos=max_pos, max_v=max_v)
-    kern = functools.partial(_fused_async_kernel, sync_every=sync_every,
-                             w=w, c1=c1, c2=c2, d_real=d, statics=st)
+    kern = functools.partial(_fused_async_kernel, nb=nb,
+                             sync_every=sync_every, w=w, c1=c1, c2=c2,
+                             d_real=d, rule=_kernel_rule(rule),
+                             topology=topology, statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda b, c: (0, b))
     row = pl.BlockSpec((1, block_n), lambda b, c: (0, b))
     gpc = pl.BlockSpec((dpad, 1), lambda b, c: (0, 0))
-    lpc = pl.BlockSpec((dpad, 1), lambda b, c: (0, b))
+    lpc = _async_local_spec(topology, dpad, nb, lambda b, c: (0, b))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
     call = pl.pallas_call(
         kern,
@@ -1102,52 +1265,10 @@ def fused_async_call(n: int, d: int, iters: int, block_n: int,
     return lambda *args: call(*args, *consts)
 
 
-def _fused_async_batch_kernel(seeds_ref, its_ref,
-                              pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in,
-                              lp_in, lf_in,
-                              *rest,     # const inputs, then output refs
-                              nb, sync_every, w, c1, c2, d_real, statics):
-    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in, lp_in, lf_in
-    nc = statics["n_consts"]
-    const_vals = tuple(r[...] for r in rest[:nc])
-    (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref,
-     gf_ref, lp_ref, lf_ref) = rest[nc:]
-    min_pos, max_pos, max_v, fitness, proj, viol, pin = _resolve_statics(
-        statics, const_vals)
-    s = pl.program_id(0)
-    b = pl.program_id(1)
-    c = pl.program_id(2)
-    bn = pos_ref.shape[1]
-    base = b * bn                  # swarm-local: RNG matches standalone run
-    slot = s * nb + b
-    lf = lf_ref[slot]
-    lp = lp_ref[...]
-    gf0 = gf_ref[s]
-    pull = gf0 > lf
-    lf = jnp.where(pull, gf0, lf)
-    lp = jnp.where(pull, gp_ref[...], lp)
-    pos, vel, pbp, pbf, lp, lf = _async_chunk_body(
-        seeds_ref[s], its_ref[s] + c * sync_every, sync_every, base,
-        pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf,
-        w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos, max_v=max_v,
-        d_real=d_real, fitness=fitness, project=proj, viol=viol, pin=pin)
-    pos_ref[...] = pos
-    vel_ref[...] = vel
-    pbp_ref[...] = pbp
-    pbf_ref[...] = pbf
-    lp_ref[...] = lp
-    lf_ref[slot] = lf
-
-    @pl.when(lf > gf_ref[s])
-    def _publish():
-        gf_ref[s] = lf
-        gp_ref[...] = lp
-
-
 def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
                            block_n: int, sync_every: int, dtype, *,
                            w, c1, c2, min_pos, max_pos, max_v, fitness,
-                           interpret=True):
+                           rule="pso", topology="gbest", interpret=True):
     """Batched async queue-lock: grid (swarms, blocks, chunks).
 
     Args (runtime): seeds[S]i32, iterations[S]i32,
@@ -1168,11 +1289,13 @@ def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
                                max_pos=max_pos, max_v=max_v)
     kern = functools.partial(_fused_async_batch_kernel, nb=nb,
                              sync_every=sync_every, w=w, c1=c1, c2=c2,
-                             d_real=d, statics=st)
+                             d_real=d, rule=_kernel_rule(rule),
+                             topology=topology, statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda s, b, c: (0, s * nb + b))
     row = pl.BlockSpec((1, block_n), lambda s, b, c: (0, s * nb + b))
     gpc = pl.BlockSpec((dpad, 1), lambda s, b, c: (0, s))
-    lpc = pl.BlockSpec((dpad, 1), lambda s, b, c: (0, s * nb + b))
+    lpc = _async_local_spec(topology, dpad, s_cnt * nb,
+                            lambda s, b, c: (0, s * nb + b))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
     call = pl.pallas_call(
         kern,
@@ -1209,64 +1332,10 @@ def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
 # each branch runs the whole ``sync_every``-iteration chunk body.
 # --------------------------------------------------------------------------
 
-def _hetero_fused_async_batch_kernel(seeds_ref, its_ref, fids_ref,
-                                     pos_in, vel_in, pbp_in, pbf_in,
-                                     gp_in, gf_in, lp_in, lf_in,
-                                     *rest,       # output refs (no consts)
-                                     nb, sync_every, w, c1, c2, d_real,
-                                     branches):
-    del pos_in, vel_in, pbp_in, pbf_in, gp_in, gf_in, lp_in, lf_in
-    (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref,
-     gf_ref, lp_ref, lf_ref) = rest
-    s = pl.program_id(0)
-    b = pl.program_id(1)
-    c = pl.program_id(2)
-    bn = pos_ref.shape[1]
-    base = b * bn                  # swarm-local: RNG matches standalone run
-    slot = s * nb + b
-    seed = seeds_ref[s]
-    it0 = its_ref[s] + c * sync_every
-    lf = lf_ref[slot]
-    lp = lp_ref[...]
-    gf0 = gf_ref[s]
-    pull = gf0 > lf
-    lf = jnp.where(pull, gf0, lf)
-    lp = jnp.where(pull, gp_ref[...], lp)
-
-    def mk(st):
-        min_pos, max_pos, max_v, fitness, proj, viol, pin = \
-            _resolve_statics(st, ())
-        del viol  # hetero tables are unconstrained/penalty-mode: raw fold
-
-        def branch(op):
-            pos, vel, pbp, pbf, lp_, lf_ = op
-            return _async_chunk_body(
-                seed, it0, sync_every, base, pos, vel, pbp, pbf, lp_, lf_,
-                w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
-                max_v=max_v, d_real=d_real, fitness=fitness, project=proj,
-                viol=None, pin=pin)
-
-        return branch
-
-    pos, vel, pbp, pbf, lp, lf = lax.switch(
-        fids_ref[s], [mk(st) for st in branches],
-        (pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...], lp, lf))
-    pos_ref[...] = pos
-    vel_ref[...] = vel
-    pbp_ref[...] = pbp
-    pbf_ref[...] = pbf
-    lp_ref[...] = lp
-    lf_ref[slot] = lf
-
-    @pl.when(lf > gf_ref[s])
-    def _publish():
-        gf_ref[s] = lf
-        gp_ref[...] = lp
-
-
 def hetero_fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
                                   block_n: int, sync_every: int, dtype, *,
-                                  w, c1, c2, members, interpret=True):
+                                  w, c1, c2, members, rule="pso",
+                                  topology="gbest", interpret=True):
     """Batched async queue-lock with a per-swarm problem (kernel 4h).
 
     Args (runtime): seeds[S]i32, iterations[S]i32, fids[S]i32, then the
@@ -1282,11 +1351,13 @@ def hetero_fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
                                 dtype=dtype)
     kern = functools.partial(_hetero_fused_async_batch_kernel, nb=nb,
                              sync_every=sync_every, w=w, c1=c1, c2=c2,
-                             d_real=d, branches=branches)
+                             d_real=d, rule=_kernel_rule(rule),
+                             topology=topology, statics=branches)
     mat = pl.BlockSpec((dpad, block_n), lambda s, b, c: (0, s * nb + b))
     row = pl.BlockSpec((1, block_n), lambda s, b, c: (0, s * nb + b))
     gpc = pl.BlockSpec((dpad, 1), lambda s, b, c: (0, s))
-    lpc = pl.BlockSpec((dpad, 1), lambda s, b, c: (0, s * nb + b))
+    lpc = _async_local_spec(topology, dpad, s_cnt * nb,
+                            lambda s, b, c: (0, s * nb + b))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
     return pl.pallas_call(
         kern,

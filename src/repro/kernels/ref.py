@@ -25,6 +25,9 @@ import functools
 
 import jax
 
+from repro.core.topology import block_neighbor_best, kernel_neighbor_ids
+from repro.core.update_rules import resolve_rule
+
 from .pso_step import (_advance_block, _pbest_improved, _pin, is_converted,
                        kernel_fitness, kernel_projection, kernel_violation,
                        pad_dim)
@@ -199,12 +202,13 @@ def run_constrained_oracle(cfg, seed: int, iters: int,
         lbp = jnp.broadcast_to(gp[None, :], (nb, d))
         lbf = jnp.broadcast_to(gf, (nb,))
 
+    orule = resolve_rule(cfg.update_rule)
+
     @jax.jit
     def advance(vel, pos, pbp, attractor, r1, r2):
-        v = (cfg.w * vel + cfg.c1 * r1 * (pbp - pos)
-             + cfg.c2 * r2 * (attractor - pos))
-        v = jnp.clip(v, -mv, mv)
-        p = jnp.clip(pos + v, lo, hi)
+        p, v = orule.advance(r1, r2, pos, vel, pbp, attractor,
+                             w=cfg.w, c1=cfg.c1, c2=cfg.c2,
+                             mv=mv, lo=lo, hi=hi)
         if proj is not None:
             p = proj(p)
         return p, v, fit_fn(p)
@@ -235,8 +239,12 @@ def run_constrained_oracle(cfg, seed: int, iters: int,
                 if sched:    # scheduled sync point: publish AND pull; an
                     # unscheduled final boundary flushes publish-only
                     # (mirrors run_async's flush_async_locals tail)
-                    lbf = jnp.broadcast_to(gf, lbf.shape)
-                    lbp = jnp.broadcast_to(gp[None, :], lbp.shape)
+                    if cfg.topology == "gbest":
+                        lbf = jnp.broadcast_to(gf, lbf.shape)
+                        lbp = jnp.broadcast_to(gp[None, :], lbp.shape)
+                    else:  # lbest pull: neighborhood fold of block-locals
+                        lbp, lbf = block_neighbor_best(lbf, lbp,
+                                                       cfg.topology)
         else:
             if bool(jnp.any(imp)):           # queue-lock publication rule
                 wb = jnp.argmax(pbf)
@@ -291,7 +299,7 @@ def _block_views(arrs, b, bn):
 
 def queue_step_oracle(seed, iteration, pos, vel, pbp, pbf, gp, gf,
                       block_n: int, *, w, c1, c2, min_pos, max_pos, max_v,
-                      d_real: int, fitness):
+                      d_real: int, fitness, rule="pso"):
     """One queue-algorithm iteration (kernel 1 + the jnp 2nd stage).
 
     Inputs in D-major layout: pos/vel/pbp [Dpad, N], pbf [1, N],
@@ -303,7 +311,8 @@ def queue_step_oracle(seed, iteration, pos, vel, pbp, pbf, gp, gf,
     vf = kernel_violation(fitness)
     viol = None if vf is None else (lambda p: vf(p, d_real))
     adv = _advance_fn(fitness, w=w, c1=c1, c2=c2, min_pos=min_pos,
-                      max_pos=max_pos, max_v=max_v, d_real=d_real)
+                      max_pos=max_pos, max_v=max_v, d_real=d_real,
+                      rule=resolve_rule(rule))
     pos, vel, pbp, pbf = map(jnp.asarray, (pos, vel, pbp, pbf))
     aux_fit = []
     aux_idx = []
@@ -340,7 +349,7 @@ def queue_step_oracle(seed, iteration, pos, vel, pbp, pbf, gp, gf,
 
 def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                      iters: int, block_n: int, *, w, c1, c2, min_pos,
-                     max_pos, max_v, d_real: int, fitness):
+                     max_pos, max_v, d_real: int, fitness, rule="pso"):
     """The fused queue-lock kernel's exact semantics, eagerly.
 
     Sequential (t, b) loop; gbest is updated in place so later blocks of the
@@ -352,7 +361,8 @@ def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
     vf = kernel_violation(fitness)
     viol = None if vf is None else (lambda p: vf(p, d_real))
     adv = _advance_fn(fitness, w=w, c1=c1, c2=c2, min_pos=min_pos,
-                      max_pos=max_pos, max_v=max_v, d_real=d_real)
+                      max_pos=max_pos, max_v=max_v, d_real=d_real,
+                      rule=resolve_rule(rule))
     pos, vel, pbp, pbf, gp = map(jnp.asarray, (pos, vel, pbp, pbf, gp))
     gf = jnp.asarray(gf)
     pos, vel, pbp, pbf = (np.array(pos), np.array(vel), np.array(pbp),
@@ -390,7 +400,7 @@ def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
 def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                            iters: int, block_n: int, sync_every: int, *,
                            w, c1, c2, min_pos, max_pos, max_v, d_real: int,
-                           fitness):
+                           fitness, rule="pso", topology="gbest"):
     """The async queue-lock kernel's exact semantics, eagerly.
 
     Block-major: block b runs its ENTIRE iteration span (all chunks of
@@ -400,6 +410,12 @@ def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
     (blocks, chunks) grid order bit-for-bit, including the ops-wrapper
     behaviour of running a trailing ``iters % sync_every`` remainder as a
     second block-major phase over all blocks.
+
+    With an lbest ``topology`` (``"ring"`` / ``"vonneumann"``) the chunk
+    entry folds the NEIGHBOR blocks' local slots (same stencil and fold
+    order as the kernel's ``kernel_neighbor_ids`` loop) instead of pulling
+    the shared gbest, which remains a chunk-exit flush target only —
+    mirroring the kernel's block-major diffusion schedule bit-for-bit.
     """
     dpad, n = pos.shape
     nb = n // block_n
@@ -407,7 +423,8 @@ def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
     vf = kernel_violation(fitness)
     viol = None if vf is None else (lambda p: vf(p, d_real))
     adv = _advance_fn(fitness, w=w, c1=c1, c2=c2, min_pos=min_pos,
-                      max_pos=max_pos, max_v=max_v, d_real=d_real)
+                      max_pos=max_pos, max_v=max_v, d_real=d_real,
+                      rule=resolve_rule(rule))
     pos, vel, pbp, pbf, gp = map(jnp.asarray, (pos, vel, pbp, pbf, gp))
     gf = jnp.asarray(gf)
     pos, vel, pbp, pbf = (np.array(pos), np.array(vel), np.array(pbp),
@@ -422,10 +439,18 @@ def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
         for b in range(nb):
             sl = slice(b * block_n, (b + 1) * block_n)
             for c in range(span // k):
-                # chunk entry: pull shared into local
-                if float(gf) > float(lf[b]):
-                    lf[b] = gf
-                    lp[b] = gp
+                if topology == "gbest":
+                    # chunk entry: pull shared into local
+                    if float(gf) > float(lf[b]):
+                        lf[b] = gf
+                        lp[b] = gp
+                else:
+                    # lbest: fold neighbor block-locals, same running-max
+                    # order as the kernel's kernel_neighbor_ids loop
+                    for nbr in kernel_neighbor_ids(b, nb, topology):
+                        if float(lf[nbr]) > float(lf[b]):
+                            lf[b] = lf[nbr]
+                            lp[b] = lp[nbr]
                 for tl in range(k):
                     it = base_iter + it_off + c * k + tl + 1
                     p, v, dmask, lane = adv(

@@ -57,6 +57,13 @@ def main():
                     choices=["reduction", "queue", "queue_lock", "async"])
     ap.add_argument("--sync-every", type=int, default=ASYNC_SYNC_EVERY,
                     help="async variant: iterations between gbest syncs")
+    ap.add_argument("--rule", default="pso",
+                    help="per-particle update rule (pso|sso|lowcost or a "
+                         "custom repro.core.update_rules registration)")
+    ap.add_argument("--topology", default="gbest",
+                    choices=["gbest", "ring", "vonneumann"],
+                    help="async variant: block-neighborhood best pull "
+                         "(lbest topologies need --variant async)")
     ap.add_argument("--kernel", action="store_true",
                     help="use the fused Pallas kernel for local steps")
     ap.add_argument("--islands", type=int, default=0,
@@ -91,8 +98,19 @@ def main():
             fitness = constrain_problem(args.fitness, cset)
         except ValueError as e:
             ap.error(str(e))
+    from repro.core.update_rules import rule_names
+    if args.rule not in rule_names():
+        ap.error(f"unknown update rule {args.rule!r}; "
+                 f"one of {', '.join(rule_names())}")
+    if args.topology != "gbest" and args.variant != "async":
+        ap.error(f"--topology {args.topology} generalizes the async "
+                 f"variant's block-local pull; use --variant async")
+    if args.topology != "gbest" and args.islands:
+        ap.error("--topology applies within one device's block grid; "
+                 "drop --islands (the island ring is its own topology)")
     cfg = PSOConfig(dim=args.dim, particle_cnt=args.particles,
-                    fitness=fitness).resolved()
+                    fitness=fitness, update_rule=args.rule,
+                    topology=args.topology).resolved()
     if args.kernel and not args.islands and args.variant not in (
             "queue_lock", "async"):
         # only the fused queue-lock kernels exist; don't silently run

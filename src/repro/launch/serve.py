@@ -100,6 +100,14 @@ class SolveRequest:
     variant: str = "queue"
     dtype: str = "float32"
     sync_every: int = ASYNC_SYNC_EVERY
+    rule: str = "pso"          # update rule (repro.core.update_rules)
+    topology: str = "gbest"    # async lbest topology (repro.core.topology)
+
+    def _topology_key(self) -> str:
+        """The topology only exists on the async variant's block-local
+        machinery — keying sync requests on it would split identical
+        programs (mirrors the ``sync_every`` rationale above)."""
+        return self.topology if self.variant == "async" else "gbest"
 
     @property
     def batch_key(self) -> Tuple:
@@ -110,7 +118,8 @@ class SolveRequest:
         return (self.dim, self.particle_cnt,
                 resolve_problem(self.fitness).cache_key(), self.iters,
                 self.variant, self.dtype,
-                self.sync_every if self.variant == "async" else 0)
+                self.sync_every if self.variant == "async" else 0,
+                self.rule, self._topology_key())
 
     @property
     def hetero_eligible(self) -> bool:
@@ -124,12 +133,15 @@ class SolveRequest:
         if coalesce_registry and self.hetero_eligible:
             return (self.dim, self.particle_cnt, _HETERO, self.iters,
                     self.variant, self.dtype,
-                    self.sync_every if self.variant == "async" else 0)
+                    self.sync_every if self.variant == "async" else 0,
+                    self.rule, self._topology_key())
         return self.batch_key
 
     def config(self) -> PSOConfig:
         return PSOConfig(dim=self.dim, particle_cnt=self.particle_cnt,
-                         fitness=self.fitness, dtype=self.dtype)
+                         fitness=self.fitness, dtype=self.dtype,
+                         update_rule=self.rule,
+                         topology=self._topology_key())
 
 
 @dataclasses.dataclass
@@ -168,6 +180,35 @@ class SolveResult:
     @property
     def feasible(self) -> bool:
         return self.violation <= 0.0
+
+
+def request_error(r: SolveRequest) -> Optional[Exception]:
+    """Per-request admission validation: the rejection (or None).
+
+    Returned, not raised, so an unknown variant/rule/topology resolves to
+    its OWN error result (``SolveResult.error`` set, ``ok`` False) at
+    flush time instead of poisoning the whole group it would have been
+    batched into — the group-level isolation in ``flush`` only catches
+    solves that raise, and a bad name would otherwise raise while
+    *grouping* (``group_key`` resolves the problem) or compile-key every
+    valid request in the group into the failure."""
+    from repro.core.pso import VARIANTS
+    from repro.core.update_rules import TOPOLOGIES, resolve_rule
+    if r.variant not in VARIANTS:
+        return ValueError(
+            f"unknown variant {r.variant!r}; one of {VARIANTS}")
+    try:
+        resolve_rule(r.rule)
+    except ValueError as e:
+        return e
+    if r.topology not in TOPOLOGIES:
+        return ValueError(
+            f"unknown topology {r.topology!r}; one of {TOPOLOGIES}")
+    try:
+        resolve_problem(r.fitness)
+    except (KeyError, ValueError, TypeError) as e:
+        return e
+    return None
 
 
 @dataclasses.dataclass
@@ -298,7 +339,8 @@ class SolveServer:
                          + [r0.fitness] * (padded - k))
                 cfg = PSOConfig(dim=r0.dim, particle_cnt=r0.particle_cnt,
                                 fitness=_HETERO_CANONICAL_FITNESS,
-                                dtype=r0.dtype)
+                                dtype=r0.dtype, update_rule=r0.rule,
+                                topology=r0._topology_key())
                 batch = self._dispatch_hetero(cfg, seeds, probs, r0)
             else:
                 cfg = r0.config()
@@ -366,11 +408,23 @@ class SolveServer:
         """
         groups: Dict[Tuple, List[Tuple[int, SolveRequest, float]]] = \
             defaultdict(list)
+        results: Dict[int, SolveResult] = {}
         for t, r, ts in self._pending:
+            err = request_error(r)
+            if err is not None:
+                # reject at admission: the bad request gets its own error
+                # result and never joins (or poisons) a dispatch group
+                self.stats.failed += 1
+                if self.metrics is not None:
+                    self.metrics.inc("failed")
+                results[t] = SolveResult(
+                    request=r, gbest_fit=float("nan"),
+                    gbest_pos=np.full((r.dim,), np.nan),
+                    batch_size=0, error=err)
+                continue
             r = self._tuned_request(r)   # tuned sync_every enters group_key
             groups[r.group_key(self.coalesce_registry)].append((t, r, ts))
         self._pending.clear()
-        results: Dict[int, SolveResult] = {}
         for _, members in sorted(groups.items(), key=lambda kv: repr(kv[0])):
             tickets = [t for t, _, _ in members]
             t0 = time.perf_counter()

@@ -20,11 +20,11 @@ from .analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, analyze,
                        collective_bytes, count_active_params, count_params,
                        model_flops)
 from .pso_cost import (DEFAULT_CALIBRATION, Calibration, IterCost, OpMix,
-                       estimate_us_per_iter, fit_calibration,
-                       fitness_op_mix, iteration_cost)
+                       RuleMix, estimate_us_per_iter, fit_calibration,
+                       fitness_op_mix, iteration_cost, rule_op_mix)
 
 __all__ = ["Roofline", "analyze", "collective_bytes", "count_params",
            "count_active_params", "model_flops", "PEAK_FLOPS", "HBM_BW",
            "ICI_BW", "Calibration", "DEFAULT_CALIBRATION", "IterCost",
-           "OpMix", "estimate_us_per_iter", "fit_calibration",
-           "fitness_op_mix", "iteration_cost"]
+           "OpMix", "RuleMix", "estimate_us_per_iter", "fit_calibration",
+           "fitness_op_mix", "iteration_cost", "rule_op_mix"]

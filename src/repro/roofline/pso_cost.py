@@ -82,6 +82,43 @@ HETERO_SWITCH_FLOPS = 16.0
 
 
 @dataclasses.dataclass(frozen=True)
+class RuleMix:
+    """Advance-op mix of one update rule, per particle-dim.
+
+    The aggregation scaffold (queues, local bests, publication) is
+    rule-independent; only the velocity/position chain and the RNG draw
+    count change with ``PSOConfig(update_rule=...)``. Counted from the
+    ``repro.core.update_rules`` source expressions the same way
+    ``FITNESS_MIX`` counts the objectives."""
+
+    vel_flops: float
+    pos_flops: float
+    rng_draws: int = RNG_DRAWS
+
+
+#:   pso      w v + c1 r1 (p-x) + c2 r2 (g-x); clip; x+v; clip  -> 9 + 5
+#:   sso      fresh = lo+(hi-lo)r2 (3); 3 cmp+select (6); clip (2); no vel
+#:   lowcost  2 sub + 2 cmp + 2 select + 2 add (8); clips as pso (5)
+RULE_MIX: Dict[str, RuleMix] = {
+    "pso": RuleMix(VEL_FLOPS, POS_FLOPS),
+    "sso": RuleMix(0.0, 11.0),
+    "lowcost": RuleMix(8.0, POS_FLOPS),
+}
+
+
+def rule_op_mix(rule) -> RuleMix:
+    """Mix for a rule name/instance; unlisted custom rules price as the
+    canonical chain with their own declared ``rng_draws``."""
+    from repro.core.update_rules import resolve_rule
+
+    r = resolve_rule(rule)
+    mix = RULE_MIX.get(r.name)
+    if mix is None:
+        mix = RuleMix(VEL_FLOPS, POS_FLOPS, r.rng_draws)
+    return mix
+
+
+@dataclasses.dataclass(frozen=True)
 class OpMix:
     """Arithmetic mix of one objective evaluation.
 
@@ -215,6 +252,7 @@ def iteration_cost(variant: str, problem, d: int, n: int, *,
                    dtype: str = "float32", backend: str = "jnp",
                    block_n: Optional[int] = None, sync_every: int = 8,
                    batch: int = 1, hetero_table: int = 0,
+                   rule: str = "pso",
                    rare: float = RARE_IMPROVE) -> IterCost:
     """Price one iteration of ``variant`` on ``backend``.
 
@@ -240,9 +278,10 @@ def iteration_cost(variant: str, problem, d: int, n: int, *,
     fit_mult = max(1, hetero_table) if backend == "jnp" else 1
     fit_flops = fit_mult * mix.flops(d, n)
     transc = fit_mult * mix.transcendentals(d, n)
-    adv = n * d * (VEL_FLOPS + POS_FLOPS + PBEST_SELECT_FLOPS)
+    rmix = rule_op_mix(rule)
+    adv = n * d * (rmix.vel_flops + rmix.pos_flops + PBEST_SELECT_FLOPS)
     pbest = n * PBEST_FLOPS_PER_PARTICLE
-    rng = n * d * RNG_DRAWS  # scaled by Calibration.rng_flops at estimate
+    rng = n * d * rmix.rng_draws  # scaled by Calibration.rng_flops later
     if variant == "reduction":
         agg = n + d + 1                      # unconditional argmax + gather
     elif variant in ("queue", "queue_lock"):
@@ -331,13 +370,15 @@ def estimate_us_per_iter(variant: str, problem, d: int, n: int, *,
                          dtype: str = "float32", backend: str = "jnp",
                          block_n: Optional[int] = None, sync_every: int = 8,
                          batch: int = 1, hetero_table: int = 0,
+                         rule: str = "pso",
                          calib: Calibration = DEFAULT_CALIBRATION) -> float:
     """One-call convenience: ``iteration_cost`` -> microseconds."""
     cost = iteration_cost(variant, problem, d, n, dtype=dtype,
                           backend=backend, block_n=block_n,
                           sync_every=sync_every, batch=batch,
-                          hetero_table=hetero_table)
-    return calib.us_per_iter(cost, rng_elems=batch * n * d * RNG_DRAWS)
+                          hetero_table=hetero_table, rule=rule)
+    return calib.us_per_iter(
+        cost, rng_elems=batch * n * d * rule_op_mix(rule).rng_draws)
 
 
 # --------------------------------------------------------------------------

@@ -77,7 +77,7 @@ from repro.core.multi_swarm import (MIN_VALIDATED_SWARMS, ProblemRows,
 from repro.core.pso import (HeteroRow, PSOConfig, init_swarm_async,
                             run_async, solve)
 from repro.launch.serve import (_HETERO, _HETERO_CANONICAL_FITNESS,
-                                SolveRequest, SolveResult)
+                                SolveRequest, SolveResult, request_error)
 
 from .compile_cache import CompileCache
 from .metrics import ServingMetrics
@@ -133,7 +133,8 @@ class _Lane:
                    else "content:" + hashlib.sha1(
                        repr(self.key).encode()).hexdigest()[:16])
         return (f"lane|d{c.dim}|n{c.particle_cnt}|{c.dtype}"
-                f"|se{self.sync_every}|nb{self.nb}|w{self.width}|{content}")
+                f"|se{self.sync_every}|nb{self.nb}|w{self.width}"
+                f"|r{c.update_rule}|t{c.topology}|{content}")
 
 
 class ContinuousScheduler:
@@ -196,7 +197,8 @@ class ContinuousScheduler:
         from repro.core.problem import resolve_problem
         content = _HETERO if hetero else resolve_problem(
             r.fitness).cache_key()
-        return (r.dim, r.particle_cnt, r.dtype, r.sync_every, content)
+        return (r.dim, r.particle_cnt, r.dtype, r.sync_every,
+                r.rule, r._topology_key(), content)
 
     def _lane_for(self, r: SolveRequest) -> _Lane:
         key = self._lane_key(r)
@@ -207,10 +209,13 @@ class ContinuousScheduler:
         if hetero:
             cfg = PSOConfig(dim=r.dim, particle_cnt=r.particle_cnt,
                             fitness=_HETERO_CANONICAL_FITNESS,
-                            dtype=r.dtype)
+                            dtype=r.dtype, update_rule=r.rule,
+                            topology=r._topology_key())
         else:
             cfg = PSOConfig(dim=r.dim, particle_cnt=r.particle_cnt,
-                            fitness=r.fitness, dtype=r.dtype)
+                            fitness=r.fitness, dtype=r.dtype,
+                            update_rule=r.rule,
+                            topology=r._topology_key())
         lane = _Lane(key, cfg, self._width_for(r), r.sync_every, hetero)
         self._lanes[key] = lane
         return lane
@@ -232,6 +237,17 @@ class ContinuousScheduler:
     def _admit(self) -> None:
         still: List[_Active] = []
         for a in self._pending:
+            err = request_error(a.request)
+            if err is not None:
+                # mirror the flush server's admission rejection: a bad
+                # variant/rule/topology gets its own error result and
+                # never reaches a lane or a standalone solve
+                self.metrics.inc("failed")
+                self._results[a.ticket] = SolveResult(
+                    request=a.request, gbest_fit=float("nan"),
+                    gbest_pos=np.full((a.request.dim,), np.nan),
+                    batch_size=0, error=err)
+                continue
             r = self._tuned(a.request)
             if r.variant != "async" or r.iters < max(1, r.sync_every):
                 self._solve_standalone(a, r)
@@ -282,7 +298,8 @@ class ContinuousScheduler:
         a.admitted_us = _now_us()
         self.metrics.observe("queue_us", a.admitted_us - a.submitted_us)
         cfg = PSOConfig(dim=r.dim, particle_cnt=r.particle_cnt,
-                        fitness=r.fitness, dtype=r.dtype)
+                        fitness=r.fitness, dtype=r.dtype,
+                        update_rule=r.rule, topology=r._topology_key())
         st = solve(cfg, r.seed, r.iters, r.variant, r.sync_every)
         self.metrics.inc("standalone_solves")
         self._finish(a, float(st.gbest_fit), np.asarray(st.gbest_pos),

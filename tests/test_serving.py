@@ -269,3 +269,58 @@ def test_buckets_for_autotune_ladder_memoized():
     assert all(b <= 16 for b in ladder)
     assert sorted(ladder) == list(ladder)
     assert srv._buckets_for(r) is ladder   # memoized per shape
+
+
+# -- update-rule / topology plumbing + per-request rejection ---------------
+
+def test_serve_rejects_invalid_requests_per_request():
+    """Unknown variant/rule/topology fail the REQUEST, not the flush:
+    valid requests in the same generation return normally on both front
+    ends, and the bad ticket carries the enumerating error."""
+    from repro.launch.serve import SolveServer
+    from repro.serving import ContinuousScheduler
+    good = [_req(0, 16, variant="queue"), _req(1, 16)]
+    bad = [
+        SolveRequest(dim=DIM, particle_cnt=N, fitness=NAMES[0], seed=7,
+                     iters=16, variant="warp"),
+        SolveRequest(dim=DIM, particle_cnt=N, fitness=NAMES[1], seed=8,
+                     iters=16, variant="queue", rule="warp_speed"),
+        SolveRequest(dim=DIM, particle_cnt=N, fitness=NAMES[2], seed=9,
+                     iters=16, variant="async", sync_every=SE,
+                     topology="hypercube"),
+    ]
+    reqs = [good[0]] + bad + [good[1]]
+    for front_end in (SolveServer().solve_all,
+                      ContinuousScheduler(lane_width=8).run):
+        results = front_end(list(reqs))
+        for res, want in zip(results[1:4], ("variant", "rule", "topology")):
+            assert not res.ok
+            assert want in str(res.error)
+            assert np.isnan(res.gbest_fit)
+        for res, r in ((results[0], good[0]), (results[4], good[1])):
+            assert res.ok
+            st = _standalone(r)
+            assert res.gbest_fit == float(st.gbest_fit)
+
+
+def test_serve_rule_topology_thread_to_engine():
+    """``rule=`` / ``topology=`` on a request reach the engine: each
+    group's answers match the standalone solve with the same PSOConfig
+    (distinct rules/topologies must never share a compiled group)."""
+    from repro.launch.serve import SolveServer
+    combos = [("sso", "gbest"), ("lowcost", "ring"), ("pso", "vonneumann")]
+    reqs = [SolveRequest(dim=DIM, particle_cnt=N, fitness=NAMES[k], seed=k,
+                         iters=16, variant="async", sync_every=SE,
+                         rule=rule, topology=topo)
+            for k, (rule, topo) in enumerate(combos)]
+    srv = SolveServer()
+    results = srv.solve_all(list(reqs))
+    for res, r in zip(results, reqs):
+        assert res.ok
+        cfg = PSOConfig(dim=r.dim, particle_cnt=r.particle_cnt,
+                        fitness=r.fitness, dtype=r.dtype,
+                        update_rule=r.rule, topology=r.topology)
+        st = solve(cfg, r.seed, r.iters, r.variant, r.sync_every)
+        assert res.gbest_fit == float(st.gbest_fit)
+    # one dispatch per (rule, topology): the compile key split them
+    assert srv.stats.dispatches == len(combos)

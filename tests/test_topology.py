@@ -1,12 +1,21 @@
-"""Ring (lbest) topology + multi-swarm portfolio tests."""
+"""Block-neighborhood (lbest) topologies: neighbor-definition unit tests
+shared by both engines, kernel-vs-oracle parity, and end-to-end facade
+runs (the multi-swarm portfolio lives in ``repro.solve_many`` now — the
+legacy ``run_ring``/``run_multi_swarm`` paths were folded into the
+topology + batching layers)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro
+from repro import Method
 from repro.core import PSOConfig, init_swarm
-from repro.core.topology import (best_of_swarms, init_multi_swarm,
-                                 run_multi_swarm, run_ring, step_ring,
-                                 _neighborhood_best)
+from repro.core.pso import run_async
+from repro.core.topology import (_neighborhood_best, block_neighbor_best,
+                                 grid_dims, kernel_neighbor_ids)
+from repro.kernels import ops, ref
+
+TOPOS = ("ring", "vonneumann")
 
 
 def test_neighborhood_best_semantics():
@@ -19,45 +28,152 @@ def test_neighborhood_best_semantics():
     np.testing.assert_array_equal(np.asarray(bp)[:, 0], [1.0, 1.0, 1.0, 2.0])
 
 
-def test_ring_converges():
-    cfg = PSOConfig(dim=1, particle_cnt=128, fitness="cubic").resolved()
-    s = init_swarm(cfg, 0)
-    out = run_ring(cfg, s, 300, radius=2)
-    assert float(out.gbest_fit) == pytest.approx(900000.0, rel=1e-5)
+@pytest.mark.parametrize("nb,want", [(1, (1, 1)), (4, (2, 2)), (6, (2, 3)),
+                                     (8, (2, 4)), (12, (3, 4)), (16, (4, 4)),
+                                     (7, (1, 7)), (36, (6, 6))])
+def test_grid_dims(nb, want):
+    assert grid_dims(nb) == want
+    r, c = grid_dims(nb)
+    assert r * c == nb and r <= c
 
 
-def test_ring_invariants():
-    cfg = PSOConfig(dim=6, particle_cnt=64, fitness="rastrigin").resolved()
-    s = init_swarm(cfg, 7)
-    prev = float(s.gbest_fit)
-    for _ in range(20):
-        s = step_ring(cfg, s, radius=1)
-        assert float(s.gbest_fit) >= prev
-        prev = float(s.gbest_fit)
-        assert np.asarray(s.pos).max() <= cfg.max_pos + 1e-5
-        assert not np.any(np.isnan(np.asarray(s.pos)))
+def _brute_neighbor_best(lbf, lbp, topology):
+    """O(nb²) reference: fold each block's neighborhood explicitly."""
+    nb = lbf.shape[0]
+    out_f, out_p = lbf.copy(), lbp.copy()
+    for b in range(nb):
+        for nbr in kernel_neighbor_ids(b, nb, topology):
+            if lbf[int(nbr)] > out_f[b]:
+                out_f[b] = lbf[int(nbr)]
+                out_p[b] = lbp[int(nbr)]
+    return out_f, out_p
 
 
-def test_ring_propagates_slower_than_star():
-    """Information travels O(N/r): after few iters, a star swarm's worst
-    particle has seen the global best, a ring swarm's hasn't necessarily —
-    but given enough iterations the ring catches up on an easy landscape."""
+@pytest.mark.parametrize("topology", TOPOS)
+@pytest.mark.parametrize("nb", [4, 6, 8, 12])
+def test_block_neighbor_best_matches_kernel_neighbor_ids(topology, nb):
+    """The jnp roll-fold and the kernels' explicit neighbor-id fold
+    implement the SAME neighbor definition."""
+    rng = np.random.default_rng(nb)
+    lbf = rng.standard_normal(nb).astype(np.float32)
+    lbp = rng.standard_normal((nb, 3)).astype(np.float32)
+    lbp2, lbf2 = block_neighbor_best(jnp.asarray(lbf), jnp.asarray(lbp),
+                                     topology)
+    want_f, want_p = _brute_neighbor_best(lbf, lbp, topology)
+    np.testing.assert_array_equal(np.asarray(lbf2), want_f)
+    np.testing.assert_array_equal(np.asarray(lbp2), want_p)
+    # self is always in the neighborhood: locals never regress
+    assert np.all(np.asarray(lbf2) >= lbf)
+
+
+@pytest.mark.parametrize("topology", TOPOS)
+def test_kernel_neighbor_ids_shape(topology):
+    nb = 8
+    for b in range(nb):
+        ids = tuple(int(i) for i in kernel_neighbor_ids(b, nb, topology))
+        assert all(0 <= i < nb for i in ids)
+        assert b not in ids                    # excludes self
+    assert len(kernel_neighbor_ids(0, nb, "ring")) == 2
+    assert len(kernel_neighbor_ids(0, nb, "vonneumann")) == 4
+    with pytest.raises(ValueError, match="topology"):
+        kernel_neighbor_ids(0, nb, "hypercube")
+    with pytest.raises(ValueError, match="topology"):
+        block_neighbor_best(jnp.zeros(4), jnp.zeros((4, 2)), "hypercube")
+
+
+# --------------------------------------------------------------------------
+# lbest async: kernel vs eager oracle, jnp engine vs eager oracle
+# --------------------------------------------------------------------------
+
+def _oracle_inputs(cfg, seed):
+    s0 = init_swarm(cfg, seed)
+    scal, pos, vel, pbp, pbf, gp, gf = ops.state_to_kernel(s0, cfg.dim)
+    kw = ops._cfg_kwargs(cfg)
+    kw["d_real"] = cfg.dim
+    fitness = kw.pop("fitness")
+    return s0, (pos, vel, pbp, pbf, gp, float(gf[0])), fitness, kw
+
+
+@pytest.mark.parametrize("topology", TOPOS)
+@pytest.mark.parametrize("rule", ["pso", "sso"])
+def test_lbest_async_kernel_vs_oracle(topology, rule):
+    """4-block async kernel with a neighborhood pull, ulp-tight vs the
+    eager oracle that folds the same kernel_neighbor_ids order (the
+    compiled-vs-eager FMA-contraction caveat bounds the tolerance)."""
+    cfg = PSOConfig(dim=3, particle_cnt=128, fitness="rastrigin",
+                    update_rule=rule, topology=topology).resolved()
+    s0, (pos, vel, pbp, pbf, gp, gf), fitness, kw = _oracle_inputs(cfg, 2)
+    out = ops.run_queue_lock_fused_async(cfg, s0, iters=8, sync_every=4,
+                                         block_n=32)
+    o = ref.run_fused_async_oracle(int(s0.seed), 0, pos, vel, pbp, pbf, gp,
+                                   gf, 8, 32, 4, fitness=fitness,
+                                   topology=topology, **kw)
+    np.testing.assert_allclose(np.asarray(ops.pack_dmajor(out.pos, 3)),
+                               np.asarray(o[0]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out.pbest_fit),
+                               np.asarray(o[3])[0], rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(float(out.gbest_fit), float(o[5]), rtol=1e-5)
+
+
+@pytest.mark.parametrize("topology", TOPOS)
+def test_lbest_async_jnp_vs_oracle(topology):
+    """The jnp engine's lbest pull (publish-then-neighborhood-fold),
+    dispatched per iteration, matches the eager oracle bit-exactly."""
+    cfg = PSOConfig(dim=5, particle_cnt=64, fitness="sphere",
+                    topology=topology).resolved()
+    iters = 12
+    o = ref.run_constrained_oracle(cfg, 3, iters, variant="async",
+                                   sync_every=4, n_blocks=4)
+    s = init_swarm(cfg, 3)
+    for _ in range(iters):
+        s = run_async(cfg, s, 1, sync_every=4, n_blocks=4)
+    assert np.array_equal(np.asarray(s.pos), np.asarray(o.pos))
+    assert np.array_equal(np.asarray(s.lbest_fit), np.asarray(o.lbest_fit))
+    assert float(s.gbest_fit) == float(o.gbest_fit)
+
+
+def test_lbest_gbest_flush_monotone_and_diffusive():
+    """The shared gbest is still flushed every sync under lbest pulls:
+    monotone trajectory, and the ring eventually converges on an easy
+    landscape (knowledge diffuses hop by hop)."""
     cfg = PSOConfig(dim=2, particle_cnt=256, fitness="sphere",
-                    w=0.7).resolved()
-    s0 = init_swarm(cfg, 3)
-    from repro.core.pso import run
-    star = run(cfg, s0, 150, "queue")
-    ring = run_ring(cfg, s0, 150, radius=1)
-    assert float(star.gbest_fit) > -1e-2
-    assert float(ring.gbest_fit) > -1.0      # converging, more slowly
+                    w=0.7, topology="ring").resolved()
+    s = init_swarm(cfg, 3)
+    prev = float(s.gbest_fit)
+    for _ in range(30):
+        s = run_async(cfg, s, 4, sync_every=4, n_blocks=8)
+        assert float(s.gbest_fit) >= prev - 1e-7
+        prev = float(s.gbest_fit)
+        assert not np.any(np.isnan(np.asarray(s.pos)))
+    assert float(s.gbest_fit) > -1.0           # converging
 
 
-def test_multi_swarm_portfolio():
-    cfg = PSOConfig(dim=3, particle_cnt=64, fitness="ackley").resolved()
-    states = init_multi_swarm(cfg, [0, 1, 2, 3])
-    out = run_multi_swarm(cfg, states, 100, "queue")
-    assert out.pos.shape == (4, 64, 3)
-    bf, bp = best_of_swarms(out)
-    assert float(bf) >= float(jnp.max(out.gbest_fit)) - 1e-6
-    # portfolio best must beat (or tie) every individual swarm
-    assert all(float(bf) >= float(f) for f in out.gbest_fit)
+@pytest.mark.parametrize("backend", ["jnp", "kernel"])
+@pytest.mark.parametrize("topology", TOPOS)
+def test_lbest_end_to_end_facade(backend, topology):
+    res = repro.solve("cubic", dim=2, particles=128, iters=40, seed=0,
+                      method=Method(variant="async", backend=backend,
+                                    topology=topology))
+    assert res.config.topology == topology
+    s0 = init_swarm(res.config, 0)
+    assert float(res.state.gbest_fit) >= float(s0.gbest_fit)
+    pos = np.asarray(res.state.pos)
+    assert np.all(pos >= res.config.min_pos - 1e-5)
+    assert np.all(pos <= res.config.max_pos + 1e-5)
+
+
+def test_portfolio_via_solve_many():
+    """The old multi-swarm portfolio (same problem, independent seeds,
+    best-of) is now spelled with the batched facade."""
+    seeds = [0, 1, 2, 3]
+    rows = repro.solve_many("ackley", dim=3, particles=64, iters=100,
+                            seeds=seeds, variant="queue")
+    fits = [float(r.state.gbest_fit) for r in rows]
+    best = max(fits)
+    # portfolio best must beat (or tie) every individual swarm, and match
+    # an independent single solve of the winning seed
+    assert all(best >= f for f in fits)
+    win = seeds[int(np.argmax(fits))]
+    solo = repro.solve("ackley", dim=3, particles=64, iters=100, seed=win,
+                       variant="queue")
+    np.testing.assert_allclose(best, float(solo.state.gbest_fit), rtol=1e-5)
