@@ -15,8 +15,8 @@
             server on ONE mixed trace (six built-ins x four iteration
             budgets, staggered waves): requests/s, e2e p50/p99, batch
             fill per leg (benchmarks/loadgen.py; steady-state pass).
-            Warn-only in compare.py until it accumulates noise-floor
-            history.
+            Hard-gated in CI (promoted from warn-only after a cycle of
+            baseline-refresh history).
   async_sweep — the enhanced (asynchronous) queue-lock: per-iteration cost
             and solution quality vs the synchronous kernel across
             sync_every ∈ {1, 4, 16, 64}. Fewer chunk boundaries = fewer
@@ -40,6 +40,11 @@
             landscape — per-rule us/iter plus final gbest when each rule
             spends the default rule's time budget. Warn-only in
             compare.py until it accumulates noise-floor history.
+  telemetry — in-kernel contention-counter overhead: the fused
+            queue-lock kernel with counters off (A/A control; CI asserts
+            the disabled ratio ≤ 1.05) vs counters on (real enabled
+            ratio + counter totals). Warn-only in compare.py until it
+            accumulates noise-floor history; docs/observability.md.
   lm_bench— LM substrate micro-bench (tokens/s on the smoke configs).
 
 Cross-PR trend: ``compare.py OLD.json NEW.json`` diffs two artifacts
@@ -575,6 +580,44 @@ def portfolio(smoke=False) -> None:
              gbest_gap_vs_pso=quality["pso"] - quality[r])
 
 
+def telemetry_bench(smoke=False) -> None:
+    """Telemetry overhead: the in-kernel contention-counter plumbing.
+
+    ``telemetry/.../off`` times the fused queue-lock kernel with
+    counters disabled. The disabled program lowers bit-identically to
+    the pre-telemetry kernel (digest-pinned in tests/test_kernels.py),
+    so the ``disabled_ratio`` derived column is an A/A control — the
+    same program timed twice — and its value is the runner's timing
+    noise floor. CI asserts it stays ≤ 1.05 (the ≤5% budget for the
+    disabled path; the digest pin is the structural zero-overhead
+    guarantee). ``.../on`` times the counter-instrumented program and
+    reports the real ``enabled_ratio`` plus the counter totals.
+    Warn-only in compare.py until it accumulates noise-floor history.
+    """
+    from repro.core import PSOConfig, init_swarm
+    from repro.kernels.ops import run_queue_lock_fused
+    from repro.telemetry import KernelCounters
+    dim, particles = 8, 512
+    iters = 8 if smoke else 32
+    cfg = PSOConfig(dim=dim, particle_cnt=particles,
+                    fitness="rastrigin").resolved()
+    s0 = init_swarm(cfg, 0)
+    t_off = _time(lambda: jax.block_until_ready(
+        run_queue_lock_fused(cfg, s0, iters=iters).gbest_fit))
+    t_off2 = _time(lambda: jax.block_until_ready(
+        run_queue_lock_fused(cfg, s0, iters=iters).gbest_fit))
+    t_on = _time(lambda: jax.block_until_ready(
+        run_queue_lock_fused(cfg, s0, iters=iters,
+                             telemetry=True)[0].gbest_fit))
+    _, cnt = run_queue_lock_fused(cfg, s0, iters=iters, telemetry=True)
+    c = KernelCounters.from_array(cnt)
+    tag = f"telemetry/queue_lock_d{dim}_n{particles}"
+    emit(f"{tag}/off", 1e6 * t_off / iters,
+         disabled_ratio=t_off2 / t_off)
+    emit(f"{tag}/on", 1e6 * t_on / iters,
+         enabled_ratio=t_on / t_off, **c.as_dict())
+
+
 def lm_bench() -> None:
     """LM substrate: smoke-config train-step tokens/s per arch family."""
     from repro.configs import get_arch
@@ -616,6 +659,7 @@ def main() -> None:
     constrained(args.smoke)
     autotune_bench(args.smoke)
     portfolio(args.smoke)
+    telemetry_bench(args.smoke)
     if not args.smoke:
         lm_bench()
     if args.out:

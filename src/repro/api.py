@@ -37,27 +37,30 @@ penalty ramp is applied here, by segmenting the run into static-weight
 segments (each a plain solve on any backend) and re-weighting the carried
 fitness at boundaries. ``Method(record_history=True)`` additionally
 records the gbest-per-sync-point trajectory (``Result.history``,
-``Result.first_feasible_iter``) through the jnp engines.
+``Result.first_feasible_iter``) on every single-device backend — the jnp
+engines scan it in-program; the kernel backend chunks the launch at sync
+points and reads the gbest back at each boundary.
+``Method(telemetry=True)`` threads the in-kernel contention counters
+(queue updates / gbest publications / per-block improvement events —
+``repro.telemetry``) through the fused Pallas kernels onto
+``Result.telemetry``.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.multi_swarm import (SwarmBatch, batch_row, init_batch,
-                                    run_many)
+                                    run_many, run_many_with_history)
 from repro.core.problem import Problem, resolve_problem
 from repro.core.pso import (ASYNC_SYNC_EVERY, PSOConfig, SwarmState,
                             VARIANTS, init_swarm, run, run_with_history)
 from repro.core.update_rules import (TOPOLOGIES, resolve_rule, rule_names)
+from repro.telemetry import KernelCounters
 
 _KERNEL_VARIANTS = ("queue_lock", "async")
-
-# one-time: Method(backend="auto", record_history=True) forcing jnp
-_WARNED_HISTORY_FORCES_JNP = False
 
 
 def _default_backend() -> str:
@@ -71,11 +74,12 @@ class Method:
 
     ``backend="auto"`` applies the fixed rule: the kernel backend on an
     actual TPU for the two fused variants (``queue_lock``/``async``), jnp
-    everywhere else — EXCEPT when ``record_history=True``, which always
-    resolves to jnp (history is a jnp-engine feature: the fused Pallas
-    kernels never surface per-iteration gbest, so auto must not pick the
-    kernel and then reject its own choice; ``resolve_backend`` warns once
-    when this rule overrides what auto would otherwise pick).
+    everywhere else — EXCEPT when ``telemetry=True``, which always
+    resolves to the kernel (the contention counters are collected inside
+    the fused Pallas kernels; on non-TPU hosts the kernel runs in
+    interpret mode). ``record_history=True`` works on either backend: the
+    jnp engines scan the trajectory in-program, the kernel backend chunks
+    its launch at sync points with a gbest readback per boundary.
 
     ``schedule="auto"`` goes further: instead of the fixed rule, the
     roofline autotuner (``repro.core.autotune``) picks the whole
@@ -103,7 +107,9 @@ class Method:
     islands: int = 0                      # >0: shard over this many devices
     exchange_interval: int = 1            # iterations between island syncs
     record_history: bool = False          # Result.history: gbest per sync
-    # point (jnp single-swarm engines only — see run_with_history)
+    # point (any single-device backend; islands do not surface it)
+    telemetry: bool = False               # Result.telemetry: in-kernel
+    # contention counters (kernel backend only — repro.telemetry)
     schedule: str = "fixed"               # fixed | auto (roofline autotuner)
     rule: str = "pso"                     # per-particle update rule
     # (repro.core.update_rules: pso | sso | lowcost | custom registrations)
@@ -130,12 +136,27 @@ class Method:
                 f"{_KERNEL_VARIANTS}, not {self.variant!r}; use "
                 f"backend='jnp'/'auto' for the other members of {VARIANTS}")
         r = resolve_rule(self.rule)       # raises listing rule_names()
-        if self.backend == "kernel" and not r.kernel_eligible:
+        if (self.backend == "kernel" or self.telemetry) \
+                and not r.kernel_eligible:
             eligible = tuple(n for n in rule_names()
                              if resolve_rule(n).kernel_eligible)
             raise ValueError(
                 f"update rule {r.name!r} is not kernel-eligible; "
                 f"kernel-eligible rules: {eligible} — use backend='jnp'")
+        if self.telemetry and self.variant not in _KERNEL_VARIANTS:
+            raise ValueError(
+                f"telemetry counters are collected inside the fused Pallas "
+                f"kernels, which implement {_KERNEL_VARIANTS} — "
+                f"variant={self.variant!r} has no kernel to count in")
+        if self.telemetry and self.backend == "jnp":
+            raise ValueError(
+                "telemetry counters are collected inside the fused Pallas "
+                "kernels; use backend='kernel' or 'auto' (auto resolves to "
+                "the kernel when telemetry is on)")
+        if self.telemetry and self.islands:
+            raise ValueError(
+                "telemetry counters are single-device only (the island "
+                "runners do not thread the counter outputs)")
         if self.topology not in TOPOLOGIES:
             raise ValueError(
                 f"unknown topology {self.topology!r}; one of {TOPOLOGIES}")
@@ -155,36 +176,18 @@ class Method:
                 "async islands run the jnp ring local loop; use "
                 "backend='auto'/'jnp' (the Pallas async kernel has no "
                 "multi-device ring yet)")
-        if self.record_history and self.backend == "kernel":
-            raise ValueError(
-                "record_history is a jnp-engine feature (the fused Pallas "
-                "kernels never surface per-iteration gbest); use "
-                "backend='jnp'")
         if self.record_history and self.islands:
             raise ValueError(
                 "record_history is single-device only (the island runners "
-                "do not surface per-iteration gbest)")
+                "do not surface per-iteration gbest); drop islands= or "
+                "record the trajectory from a single-device solve")
 
     def resolve_backend(self) -> str:
         if self.backend != "auto":
             return self.backend
-        if self.record_history:
-            # history is a jnp-engine feature: auto must not pick the
-            # kernel on TPU and then reject its own choice
-            global _WARNED_HISTORY_FORCES_JNP
-            if not _WARNED_HISTORY_FORCES_JNP and \
-                    self.variant in _KERNEL_VARIANTS:
-                _WARNED_HISTORY_FORCES_JNP = True
-                warnings.warn(
-                    "Method(backend='auto', record_history=True) always "
-                    "resolves to the jnp engine — on a TPU the "
-                    f"{self.variant!r} Pallas kernel would normally win, "
-                    "but the fused kernels never surface the "
-                    "per-iteration gbest that Result.history needs. Pass "
-                    "record_history=False to allow the kernel, or "
-                    "backend='jnp' to silence this.",
-                    stacklevel=2)
-            return "jnp"
+        if self.telemetry:
+            # the contention counters only exist inside the fused kernels
+            return "kernel"
         if self.variant in _KERNEL_VARIANTS and _default_backend() == "tpu":
             return "kernel"
         return "jnp"
@@ -205,9 +208,9 @@ class Method:
                             block_n=self.block_n,
                             sync_every=self.sync_every, source="fixed")
         kernel_ok = None
-        if self.backend == "jnp" or self.record_history:
+        if self.backend == "jnp":
             kernel_ok = False
-        elif self.backend == "kernel":
+        elif self.backend == "kernel" or self.telemetry:
             kernel_ok = True
         return resolve_schedule(
             problem, d, n, iters, dtype=dtype, batch=batch,
@@ -243,7 +246,9 @@ class Result:
     Constrained problems additionally report ``feasible``/``violation``
     (the Deb-rule inputs — see ``repro.core.constraints``), and
     ``history``/``first_feasible_iter`` when the solve ran with
-    ``Method(record_history=True)``."""
+    ``Method(record_history=True)``. ``telemetry`` carries the in-kernel
+    contention counters (``repro.telemetry.KernelCounters``) when the
+    solve ran with ``Method(telemetry=True)``."""
 
     problem: Problem
     config: PSOConfig
@@ -251,6 +256,7 @@ class Result:
     iters: int
     state: SwarmState
     history: Optional[History] = None
+    telemetry: Optional[KernelCounters] = None
 
     @property
     def best_fit(self) -> float:
@@ -317,11 +323,12 @@ def _jnp_async_blocks(m: Method, n: int) -> Optional[int]:
 
 def _make_method(method: Optional[Method], variant, backend, sync_every,
                  block_n, interpret, record_history=None,
-                 schedule=None, rule=None, topology=None) -> Method:
+                 schedule=None, rule=None, topology=None,
+                 telemetry=None) -> Method:
     explicit = dict(variant=variant, backend=backend, sync_every=sync_every,
                     block_n=block_n, interpret=interpret,
                     record_history=record_history, schedule=schedule,
-                    rule=rule, topology=topology)
+                    rule=rule, topology=topology, telemetry=telemetry)
     given = {k: v for k, v in explicit.items() if v is not None}
     if method is not None:
         if given:
@@ -360,7 +367,8 @@ def solve(problem: Union[str, Problem], *,
           record_history: Optional[bool] = None,
           schedule: Optional[str] = None,
           rule: Optional[str] = None,
-          topology: Optional[str] = None) -> Result:
+          topology: Optional[str] = None,
+          telemetry: Optional[bool] = None) -> Result:
     """Solve ``problem`` with ``particles`` particles for ``iters``
     iterations. Either pass a full ``method=Method(...)`` or the loose
     ``variant=``/``backend=``/... kwargs (not both). ``dim`` defaults to
@@ -370,18 +378,19 @@ def solve(problem: Union[str, Problem], *,
     """
     prob = resolve_problem(problem)
     m = _make_method(method, variant, backend, sync_every, block_n,
-                     interpret, record_history, schedule, rule, topology)
+                     interpret, record_history, schedule, rule, topology,
+                     telemetry)
     cfg = _make_config(prob, dim, particles, w, c1, c2, dtype,
                        min_pos, max_pos, max_v, m)
     m = _effective_method(m, prob, cfg, iters)
     if m.islands:
         state = _run_islands(prob, cfg, seed, iters, m)
-        hist = None
+        hist, tel = None, None
     else:
         state = init_swarm(cfg, seed)
-        state, hist = _run_segmented(prob, cfg, state, iters, m)
+        state, hist, tel = _run_segmented(prob, cfg, state, iters, m)
     return Result(problem=prob, config=cfg, method=m, iters=iters,
-                  state=state, history=hist)
+                  state=state, history=hist, telemetry=tel)
 
 
 def _run_islands(prob: Problem, cfg: PSOConfig, seed: int, iters: int,
@@ -486,38 +495,98 @@ def _ramp_loop(prob: Problem, cfg: PSOConfig, state, iters: int,
     return state, hists
 
 
+def _sum_counters(cnts):
+    """Fold per-segment counter records into one (None when empty)."""
+    total = None
+    for c in cnts:
+        total = c if total is None else total + c
+    return total
+
+
 def _run_segmented(prob: Problem, cfg: PSOConfig, state: SwarmState,
                    iters: int, m: Method):
-    state, hists = _ramp_loop(
-        prob, cfg, state, iters,
-        lambda c, s, k: _run_state(c, s, k, m), _reweight_state)
+    cnts = []
+
+    def seg(c, s, k):
+        s, h, cnt = _run_state(c, s, k, m)
+        if cnt is not None:
+            cnts.append(cnt)
+        return s, h
+
+    state, hists = _ramp_loop(prob, cfg, state, iters, seg, _reweight_state)
+    tel = _sum_counters(cnts)
     if not hists:
-        return state, None
+        return state, None, tel
     return state, History(
         iteration=np.concatenate([h[0] for h in hists]),
         gbest_fit=np.concatenate([h[1] for h in hists]),
         violation=(None if hists[0][2] is None
-                   else np.concatenate([h[2] for h in hists])))
+                   else np.concatenate([h[2] for h in hists]))), tel
 
 
 def _run_state(cfg: PSOConfig, state: SwarmState, iters: int, m: Method):
+    """One static-weight segment -> (state, history-or-None,
+    KernelCounters-or-None)."""
+    if m.resolve_backend() == "kernel":
+        return _run_state_kernel(cfg, state, iters, m)
     if m.record_history:
-        # Method validation + resolve_backend guarantee the jnp engine here
         state, (its, fits, viols) = run_with_history(
             cfg, state, iters, m.variant, sync_every=m.sync_every)
         return state, (np.asarray(its, dtype=np.int64), np.asarray(fits),
-                       None if viols is None else np.asarray(viols))
-    if m.resolve_backend() == "kernel":
-        from repro.kernels.ops import (run_queue_lock_fused,
-                                       run_queue_lock_fused_async)
+                       None if viols is None else np.asarray(viols)), None
+    return run(cfg, state, iters, m.variant, sync_every=m.sync_every,
+               n_blocks=_jnp_async_blocks(m, state.pos.shape[0])), None, None
+
+
+def _run_state_kernel(cfg: PSOConfig, state: SwarmState, iters: int,
+                      m: Method):
+    """The kernel-backend segment runner, optionally threading the
+    in-kernel telemetry counters and/or recording the gbest trajectory.
+
+    History chunks the launch at sync points with a gbest readback per
+    boundary: every grid step for the fused sync kernel (its grid is
+    iteration-major, so chunking the host loop is bit-exact) and every
+    ``sync_every`` boundary for async (the chunk seams coincide with the
+    kernel's own block-resident chunks; exact for a single particle block,
+    a more-synchronous interleaving for multi-block layouts — see
+    ``kernels.ops.run_queue_lock_fused_async``). Counters are additive, so
+    per-chunk counts sum to the uninterrupted run's."""
+    from repro.kernels.ops import (run_queue_lock_fused,
+                                   run_queue_lock_fused_async)
+    interp = m.resolve_interpret()
+
+    def launch(s, k):
         if m.variant == "async":
             return run_queue_lock_fused_async(
-                cfg, state, iters, sync_every=m.sync_every,
-                block_n=m.block_n, interpret=m.resolve_interpret()), None
-        return run_queue_lock_fused(cfg, state, iters, block_n=m.block_n,
-                                    interpret=m.resolve_interpret()), None
-    return run(cfg, state, iters, m.variant, sync_every=m.sync_every,
-               n_blocks=_jnp_async_blocks(m, state.pos.shape[0])), None
+                cfg, s, k, sync_every=m.sync_every, block_n=m.block_n,
+                interpret=interp, telemetry=m.telemetry)
+        return run_queue_lock_fused(cfg, s, k, block_n=m.block_n,
+                                    interpret=interp, telemetry=m.telemetry)
+
+    if not m.record_history:
+        if m.telemetry:
+            state, cnt = launch(state, iters)
+            return state, None, KernelCounters.from_array(cnt)
+        return launch(state, iters), None, None
+    vf = cfg.problem.violation_fn
+    stride = max(1, m.sync_every) if m.variant == "async" else 1
+    its, fits, viols, cnts = [], [], [], []
+    done = 0
+    while done < iters:
+        k = min(stride, iters - done)
+        if m.telemetry:
+            state, cnt = launch(state, k)
+            cnts.append(KernelCounters.from_array(cnt))
+        else:
+            state = launch(state, k)
+        done += k
+        its.append(int(state.iteration))
+        fits.append(np.asarray(state.gbest_fit))
+        viols.append(np.asarray(vf(state.gbest_pos))
+                     if vf is not None else 0.0)
+    hist = (np.asarray(its, dtype=np.int64), np.asarray(fits),
+            np.asarray(viols) if cfg.problem.constrained else None)
+    return state, hist, _sum_counters(cnts)
 
 
 def solve_many(problem: Union[str, Problem, None] = None,
@@ -534,9 +603,11 @@ def solve_many(problem: Union[str, Problem, None] = None,
                w: Optional[float] = None, c1: Optional[float] = None,
                c2: Optional[float] = None, dtype: str = "float32",
                min_pos=None, max_pos=None, max_v=None,
+               record_history: Optional[bool] = None,
                schedule: Optional[str] = None,
                rule: Optional[str] = None,
-               topology: Optional[str] = None) -> List[Result]:
+               topology: Optional[str] = None,
+               telemetry: Optional[bool] = None) -> List[Result]:
     """Batched facade: one independent solve per entry of ``seeds``, all in
     ONE device program (vmapped jnp engine, or the batched fused/async
     Pallas kernels for ``backend="kernel"``). Row ``s`` is bit-identical to
@@ -555,14 +626,11 @@ def solve_many(problem: Union[str, Problem, None] = None,
     envelope).
     """
     m = _make_method(method, variant, backend, sync_every, block_n,
-                     interpret, schedule=schedule, rule=rule,
-                     topology=topology)
+                     interpret, record_history, schedule, rule, topology,
+                     telemetry)
     if m.islands:
         raise ValueError("islands shard ONE swarm over devices; use solve()"
                          " — solve_many batches independent swarms instead")
-    if m.record_history:
-        raise ValueError("record_history is a solve()-only feature (the "
-                         "batch engine does not surface per-row histories)")
     if (problem is None) == (problems is None):
         raise ValueError(
             "pass exactly one of problem= (homogeneous batch) or "
@@ -576,13 +644,43 @@ def solve_many(problem: Union[str, Problem, None] = None,
                        min_pos, max_pos, max_v, m)
     m = _effective_method(m, prob, cfg, iters, batch=len(seeds))
     batch = init_batch(cfg, np.asarray(seeds, dtype=np.int64))
-    batch, _ = _ramp_loop(
-        prob, cfg, batch, iters,
-        lambda c, b, k: (_run_batch(c, b, k, m, coeffs), None),
-        _reweight_batch)
+    cnts = []
+
+    def seg(c, b, k):
+        b, h, cnt = _run_batch(c, b, k, m, coeffs)
+        if cnt is not None:
+            cnts.append(cnt)
+        return b, h
+
+    batch, hists = _ramp_loop(prob, cfg, batch, iters, seg, _reweight_batch)
+    rows_hist = _row_histories(hists, batch.swarm_cnt)
+    rows_tel = _row_counters(cnts, batch.swarm_cnt)
     return [Result(problem=prob, config=cfg, method=m, iters=iters,
-                   state=batch_row(batch, s))
+                   state=batch_row(batch, s), history=rows_hist[s],
+                   telemetry=rows_tel[s])
             for s in range(batch.swarm_cnt)]
+
+
+def _row_histories(hists, s_cnt: int) -> List[Optional[History]]:
+    """Per-row History objects from per-segment ``(its, [K,S] fits,
+    [K,S] viols|None)`` records (all-None when no history was recorded)."""
+    if not hists:
+        return [None] * s_cnt
+    its = np.concatenate([np.asarray(h[0], dtype=np.int64) for h in hists])
+    fits = np.concatenate([np.asarray(h[1]) for h in hists])
+    viols = (None if hists[0][2] is None
+             else np.concatenate([np.asarray(h[2]) for h in hists]))
+    return [History(iteration=its, gbest_fit=fits[:, s],
+                    violation=None if viols is None else viols[:, s])
+            for s in range(s_cnt)]
+
+
+def _row_counters(cnts, s_cnt: int) -> List[Optional[KernelCounters]]:
+    """Per-row KernelCounters from per-segment ``[S, 3]`` count arrays."""
+    total = _sum_counters([np.asarray(c) for c in cnts])
+    if total is None:
+        return [None] * s_cnt
+    return [KernelCounters.from_array(total[s]) for s in range(s_cnt)]
 
 
 def _solve_many_hetero(problems, seeds, m: Method, dim, particles, iters,
@@ -609,24 +707,31 @@ def _solve_many_hetero(problems, seeds, m: Method, dim, particles, iters,
     m = _effective_method(m, probs[0], cfg, iters, batch=len(seeds),
                           hetero_table=len({p.cache_key() for p in probs}))
     seeds_arr = np.asarray(seeds, dtype=np.int64)
+    hists, cnts = [], []
     if m.resolve_backend() == "kernel":
         if coeffs is not None:
             raise ValueError("per-swarm coeffs are a jnp-backend feature")
         from repro.core.multi_swarm import problem_rows
-        from repro.kernels.ops import (run_queue_lock_fused_batch,
-                                       run_queue_lock_fused_async_batch)
         rows, table = problem_rows(probs, cfg.dim, cfg.dtype)
         rcfg = cfg.resolved()
         batch = init_batch(rcfg, seeds_arr, rows=rows, table=table)
-        if m.variant == "async":
-            batch = run_queue_lock_fused_async_batch(
-                rcfg, batch, iters, sync_every=m.sync_every,
-                block_n=m.block_n, interpret=m.resolve_interpret(),
-                fids=rows.fid, table=table)
-        else:
-            batch = run_queue_lock_fused_batch(
-                rcfg, batch, iters, block_n=m.block_n,
-                interpret=m.resolve_interpret(), fids=rows.fid, table=table)
+        batch, hist, cnt = _run_batch_kernel(rcfg, batch, iters, m,
+                                             rows=rows, table=table)
+        if hist is not None:
+            hists.append(hist)
+        if cnt is not None:
+            cnts.append(cnt)
+    elif m.record_history:
+        from repro.core.multi_swarm import problem_rows
+        rows, table = problem_rows(probs, cfg.dim, cfg.dtype)
+        rcfg = cfg.resolved()
+        batch = init_batch(rcfg, seeds_arr, rows=rows, table=table)
+        batch, (its, fits, viols) = run_many_with_history(
+            rcfg, batch, iters, m.variant, coeffs,
+            sync_every=m.sync_every, rows=rows, table=table,
+            n_blocks=_jnp_async_blocks(m, cfg.particle_cnt))
+        hists.append((np.asarray(its, dtype=np.int64), np.asarray(fits),
+                      None if viols is None else np.asarray(viols)))
     else:
         from repro.core.multi_swarm import solve_many as _core_solve_many
         batch = _core_solve_many(cfg, seeds_arr, iters=iters,
@@ -634,9 +739,12 @@ def _solve_many_hetero(problems, seeds, m: Method, dim, particles, iters,
                                  sync_every=m.sync_every, problems=probs,
                                  n_blocks=_jnp_async_blocks(
                                      m, cfg.particle_cnt))
+    rows_hist = _row_histories(hists, batch.swarm_cnt)
+    rows_tel = _row_counters(cnts, batch.swarm_cnt)
     return [Result(problem=probs[s],
                    config=hetero_member_config(cfg, probs[s]),
-                   method=m, iters=iters, state=batch_row(batch, s))
+                   method=m, iters=iters, state=batch_row(batch, s),
+                   history=rows_hist[s], telemetry=rows_tel[s])
             for s in range(batch.swarm_cnt)]
 
 
@@ -657,28 +765,80 @@ def _reweight_batch(cfg: PSOConfig, batch: SwarmBatch) -> SwarmBatch:
 
 
 def _run_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int, m: Method,
-               coeffs) -> SwarmBatch:
+               coeffs):
+    """One static-weight batched segment -> (batch, history-or-None,
+    [S, 3] counter rows or None)."""
     if m.resolve_backend() == "kernel":
         if coeffs is not None:
             raise ValueError("per-swarm coeffs are a jnp-backend feature")
-        from repro.kernels.ops import (run_queue_lock_fused_batch,
-                                       run_queue_lock_fused_async_batch)
-        if m.variant == "async":
-            return run_queue_lock_fused_async_batch(
-                cfg, batch, iters, sync_every=m.sync_every,
-                block_n=m.block_n, interpret=m.resolve_interpret())
-        return run_queue_lock_fused_batch(
-            cfg, batch, iters, block_n=m.block_n,
-            interpret=m.resolve_interpret())
+        return _run_batch_kernel(cfg, batch, iters, m)
+    if m.record_history:
+        batch, (its, fits, viols) = run_many_with_history(
+            cfg, batch, iters, m.variant, coeffs, sync_every=m.sync_every,
+            n_blocks=_jnp_async_blocks(m, batch.pos.shape[1]))
+        return batch, (np.asarray(its, dtype=np.int64), np.asarray(fits),
+                       None if viols is None else np.asarray(viols)), None
     return run_many(cfg, batch, iters, m.variant, coeffs,
                     sync_every=m.sync_every,
-                    n_blocks=_jnp_async_blocks(m, batch.pos.shape[1]))
+                    n_blocks=_jnp_async_blocks(m, batch.pos.shape[1])
+                    ), None, None
+
+
+def _run_batch_kernel(cfg: PSOConfig, batch: SwarmBatch, iters: int,
+                      m: Method, rows=None, table=None):
+    """Batched-kernel segment runner: the batched fused/async Pallas
+    kernels, with the same optional telemetry threading and chunked
+    history readbacks as ``_run_state_kernel`` (one ``[K, S]`` trajectory
+    sample per sync point). ``rows``/``table`` make the batch
+    heterogeneous (per-row ``lax.switch`` objective dispatch)."""
+    from repro.kernels.ops import (run_queue_lock_fused_batch,
+                                   run_queue_lock_fused_async_batch)
+    interp = m.resolve_interpret()
+    fids = None if rows is None else rows.fid
+
+    def launch(b, k):
+        if m.variant == "async":
+            return run_queue_lock_fused_async_batch(
+                cfg, b, k, sync_every=m.sync_every, block_n=m.block_n,
+                interpret=interp, fids=fids, table=table,
+                telemetry=m.telemetry)
+        return run_queue_lock_fused_batch(
+            cfg, b, k, block_n=m.block_n, interpret=interp, fids=fids,
+            table=table, telemetry=m.telemetry)
+
+    if not m.record_history:
+        if m.telemetry:
+            batch, cnt = launch(batch, iters)
+            return batch, None, cnt
+        return launch(batch, iters), None, None
+    vf = None if rows is not None else cfg.problem.violation_fn
+    stride = max(1, m.sync_every) if m.variant == "async" else 1
+    its, fits, viols, cnts = [], [], [], []
+    done = 0
+    while done < iters:
+        k = min(stride, iters - done)
+        if m.telemetry:
+            batch, cnt = launch(batch, k)
+            cnts.append(np.asarray(cnt))
+        else:
+            batch = launch(batch, k)
+        done += k
+        its.append(int(batch.iteration[0]))
+        fits.append(np.asarray(batch.gbest_fit))
+        if vf is not None:
+            import jax
+            viols.append(np.asarray(jax.vmap(vf)(batch.gbest_pos)))
+    constrained = rows is None and cfg.problem.constrained
+    hist = (np.asarray(its, dtype=np.int64), np.asarray(fits),
+            np.asarray(viols) if constrained and viols else None)
+    return batch, hist, _sum_counters(cnts)
 
 
 def solve_stream(requests: Sequence, *, lane_width: int = 8,
                  coalesce_registry: bool = True,
                  compile_cache=None, autotune: bool = False,
-                 metrics=None) -> List:
+                 metrics=None, record_history: bool = False,
+                 trace=None, trace_path: Optional[str] = None) -> List:
     """Streaming facade: run a stream of independent solve requests
     through the continuous-batching scheduler
     (``repro.serving.ContinuousScheduler``).
@@ -693,17 +853,31 @@ def solve_stream(requests: Sequence, *, lane_width: int = 8,
     ``repro.serving.ServingMetrics``) collects latency spans and
     batch-fill counters. Returns one ``SolveResult`` per request, in
     request order.
+
+    Telemetry: ``trace`` (a ``repro.telemetry.TraceWriter``) records the
+    serving timeline — one Perfetto row per lane, a span per dispatched
+    chunk — and ``trace_path`` writes it as ``trace.json`` on completion
+    (allocating a writer if ``trace`` is None). ``record_history=True``
+    accumulates each request's gbest-vs-iteration series at its lane's
+    chunk boundaries onto ``SolveResult.history``.
     """
     from repro.launch.serve import SolveRequest
     from repro.serving import CompileCache, ContinuousScheduler
     if isinstance(compile_cache, str):
         compile_cache = CompileCache(path=compile_cache)
+    if trace is None and trace_path is not None:
+        from repro.telemetry import TraceWriter
+        trace = TraceWriter()
     reqs = [r if isinstance(r, SolveRequest) else SolveRequest(**r)
             for r in requests]
     sched = ContinuousScheduler(
         lane_width=lane_width, coalesce_registry=coalesce_registry,
-        compile_cache=compile_cache, autotune=autotune, metrics=metrics)
-    return sched.run(reqs)
+        compile_cache=compile_cache, autotune=autotune, metrics=metrics,
+        trace=trace, record_history=record_history)
+    out = sched.run(reqs)
+    if trace is not None and trace_path is not None:
+        trace.write(trace_path)
+    return out
 
 
 def best(results: Sequence[Result]) -> Result:

@@ -322,41 +322,62 @@ def _batch_phases(batch: SwarmBatch, sync_every: int) -> Tuple[int, ...]:
         return (0,) * batch.swarm_cnt
 
 
+def _batched_step(cfg: PSOConfig, variant: str, coeffs, hr, table):
+    """One vmapped step over the batch, closed over the static extras
+    (per-swarm coeffs and/or hetero rows) — shared by the fori_loop runner
+    and the history-recording scan so both trace the same computation."""
+    step = STEP_FNS[variant]
+    if coeffs is None and hr is None:
+        step_b = jax.vmap(lambda s: step(cfg, s))
+        return lambda b: SwarmBatch(*step_b(SwarmState(*b)))
+    if hr is None:
+        w, c1, c2 = (jnp.asarray(c) for c in coeffs)
+        step_b = jax.vmap(
+            lambda s, w_, c1_, c2_: step(cfg, s, coeffs=(w_, c1_, c2_)))
+        return lambda b: SwarmBatch(*step_b(SwarmState(*b), w, c1, c2))
+    if coeffs is None:
+        step_b = jax.vmap(lambda s, h: step(cfg, s, hetero=(table, h)))
+        return lambda b: SwarmBatch(*step_b(SwarmState(*b), hr))
+    w, c1, c2 = (jnp.asarray(c) for c in coeffs)
+    step_b = jax.vmap(
+        lambda s, w_, c1_, c2_, h: step(cfg, s, coeffs=(w_, c1_, c2_),
+                                        hetero=(table, h)))
+    return lambda b: SwarmBatch(*step_b(SwarmState(*b), w, c1, c2, hr))
+
+
 @partial(jax.jit, static_argnames=("cfg", "iters", "variant", "table"))
 def _run_many_stepped(cfg: PSOConfig, batch: SwarmBatch, iters: int,
                       variant: str,
                       coeffs: Optional[Tuple[Array, Array, Array]] = None,
                       rows: Optional[ProblemRows] = None, table=None
                       ) -> SwarmBatch:
-    step = STEP_FNS[variant]
     hr = None if rows is None else _hetero_rows(rows)
-    if coeffs is None and hr is None:
-        step_b = jax.vmap(lambda s: step(cfg, s))
+    step_b = _batched_step(cfg, variant, coeffs, hr, table)
+    return jax.lax.fori_loop(0, iters, lambda _, b: step_b(b), batch)
 
-        def body(_, b):
-            return SwarmBatch(*step_b(SwarmState(*b)))
-    elif hr is None:
-        w, c1, c2 = (jnp.asarray(c) for c in coeffs)
-        step_b = jax.vmap(
-            lambda s, w_, c1_, c2_: step(cfg, s, coeffs=(w_, c1_, c2_)))
 
-        def body(_, b):
-            return SwarmBatch(*step_b(SwarmState(*b), w, c1, c2))
-    elif coeffs is None:
-        step_b = jax.vmap(lambda s, h: step(cfg, s, hetero=(table, h)))
+@partial(jax.jit, static_argnames=("cfg", "iters", "variant", "table"))
+def _run_many_stepped_history(cfg: PSOConfig, batch: SwarmBatch, iters: int,
+                              variant: str,
+                              coeffs=None, rows: Optional[ProblemRows] = None,
+                              table=None):
+    """``_run_many_stepped`` that also stacks the per-iteration gbest
+    trajectory: one scan over the same vmapped step, collecting
+    ``gbest_fit`` [iters, S] (and the recorded gbest's aggregate constraint
+    violation for constrained homogeneous batches — hetero rows are
+    built-in table entries, so their violations are identically zero)."""
+    hr = None if rows is None else _hetero_rows(rows)
+    step_b = _batched_step(cfg, variant, coeffs, hr, table)
+    vf = None if rows is not None else cfg.problem.violation_fn
 
-        def body(_, b):
-            return SwarmBatch(*step_b(SwarmState(*b), hr))
-    else:
-        w, c1, c2 = (jnp.asarray(c) for c in coeffs)
-        step_b = jax.vmap(
-            lambda s, w_, c1_, c2_, h: step(cfg, s, coeffs=(w_, c1_, c2_),
-                                            hetero=(table, h)))
+    def body(b, _):
+        b = step_b(b)
+        v = (jax.vmap(vf)(b.gbest_pos) if vf is not None
+             else jnp.zeros_like(b.gbest_fit))
+        return b, (b.gbest_fit, v)
 
-        def body(_, b):
-            return SwarmBatch(*step_b(SwarmState(*b), w, c1, c2, hr))
-
-    return jax.lax.fori_loop(0, iters, body, batch)
+    batch, (fits, viols) = jax.lax.scan(body, batch, xs=None, length=iters)
+    return batch, fits, viols
 
 
 # Smallest batch row count whose compiled program is covered by the
@@ -378,6 +399,27 @@ def _pad_rows(batch: SwarmBatch, target: int) -> SwarmBatch:
         lambda a: jnp.concatenate(
             [a, jnp.broadcast_to(a[:1], (k,) + a.shape[1:])]),
         tuple(batch)))
+
+
+def _pad_batch_inputs(batch: SwarmBatch, coeffs, rows, target: int):
+    """Pad the batch AND its per-row companions (coeffs, hetero rows) to
+    ``target`` rows (replicating row 0), for the MIN_VALIDATED_SWARMS
+    dead-row dispatch."""
+    s_cnt = batch.swarm_cnt
+    batch = _pad_rows(batch, target)
+    if coeffs is not None:
+        coeffs = tuple(
+            jnp.concatenate([jnp.asarray(c),
+                             jnp.broadcast_to(jnp.asarray(c)[:1],
+                                              (target - s_cnt,))])
+            for c in coeffs)
+    if rows is not None:
+        rows = ProblemRows(*jax.tree_util.tree_map(
+            lambda a: jnp.concatenate(
+                [a, jnp.broadcast_to(a[:1],
+                                     (target - s_cnt,) + a.shape[1:])]),
+            tuple(rows)))
+    return batch, coeffs, rows
 
 
 def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
@@ -407,20 +449,8 @@ def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
     cfg = cfg.resolved()
     s_cnt = batch.swarm_cnt
     if s_cnt < MIN_VALIDATED_SWARMS:
-        pad = MIN_VALIDATED_SWARMS
-        batch = _pad_rows(batch, pad)
-        if coeffs is not None:
-            coeffs = tuple(
-                jnp.concatenate([jnp.asarray(c),
-                                 jnp.broadcast_to(jnp.asarray(c)[:1],
-                                                  (pad - s_cnt,))])
-                for c in coeffs)
-        if rows is not None:
-            rows = ProblemRows(*jax.tree_util.tree_map(
-                lambda a: jnp.concatenate(
-                    [a, jnp.broadcast_to(a[:1],
-                                         (pad - s_cnt,) + a.shape[1:])]),
-                tuple(rows)))
+        batch, coeffs, rows = _pad_batch_inputs(batch, coeffs, rows,
+                                                MIN_VALIDATED_SWARMS)
         out = run_many(cfg, batch, iters, variant, coeffs, sync_every,
                        rows, table, n_blocks)
         return SwarmBatch(*jax.tree_util.tree_map(lambda a: a[:s_cnt],
@@ -457,6 +487,68 @@ def run_many(cfg: PSOConfig, batch: SwarmBatch, iters: int,
         # async block-local cache — drop it so a later async run re-seeds
         batch = batch._replace(lbest_pos=None, lbest_fit=None)
     return _run_many_stepped(cfg, batch, iters, variant, coeffs, rows, table)
+
+
+def run_many_with_history(cfg: PSOConfig, batch: SwarmBatch, iters: int,
+                          variant: str = "queue",
+                          coeffs: Optional[Tuple[Array, Array, Array]] = None,
+                          sync_every: int = ASYNC_SYNC_EVERY,
+                          rows: Optional[ProblemRows] = None,
+                          table: Optional[Tuple[Problem, ...]] = None,
+                          n_blocks: Optional[int] = None):
+    """``run_many`` that also records every row's gbest trajectory.
+
+    Returns ``(batch, (iterations, gbest_fits, violations))`` with
+    ``iterations`` a length-K tuple of absolute iteration numbers and
+    ``gbest_fits`` a ``[K, S]`` array — one sample per sync point per row,
+    mirroring the single-swarm ``run_with_history`` semantics: every
+    iteration for the synchronous variants (one scanned program), every
+    publication boundary for ``async`` (the vmapped loop nest is segmented
+    at sync points, which the checkpoint/resume machinery makes
+    bit-identical to the uninterrupted run). ``violations`` is ``[K, S]``
+    for constrained homogeneous batches, else None (hetero rows are
+    built-in table entries — unconstrained or static-penalty). Assumes the
+    lockstep batches the facades build (all rows at one iteration count).
+    """
+    cfg = cfg.resolved()
+    constrained = rows is None and cfg.problem.constrained
+    if iters <= 0:
+        empty = jnp.zeros((0, batch.swarm_cnt), batch.gbest_fit.dtype)
+        return batch, ((), empty, empty if constrained else None)
+    if variant == "async":
+        vf = None if rows is not None else cfg.problem.violation_fn
+        its, fits, viols = [], [], []
+        done = 0
+        while done < iters:
+            k = min(max(1, sync_every), iters - done)
+            batch = run_many(cfg, batch, k, variant, coeffs, sync_every,
+                             rows, table, n_blocks)
+            done += k
+            its.append(int(batch.iteration[0]))
+            fits.append(batch.gbest_fit)
+            if vf is not None:
+                viols.append(jax.vmap(vf)(batch.gbest_pos))
+        return batch, (tuple(its), jnp.stack(fits),
+                       jnp.stack(viols) if constrained else None)
+    if batch.lbest_fit is not None:
+        batch = batch._replace(lbest_pos=None, lbest_fit=None)
+    s_cnt = batch.swarm_cnt
+    if s_cnt < MIN_VALIDATED_SWARMS:
+        batch, coeffs, rows = _pad_batch_inputs(batch, coeffs, rows,
+                                                MIN_VALIDATED_SWARMS)
+        out, (its, fits, viols) = run_many_with_history(
+            cfg, batch, iters, variant, coeffs, sync_every, rows, table,
+            n_blocks)
+        out = SwarmBatch(*jax.tree_util.tree_map(lambda a: a[:s_cnt],
+                                                 tuple(out)))
+        return out, (its, fits[:, :s_cnt],
+                     None if viols is None else viols[:, :s_cnt])
+    start = int(batch.iteration[0])
+    batch, fits, viols = _run_many_stepped_history(cfg, batch, iters,
+                                                   variant, coeffs, rows,
+                                                   table)
+    its = tuple(range(start + 1, start + iters + 1))
+    return batch, (its, fits, viols if constrained else None)
 
 
 def solve_many(cfg: PSOConfig, seeds, iters: int = 1000,

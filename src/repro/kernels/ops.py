@@ -117,22 +117,33 @@ def queue_step(cfg: PSOConfig, s: SwarmState, block_n: Optional[int] = None,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "iters", "block_n", "interpret"))
+                   static_argnames=("cfg", "iters", "block_n", "interpret",
+                                    "telemetry"))
 def run_queue_lock_fused(cfg: PSOConfig, s: SwarmState, iters: int,
                          block_n: Optional[int] = None,
-                         interpret: bool = True) -> SwarmState:
+                         interpret: bool = True, telemetry: bool = False):
     """``iters`` iterations in ONE pallas_call (fused queue-lock, §4.2+).
 
     On TPU this is the roofline-relevant path: state stays resident, the
     global best is published in-kernel under sequential-grid serialization,
     and there are zero kernel launches or HBM round-trips per iteration.
+
+    ``telemetry=True`` returns ``(state, counts)`` where ``counts`` is the
+    in-kernel contention counter buffer ([3] int32 — see
+    ``repro.telemetry.counters``); off (the default) returns the state
+    alone from the byte-identical pre-telemetry program.
     """
     cfg = cfg.resolved()
     n, d = s.pos.shape
     bn = _resolve_block(n, block_n)
     scal, pos, vel, pbp, pbf, gp, gf = state_to_kernel(s, d)
     call = fused_call(n, d, iters, bn, s.pos.dtype, interpret=interpret,
-                      **_cfg_kwargs(cfg))
+                      telemetry=telemetry, **_cfg_kwargs(cfg))
+    if telemetry:
+        cnt = jnp.zeros((3,), jnp.int32)
+        pos, vel, pbp, pbf, gp, gf, cnt = call(scal, pos, vel, pbp, pbf,
+                                               gp, gf, cnt)
+        return kernel_to_state(s, d, pos, vel, pbp, pbf, gp, gf, iters), cnt
     pos, vel, pbp, pbf, gp, gf = call(scal, pos, vel, pbp, pbf, gp, gf)
     return kernel_to_state(s, d, pos, vel, pbp, pbf, gp, gf, iters)
 
@@ -163,11 +174,11 @@ def _hetero_members(cfg: PSOConfig, table):
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "iters", "block_n", "interpret",
-                                    "table"))
+                                    "table", "telemetry"))
 def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
                                block_n: Optional[int] = None,
                                interpret: bool = True, fids=None,
-                               table=None) -> SwarmBatch:
+                               table=None, telemetry: bool = False):
     """S independent swarms x ``iters`` iterations in ONE pallas_call.
 
     The multi-swarm analogue of ``run_queue_lock_fused``: per-swarm gbest
@@ -177,6 +188,9 @@ def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
     ``block_n`` — asserted in tests/test_multi_swarm.py. On TPU this is the
     serving hot path: a whole request batch advances with zero host
     round-trips and one kernel launch.
+
+    ``telemetry=True`` returns ``(batch, counts)`` with ``counts`` shaped
+    [S, 3] — row ``s`` holds swarm ``s``'s contention counters.
     """
     cfg = cfg.resolved()
     s_cnt, n, d = batch.pos.shape
@@ -190,11 +204,17 @@ def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
     gp = jnp.zeros((pad_dim(d), s_cnt), batch.pos.dtype).at[:d].set(
         batch.gbest_pos.T)
     gf = batch.gbest_fit
+    cnt = jnp.zeros((3 * s_cnt,), jnp.int32) if telemetry else None
     if fids is None:
         call = fused_batch_call(s_cnt, n, d, iters, bn, batch.pos.dtype,
-                                interpret=interpret, **_cfg_kwargs(cfg))
-        pos, vel, pbp, pbf, gp, gf = call(seeds, its, pos, vel, pbp, pbf,
-                                          gp, gf)
+                                interpret=interpret, telemetry=telemetry,
+                                **_cfg_kwargs(cfg))
+        if telemetry:
+            pos, vel, pbp, pbf, gp, gf, cnt = call(
+                seeds, its, pos, vel, pbp, pbf, gp, gf, cnt)
+        else:
+            pos, vel, pbp, pbf, gp, gf = call(seeds, its, pos, vel, pbp,
+                                              pbf, gp, gf)
     else:
         # Heterogeneous batch: per-swarm objective via kernel 3h. The cfg
         # contributes dim/coeffs/dtype only; bounds and objective come from
@@ -203,11 +223,17 @@ def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
         call = hetero_fused_batch_call(
             s_cnt, n, d, iters, bn, batch.pos.dtype, w=rcfg.w, c1=rcfg.c1,
             c2=rcfg.c2, members=_hetero_members(cfg, table),
-            rule=rcfg.update_rule, interpret=interpret)
-        pos, vel, pbp, pbf, gp, gf = call(
-            seeds, its, fids.astype(jnp.int32), pos, vel, pbp, pbf, gp, gf)
+            rule=rcfg.update_rule, interpret=interpret, telemetry=telemetry)
+        if telemetry:
+            pos, vel, pbp, pbf, gp, gf, cnt = call(
+                seeds, its, fids.astype(jnp.int32), pos, vel, pbp, pbf,
+                gp, gf, cnt)
+        else:
+            pos, vel, pbp, pbf, gp, gf = call(
+                seeds, its, fids.astype(jnp.int32), pos, vel, pbp, pbf,
+                gp, gf)
     pbf = pbf.reshape(s_cnt, n)
-    return batch._replace(
+    out = batch._replace(
         pos=unpack_dmajor_batch(pos, s_cnt, d),
         vel=unpack_dmajor_batch(vel, s_cnt, d),
         fit=pbf,  # kernels do not retain raw fit; pbest_fit >= fit
@@ -215,6 +241,9 @@ def run_queue_lock_fused_batch(cfg: PSOConfig, batch: SwarmBatch, iters: int,
         gbest_pos=gp[:d].T, gbest_fit=gf,
         iteration=batch.iteration + iters,
         lbest_pos=None, lbest_fit=None)
+    if telemetry:
+        return out, cnt.reshape(s_cnt, 3)
+    return out
 
 
 def _async_spans(iters: int, sync_every: int):
@@ -240,11 +269,12 @@ def _async_spans(iters: int, sync_every: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "iters", "sync_every", "block_n",
-                                    "interpret"))
+                                    "interpret", "telemetry"))
 def run_queue_lock_fused_async(cfg: PSOConfig, s: SwarmState, iters: int,
                                sync_every: int = ASYNC_SYNC_EVERY,
                                block_n: Optional[int] = None,
-                               interpret: bool = True) -> SwarmState:
+                               interpret: bool = True,
+                               telemetry: bool = False):
     """``iters`` iterations of the ASYNC queue-lock in one pallas_call.
 
     The paper's enhanced algorithm: the grid is block-major
@@ -258,6 +288,10 @@ def run_queue_lock_fused_async(cfg: PSOConfig, s: SwarmState, iters: int,
     bit-identical to ``run_queue_lock_fused`` for every ``sync_every``;
     the synchronous kernel is the ``sync_every=1`` single-block special
     case of this one.
+
+    ``telemetry=True`` returns ``(state, counts)`` ([3] int32 contention
+    counters, accumulated across the remainder-phase split via the
+    aliased buffer).
     """
     cfg = cfg.resolved()
     n, d = s.pos.shape
@@ -272,32 +306,42 @@ def run_queue_lock_fused_async(cfg: PSOConfig, s: SwarmState, iters: int,
     else:
         lp = jnp.tile(gp, (1, nb))             # local bests seeded from gbest
         lf = jnp.tile(gf, nb)
+    cnt = jnp.zeros((3,), jnp.int32) if telemetry else None
     for off, span, chunk in _async_spans(iters, sync_every):
         call = fused_async_call(n, d, span, bn, chunk, s.pos.dtype,
-                                topology=cfg.topology,
-                                interpret=interpret, **_cfg_kwargs(cfg))
-        pos, vel, pbp, pbf, gp, gf, lp, lf = call(
-            scal + jnp.array([0, off], jnp.int32),
-            pos, vel, pbp, pbf, gp, gf, lp, lf)
+                                topology=cfg.topology, interpret=interpret,
+                                telemetry=telemetry, **_cfg_kwargs(cfg))
+        args = (scal + jnp.array([0, off], jnp.int32),
+                pos, vel, pbp, pbf, gp, gf, lp, lf)
+        if telemetry:
+            pos, vel, pbp, pbf, gp, gf, lp, lf, cnt = call(*args, cnt)
+        else:
+            pos, vel, pbp, pbf, gp, gf, lp, lf = call(*args)
     out = kernel_to_state(s, d, pos, vel, pbp, pbf, gp, gf, iters)
-    return out._replace(lbest_pos=unpack_dmajor(lp, d), lbest_fit=lf)
+    out = out._replace(lbest_pos=unpack_dmajor(lp, d), lbest_fit=lf)
+    if telemetry:
+        return out, cnt
+    return out
 
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "iters", "sync_every", "block_n",
-                                    "interpret", "table"))
+                                    "interpret", "table", "telemetry"))
 def run_queue_lock_fused_async_batch(cfg: PSOConfig, batch: SwarmBatch,
                                      iters: int,
                                      sync_every: int = ASYNC_SYNC_EVERY,
                                      block_n: Optional[int] = None,
                                      interpret: bool = True, fids=None,
-                                     table=None) -> SwarmBatch:
+                                     table=None, telemetry: bool = False):
     """S independent swarms through the async queue-lock in one pallas_call.
 
     Grid ``(swarms, blocks, iter_chunks)``: per-swarm gbest buffers and
     per-(swarm, block) local-best slots, so row ``s`` is bit-identical to
     ``run_queue_lock_fused_async`` on ``batch_row(batch, s)`` with the same
     ``block_n``/``sync_every``. The serving hot path for ``variant="async"``.
+
+    ``telemetry=True`` returns ``(batch, counts)`` with [S, 3] per-swarm
+    contention counters.
     """
     cfg = cfg.resolved()
     s_cnt, n, d = batch.pos.shape
@@ -318,28 +362,32 @@ def run_queue_lock_fused_async_batch(cfg: PSOConfig, batch: SwarmBatch,
     else:
         lp = jnp.repeat(gp, nb, axis=1)        # [Dpad, S*nb], swarm-major
         lf = jnp.repeat(gf, nb)
+    cnt = jnp.zeros((3 * s_cnt,), jnp.int32) if telemetry else None
     for off, span, chunk in _async_spans(iters, sync_every):
         if fids is None:
             call = fused_async_batch_call(s_cnt, n, d, span, bn, chunk,
                                           batch.pos.dtype,
                                           topology=cfg.topology,
                                           interpret=interpret,
+                                          telemetry=telemetry,
                                           **_cfg_kwargs(cfg))
-            pos, vel, pbp, pbf, gp, gf, lp, lf = call(
-                seeds, its + jnp.int32(off), pos, vel, pbp, pbf, gp, gf,
-                lp, lf)
+            args = (seeds, its + jnp.int32(off), pos, vel, pbp, pbf, gp,
+                    gf, lp, lf)
         else:
             rcfg = cfg.resolved()
             call = hetero_fused_async_batch_call(
                 s_cnt, n, d, span, bn, chunk, batch.pos.dtype, w=rcfg.w,
                 c1=rcfg.c1, c2=rcfg.c2, members=_hetero_members(cfg, table),
                 rule=rcfg.update_rule, topology=cfg.topology,
-                interpret=interpret)
-            pos, vel, pbp, pbf, gp, gf, lp, lf = call(
-                seeds, its + jnp.int32(off), fids.astype(jnp.int32),
-                pos, vel, pbp, pbf, gp, gf, lp, lf)
+                interpret=interpret, telemetry=telemetry)
+            args = (seeds, its + jnp.int32(off), fids.astype(jnp.int32),
+                    pos, vel, pbp, pbf, gp, gf, lp, lf)
+        if telemetry:
+            pos, vel, pbp, pbf, gp, gf, lp, lf, cnt = call(*args, cnt)
+        else:
+            pos, vel, pbp, pbf, gp, gf, lp, lf = call(*args)
     pbf = pbf.reshape(s_cnt, n)
-    return batch._replace(
+    out = batch._replace(
         pos=unpack_dmajor_batch(pos, s_cnt, d),
         vel=unpack_dmajor_batch(vel, s_cnt, d),
         fit=pbf,  # kernels do not retain raw fit; pbest_fit >= fit
@@ -348,6 +396,9 @@ def run_queue_lock_fused_async_batch(cfg: PSOConfig, batch: SwarmBatch,
         iteration=batch.iteration + iters,
         lbest_pos=unpack_dmajor(lp, d).reshape(s_cnt, nb, d),
         lbest_fit=lf.reshape(s_cnt, nb))
+    if telemetry:
+        return out, cnt.reshape(s_cnt, 3)
+    return out
 
 
 def make_fused_local_step(iters_per_call: int = 1, block_n=None,

@@ -596,12 +596,16 @@ def _kernel_rule(rule):
 
 def _fold_pbest(fit, pos, pbf_ref, pbp_ref, viol):
     """Alg. 1 step 4: fold the pbest refs in place (raw fitness compare,
-    or the Deb rule when a ``kernel_violation`` form is present)."""
+    or the Deb rule when a ``kernel_violation`` form is present).
+
+    Returns the per-lane improvement mask so telemetry-enabled scaffolds
+    can count block-improvement events without recomputing the compare."""
     pbf = pbf_ref[...]
     pbp = pbp_ref[...]
     imp = _pbest_improved(fit, pos, pbf, pbp, viol)
     pbf_ref[...] = jnp.where(imp, fit, pbf)
     pbp_ref[...] = jnp.where(imp, pos, pbp)
+    return imp
 
 
 def _queue_best(fit, best):
@@ -629,7 +633,8 @@ def _gather_winner(pos, dmask, lane, bidx):
 # THE synchronous scaffold: one generator, four kernel bodies.
 # --------------------------------------------------------------------------
 
-def _make_sync_kernel(*, queue=False, batched=False, hetero=False):
+def _make_sync_kernel(*, queue=False, batched=False, hetero=False,
+                      telemetry=False):
     """Generate a synchronous kernel body from the shared scaffold.
 
     One advance + pbest fold + publication per grid step. Modes:
@@ -652,7 +657,17 @@ def _make_sync_kernel(*, queue=False, batched=False, hetero=False):
     ``functools.partial`` with the static kwargs
     ``(w, c1, c2, d_real, rule, statics)``; ``rule`` is the resolved
     :class:`repro.core.update_rules.UpdateRule` every variant closes over.
+
+    ``telemetry`` appends one aliased int32 SMEM counter buffer (3 slots
+    per swarm: queue updates / publications / block improvements — see
+    ``repro.telemetry.counters``) and accumulates into it per grid step.
+    The gate is Python-level, so a telemetry-off body traces to exactly
+    the pre-telemetry jaxpr (the bit-identity pins never see it).
     """
+    if queue and telemetry:
+        raise ValueError("the two-kernel queue variant publishes via the "
+                         "jnp epilogue; count there, not in-kernel")
+
     def kernel(*refs, w, c1, c2, d_real, rule, statics):
         # --- scalar prefix / aliased-input placeholders / const + out refs
         if queue:
@@ -669,13 +684,22 @@ def _make_sync_kernel(*, queue=False, batched=False, hetero=False):
             rest = refs[1 + 6:]
         if hetero:
             branches = statics
-            pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest
+            if telemetry:
+                # rest[0] is the aliased counts-input placeholder
+                (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
+                 cnt_ref) = rest[1:]
+            else:
+                pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref = rest
         else:
             nc = statics["n_consts"]
             const_vals = tuple(r[...] for r in rest[:nc])
             if queue:
                 (pos_ref, vel_ref, pbp_ref, pbf_ref,
                  aux_fit_ref, aux_idx_ref) = rest[nc:]
+            elif telemetry:
+                # rest[nc] is the aliased counts-input placeholder
+                (pos_ref, vel_ref, pbp_ref, pbf_ref,
+                 gp_ref, gf_ref, cnt_ref) = rest[nc + 1:]
             else:
                 (pos_ref, vel_ref, pbp_ref, pbf_ref,
                  gp_ref, gf_ref) = rest[nc:]
@@ -737,7 +761,7 @@ def _make_sync_kernel(*, queue=False, batched=False, hetero=False):
             pos, vel = _pin(pin, pos, vel)
             fit = fitness(pos, dmask, d_real)                # [1, bn]
         # --- pbest fold + state writes
-        _fold_pbest(fit, pos, pbf_ref, pbp_ref, viol)
+        imp = _fold_pbest(fit, pos, pbf_ref, pbp_ref, viol)
         pos_ref[...] = pos
         vel_ref[...] = vel
         # --- publication
@@ -759,17 +783,36 @@ def _make_sync_kernel(*, queue=False, batched=False, hetero=False):
                 gf_ref[slot] = bf
                 gp_ref[...] = _gather_winner(pos, dmask, lane, bidx)
 
+            if telemetry:
+                # One conditional guards both the queue fold and the
+                # publication here, so queue_updates == publications by
+                # construction (docs/observability.md) — matching the
+                # oracle's single ``if any(q_mask)`` program point.
+                inc = jnp.any(q_mask).astype(jnp.int32)
+                c0 = 3 * slot
+                cnt_ref[c0] = cnt_ref[c0] + inc
+                cnt_ref[c0 + 1] = cnt_ref[c0 + 1] + inc
+                cnt_ref[c0 + 2] = (cnt_ref[c0 + 2]
+                                   + jnp.any(imp).astype(jnp.int32))
+
     kernel.__name__ = ("_queue_kernel" if queue else
                        "_hetero_fused_batch_kernel" if hetero else
                        "_fused_batch_kernel" if batched else "_fused_kernel")
+    if telemetry:
+        kernel.__name__ += "_tel"
     return kernel
 
 
-# The four synchronous kernel bodies: thin instantiations of the scaffold.
+# The four synchronous kernel bodies: thin instantiations of the scaffold,
+# plus the telemetry (counter-carrying) twins of the three fused ones.
 _queue_kernel = _make_sync_kernel(queue=True)
 _fused_kernel = _make_sync_kernel()
 _fused_batch_kernel = _make_sync_kernel(batched=True)
 _hetero_fused_batch_kernel = _make_sync_kernel(batched=True, hetero=True)
+_fused_kernel_tel = _make_sync_kernel(telemetry=True)
+_fused_batch_kernel_tel = _make_sync_kernel(batched=True, telemetry=True)
+_hetero_fused_batch_kernel_tel = _make_sync_kernel(batched=True, hetero=True,
+                                                   telemetry=True)
 
 
 # --------------------------------------------------------------------------
@@ -830,12 +873,14 @@ def queue_step_call(n: int, d: int, block_n: int, dtype, *,
 
 def fused_call(n: int, d: int, iters: int, block_n: int, dtype, *,
                w, c1, c2, min_pos, max_pos, max_v, fitness,
-               rule="pso", interpret=True):
+               rule="pso", interpret=True, telemetry=False):
     """Build the fused multi-iteration queue-lock pallas_call.
 
     Args (runtime): scal[2]i32, pos/vel/pbest_pos [Dpad,N], pbest_fit [1,N],
                     gbest_pos [Dpad,1], gbest_fit [1]
     Returns the same six state arrays after ``iters`` iterations.
+    ``telemetry`` appends an aliased counts[3]i32 operand (last arg, last
+    result) accumulating the contention counters — see repro.telemetry.
     """
     assert n % block_n == 0, (n, block_n)
     nb = n // block_n
@@ -843,32 +888,46 @@ def fused_call(n: int, d: int, iters: int, block_n: int, dtype, *,
     st, consts = lower_statics(fitness, d=d, dpad=dpad, bn=block_n,
                                dtype=dtype, min_pos=min_pos,
                                max_pos=max_pos, max_v=max_v)
-    kern = functools.partial(_fused_kernel, w=w, c1=c1, c2=c2, d_real=d,
+    body = _fused_kernel_tel if telemetry else _fused_kernel
+    kern = functools.partial(body, w=w, c1=c1, c2=c2, d_real=d,
                              rule=_kernel_rule(rule), statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda t, b: (0, b))
     row = pl.BlockSpec((1, block_n), lambda t, b: (0, b))
     gpc = pl.BlockSpec((dpad, 1), lambda t, b: (0, 0))
     gfs = pl.BlockSpec(memory_space=pltpu.SMEM)
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM),        # scal
+                mat, mat, mat, row, gpc, gfs] + _const_specs(consts)
+    out_specs = [mat, mat, mat, row, gpc, gfs]
+    out_shape = [
+        jax.ShapeDtypeStruct((dpad, n), dtype),               # pos
+        jax.ShapeDtypeStruct((dpad, n), dtype),               # vel
+        jax.ShapeDtypeStruct((dpad, n), dtype),               # pbest_pos
+        jax.ShapeDtypeStruct((1, n), dtype),                  # pbest_fit
+        jax.ShapeDtypeStruct((dpad, 1), dtype),               # gbest_pos
+        jax.ShapeDtypeStruct((1,), dtype),                    # gbest_fit
+    ]
+    aliases = {1: 0, 2: 1, 3: 2, 4: 3, 5: 4, 6: 5}
+    if telemetry:
+        in_specs.append(gfs)                                  # counts in
+        out_specs.append(gfs)
+        out_shape.append(jax.ShapeDtypeStruct((3,), jnp.int32))
+        aliases[7 + len(consts)] = 6
     call = pl.pallas_call(
         kern,
         grid=(iters, nb),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),      # scal
-                  mat, mat, mat, row, gpc, gfs] + _const_specs(consts),
-        out_specs=[mat, mat, mat, row, gpc, gfs],
-        out_shape=[
-            jax.ShapeDtypeStruct((dpad, n), dtype),           # pos
-            jax.ShapeDtypeStruct((dpad, n), dtype),           # vel
-            jax.ShapeDtypeStruct((dpad, n), dtype),           # pbest_pos
-            jax.ShapeDtypeStruct((1, n), dtype),              # pbest_fit
-            jax.ShapeDtypeStruct((dpad, 1), dtype),           # gbest_pos
-            jax.ShapeDtypeStruct((1,), dtype),                # gbest_fit
-        ],
-        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4, 6: 5},
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY)),
         interpret=interpret,
         name="cupso_fused_queue_lock",
     )
+    if telemetry:
+        # counts is the caller's LAST positional arg; consts slot in
+        # before it to keep the kernel's operand order (consts then cnt).
+        return lambda *args: call(*args[:-1], *consts, args[-1])
     return lambda *args: call(*args, *consts)
 
 
@@ -878,7 +937,7 @@ def fused_call(n: int, d: int, iters: int, block_n: int, dtype, *,
 
 def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
                      dtype, *, w, c1, c2, min_pos, max_pos, max_v, fitness,
-                     rule="pso", interpret=True):
+                     rule="pso", interpret=True, telemetry=False):
     """Build the batched fused queue-lock pallas_call (S swarms x iters).
 
     Args (runtime): seeds[S]i32, iterations[S]i32,
@@ -887,6 +946,8 @@ def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
     Returns the same six state arrays after ``iters`` iterations of every
     swarm. Swarm-major grid: the per-swarm gbest column and SMEM fitness
     slot are revisited only within one swarm's iteration span.
+    ``telemetry`` appends an aliased counts[3*S]i32 operand (per-swarm
+    contention counters — see repro.telemetry).
     """
     assert n % block_n == 0, (n, block_n)
     nb = n // block_n
@@ -894,33 +955,45 @@ def fused_batch_call(s_cnt: int, n: int, d: int, iters: int, block_n: int,
     st, consts = lower_statics(fitness, d=d, dpad=dpad, bn=block_n,
                                dtype=dtype, min_pos=min_pos,
                                max_pos=max_pos, max_v=max_v)
-    kern = functools.partial(_fused_batch_kernel, w=w, c1=c1, c2=c2,
+    body = _fused_batch_kernel_tel if telemetry else _fused_batch_kernel
+    kern = functools.partial(body, w=w, c1=c1, c2=c2,
                              d_real=d, rule=_kernel_rule(rule), statics=st)
     mat = pl.BlockSpec((dpad, block_n), lambda s, t, b: (0, s * nb + b))
     row = pl.BlockSpec((1, block_n), lambda s, t, b: (0, s * nb + b))
     gpc = pl.BlockSpec((dpad, 1), lambda s, t, b: (0, s))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    in_specs = [smem, smem,                                   # seeds, iters
+                mat, mat, mat, row, gpc, smem] + _const_specs(consts)
+    out_specs = [mat, mat, mat, row, gpc, smem]
+    out_shape = [
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # pos
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # vel
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # pbest_pos
+        jax.ShapeDtypeStruct((1, s_cnt * n), dtype),          # pbest_fit
+        jax.ShapeDtypeStruct((dpad, s_cnt), dtype),           # gbest_pos
+        jax.ShapeDtypeStruct((s_cnt,), dtype),                # gbest_fit
+    ]
+    aliases = {2: 0, 3: 1, 4: 2, 5: 3, 6: 4, 7: 5}
+    if telemetry:
+        in_specs.append(smem)                                 # counts in
+        out_specs.append(smem)
+        out_shape.append(jax.ShapeDtypeStruct((3 * s_cnt,), jnp.int32))
+        aliases[8 + len(consts)] = 6
     call = pl.pallas_call(
         kern,
         grid=(s_cnt, iters, nb),
-        in_specs=[smem, smem,                                 # seeds, iters
-                  mat, mat, mat, row, gpc, smem] + _const_specs(consts),
-        out_specs=[mat, mat, mat, row, gpc, smem],
-        out_shape=[
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pos
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # vel
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pbest_pos
-            jax.ShapeDtypeStruct((1, s_cnt * n), dtype),      # pbest_fit
-            jax.ShapeDtypeStruct((dpad, s_cnt), dtype),       # gbest_pos
-            jax.ShapeDtypeStruct((s_cnt,), dtype),            # gbest_fit
-        ],
-        input_output_aliases={2: 0, 3: 1, 4: 2, 5: 3, 6: 4, 7: 5},
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY,
                                  pltpu.ARBITRARY)),
         interpret=interpret,
         name="cupso_fused_queue_lock_batch",
     )
+    if telemetry:
+        return lambda *args: call(*args[:-1], *consts, args[-1])
     return lambda *args: call(*args, *consts)
 
 
@@ -962,41 +1035,52 @@ def _hetero_branches(members, *, d, dpad, bn, dtype):
 
 def hetero_fused_batch_call(s_cnt: int, n: int, d: int, iters: int,
                             block_n: int, dtype, *, w, c1, c2, members,
-                            rule="pso", interpret=True):
+                            rule="pso", interpret=True, telemetry=False):
     """Batched fused queue-lock with a per-swarm problem (kernel 3h).
 
     Args (runtime): seeds[S]i32, iterations[S]i32, fids[S]i32, then the six
     state arrays of ``fused_batch_call``. ``members[k]`` is the static
     ``(fitness, min_pos, max_pos, max_v)`` branch ``fids == k`` dispatches
-    to.
+    to. ``telemetry`` appends an aliased counts[3*S]i32 operand.
     """
     assert n % block_n == 0, (n, block_n)
     nb = n // block_n
     dpad = pad_dim(d)
     branches = _hetero_branches(members, d=d, dpad=dpad, bn=block_n,
                                 dtype=dtype)
-    kern = functools.partial(_hetero_fused_batch_kernel, w=w, c1=c1, c2=c2,
+    body = (_hetero_fused_batch_kernel_tel if telemetry
+            else _hetero_fused_batch_kernel)
+    kern = functools.partial(body, w=w, c1=c1, c2=c2,
                              d_real=d, rule=_kernel_rule(rule),
                              statics=branches)
     mat = pl.BlockSpec((dpad, block_n), lambda s, t, b: (0, s * nb + b))
     row = pl.BlockSpec((1, block_n), lambda s, t, b: (0, s * nb + b))
     gpc = pl.BlockSpec((dpad, 1), lambda s, t, b: (0, s))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    in_specs = [smem, smem, smem,                      # seeds, iters, fids
+                mat, mat, mat, row, gpc, smem]
+    out_specs = [mat, mat, mat, row, gpc, smem]
+    out_shape = [
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # pos
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # vel
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # pbest_pos
+        jax.ShapeDtypeStruct((1, s_cnt * n), dtype),          # pbest_fit
+        jax.ShapeDtypeStruct((dpad, s_cnt), dtype),           # gbest_pos
+        jax.ShapeDtypeStruct((s_cnt,), dtype),                # gbest_fit
+    ]
+    aliases = {3: 0, 4: 1, 5: 2, 6: 3, 7: 4, 8: 5}
+    if telemetry:
+        in_specs.append(smem)                                 # counts in
+        out_specs.append(smem)
+        out_shape.append(jax.ShapeDtypeStruct((3 * s_cnt,), jnp.int32))
+        aliases[9] = 6
     return pl.pallas_call(
         kern,
         grid=(s_cnt, iters, nb),
-        in_specs=[smem, smem, smem,                    # seeds, iters, fids
-                  mat, mat, mat, row, gpc, smem],
-        out_specs=[mat, mat, mat, row, gpc, smem],
-        out_shape=[
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pos
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # vel
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pbest_pos
-            jax.ShapeDtypeStruct((1, s_cnt * n), dtype),      # pbest_fit
-            jax.ShapeDtypeStruct((dpad, s_cnt), dtype),       # gbest_pos
-            jax.ShapeDtypeStruct((s_cnt,), dtype),            # gbest_fit
-        ],
-        input_output_aliases={3: 0, 4: 1, 5: 2, 6: 3, 7: 4, 8: 5},
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY,
                                  pltpu.ARBITRARY)),
@@ -1012,7 +1096,8 @@ def hetero_fused_batch_call(s_cnt: int, n: int, d: int, iters: int,
 def _async_chunk_body(scal0, it_base, sync_every, base,
                       pos, vel, pbp, pbf, lp, lf, *,
                       w, c1, c2, min_pos, max_pos, max_v, d_real, fitness,
-                      project=None, viol=None, pin=False, rule=None):
+                      project=None, viol=None, pin=False, rule=None,
+                      counts=False):
     """``sync_every`` iterations of one block against its block-local best.
 
     Pure value-level fori_loop (no ref writes inside the loop) shared by
@@ -1021,9 +1106,17 @@ def _async_chunk_body(scal0, it_base, sync_every, base,
     tie-break, masked-sum position gather), but into the loop carry instead
     of the shared SMEM/VMEM gbest buffers — so with a single block the
     trajectory is bit-identical to the synchronous fused kernel.
+
+    ``counts`` (telemetry) extends the carry with two scalar int32 event
+    counters — iterations where the local queue was non-empty, and
+    iterations where any lane improved its pbest — returned as trailing
+    elements for the scaffold to fold into the counter buffer.
     """
     def body(tl, carry):
-        pos, vel, pbp, pbf, lp, lf = carry
+        if counts:
+            pos, vel, pbp, pbf, lp, lf, nq, nimp = carry
+        else:
+            pos, vel, pbp, pbf, lp, lf = carry
         pos, vel, dmask, lane = _advance_block(
             scal0, it_base + tl + 1, pos, vel, pbp, lp, base,
             w=w, c1=c1, c2=c2, min_pos=min_pos, max_pos=max_pos,
@@ -1040,16 +1133,24 @@ def _async_chunk_body(scal0, it_base, sync_every, base,
         anyq = bf > lf                         # == jnp.any(fit > lf)
         lf = jnp.where(anyq, bf, lf)
         lp = jnp.where(anyq, cand, lp)
+        if counts:
+            nq = nq + anyq.astype(jnp.int32)
+            nimp = nimp + jnp.any(imp).astype(jnp.int32)
+            return pos, vel, pbp, pbf, lp, lf, nq, nimp
         return pos, vel, pbp, pbf, lp, lf
 
-    return lax.fori_loop(0, sync_every, body, (pos, vel, pbp, pbf, lp, lf))
+    init = (pos, vel, pbp, pbf, lp, lf)
+    if counts:
+        zero = jnp.zeros((), jnp.int32)
+        init = init + (zero, zero)
+    return lax.fori_loop(0, sync_every, body, init)
 
 
 # --------------------------------------------------------------------------
 # THE asynchronous scaffold: one generator, three kernel bodies.
 # --------------------------------------------------------------------------
 
-def _make_async_kernel(*, batched=False, hetero=False):
+def _make_async_kernel(*, batched=False, hetero=False, telemetry=False):
     """Generate an asynchronous (block-resident) kernel body from the
     shared scaffold.
 
@@ -1070,6 +1171,11 @@ def _make_async_kernel(*, batched=False, hetero=False):
     mode so neighbor columns are addressable), so swarm knowledge diffuses
     hop by hop while the shared gbest remains a monitoring/final-answer
     flush target only.
+
+    ``telemetry`` mirrors ``_make_sync_kernel``: an aliased int32 SMEM
+    counter buffer rides as the last operand, accumulating the chunk's
+    local-queue updates and pbest improvements plus the chunk-exit
+    publication, per swarm. Python-gated — off means the untouched jaxpr.
     """
     def kernel(*refs, nb, sync_every, w, c1, c2, d_real, rule, topology,
                statics):
@@ -1085,13 +1191,23 @@ def _make_async_kernel(*, batched=False, hetero=False):
             rest = refs[1 + 8:]
         if hetero:
             branches = statics
-            (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
-             lp_ref, lf_ref) = rest
+            if telemetry:
+                # rest[0] is the aliased counts-input placeholder
+                (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
+                 lp_ref, lf_ref, cnt_ref) = rest[1:]
+            else:
+                (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
+                 lp_ref, lf_ref) = rest
         else:
             nc = statics["n_consts"]
             const_vals = tuple(r[...] for r in rest[:nc])
-            (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
-             lp_ref, lf_ref) = rest[nc:]
+            if telemetry:
+                # rest[nc] is the aliased counts-input placeholder
+                (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
+                 lp_ref, lf_ref, cnt_ref) = rest[nc + 1:]
+            else:
+                (pos_ref, vel_ref, pbp_ref, pbf_ref, gp_ref, gf_ref,
+                 lp_ref, lf_ref) = rest[nc:]
             min_pos, max_pos, max_v, fitness, proj, viol, pin = \
                 _resolve_statics(statics, const_vals)
         # --- grid coordinates, RNG counters, local/global slots
@@ -1149,22 +1265,26 @@ def _make_async_kernel(*, batched=False, hetero=False):
                         lp_, lf_, w=w, c1=c1, c2=c2, min_pos=min_pos,
                         max_pos=max_pos, max_v=max_v, d_real=d_real,
                         fitness=fitness, project=proj, viol=None, pin=pin,
-                        rule=rule)
+                        rule=rule, counts=telemetry)
 
                 return branch
 
-            pos, vel, pbp, pbf, lp, lf = lax.switch(
+            out = lax.switch(
                 fids_ref[s], [mk(st) for st in branches],
                 (pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...],
                  lp, lf))
         else:
-            pos, vel, pbp, pbf, lp, lf = _async_chunk_body(
+            out = _async_chunk_body(
                 seed, it0, sync_every, base,
                 pos_ref[...], vel_ref[...], pbp_ref[...], pbf_ref[...],
                 lp, lf, w=w, c1=c1, c2=c2, min_pos=min_pos,
                 max_pos=max_pos, max_v=max_v, d_real=d_real,
                 fitness=fitness, project=proj, viol=viol, pin=pin,
-                rule=rule)
+                rule=rule, counts=telemetry)
+        if telemetry:
+            pos, vel, pbp, pbf, lp, lf, nq, nimp = out
+        else:
+            pos, vel, pbp, pbf, lp, lf = out
         pos_ref[...] = pos
         vel_ref[...] = vel
         pbp_ref[...] = pbp
@@ -1179,6 +1299,17 @@ def _make_async_kernel(*, batched=False, hetero=False):
         # rare improvement (the paper's occasional lock acquisition). With
         # an lbest topology this is the monitoring/final-answer flush; the
         # entry refresh above never reads it back.
+        if telemetry:
+            # Fold the chunk's event counts before the publish mutates
+            # gf_ref: publications counts shared-slot writes (the lock
+            # acquisitions), queue_updates the block-local folds — their
+            # ratio is the paper's contention-avoidance story measured.
+            c0 = 3 * gslot
+            pub = (lf > gf_ref[gslot]).astype(jnp.int32)
+            cnt_ref[c0] = cnt_ref[c0] + nq
+            cnt_ref[c0 + 1] = cnt_ref[c0 + 1] + pub
+            cnt_ref[c0 + 2] = cnt_ref[c0 + 2] + nimp
+
         @pl.when(lf > gf_ref[gslot])
         def _publish():
             gf_ref[gslot] = lf
@@ -1187,14 +1318,22 @@ def _make_async_kernel(*, batched=False, hetero=False):
     kernel.__name__ = (
         "_hetero_fused_async_batch_kernel" if hetero else
         "_fused_async_batch_kernel" if batched else "_fused_async_kernel")
+    if telemetry:
+        kernel.__name__ += "_tel"
     return kernel
 
 
-# The three asynchronous kernel bodies: instantiations of the scaffold.
+# The three asynchronous kernel bodies: instantiations of the scaffold,
+# plus their telemetry (counter-carrying) twins.
 _fused_async_kernel = _make_async_kernel()
 _fused_async_batch_kernel = _make_async_kernel(batched=True)
 _hetero_fused_async_batch_kernel = _make_async_kernel(batched=True,
                                                       hetero=True)
+_fused_async_kernel_tel = _make_async_kernel(telemetry=True)
+_fused_async_batch_kernel_tel = _make_async_kernel(batched=True,
+                                                   telemetry=True)
+_hetero_fused_async_batch_kernel_tel = _make_async_kernel(
+    batched=True, hetero=True, telemetry=True)
 
 
 def _async_local_spec(topology, dpad, nb_total, index_map_own):
@@ -1210,7 +1349,7 @@ def _async_local_spec(topology, dpad, nb_total, index_map_own):
 def fused_async_call(n: int, d: int, iters: int, block_n: int,
                      sync_every: int, dtype, *, w, c1, c2, min_pos, max_pos,
                      max_v, fitness, rule="pso", topology="gbest",
-                     interpret=True):
+                     interpret=True, telemetry=False):
     """Build the asynchronous queue-lock pallas_call (grid (blocks, chunks)).
 
     Args (runtime): scal[2]i32, pos/vel/pbest_pos [Dpad,N], pbest_fit [1,N],
@@ -1219,7 +1358,8 @@ def fused_async_call(n: int, d: int, iters: int, block_n: int,
     Returns the same eight state arrays after ``iters`` iterations. The
     caller seeds local_pos/local_fit from the shared gbest (one column/slot
     per block); ``iters`` must be a multiple of ``sync_every`` (the ops
-    wrapper splits a remainder into a second call).
+    wrapper splits a remainder into a second call). ``telemetry`` appends
+    an aliased counts[3]i32 operand — see repro.telemetry.
     """
     assert n % block_n == 0, (n, block_n)
     assert iters % sync_every == 0, (iters, sync_every)
@@ -1229,7 +1369,8 @@ def fused_async_call(n: int, d: int, iters: int, block_n: int,
     st, consts = lower_statics(fitness, d=d, dpad=dpad, bn=block_n,
                                dtype=dtype, min_pos=min_pos,
                                max_pos=max_pos, max_v=max_v)
-    kern = functools.partial(_fused_async_kernel, nb=nb,
+    body = _fused_async_kernel_tel if telemetry else _fused_async_kernel
+    kern = functools.partial(body, nb=nb,
                              sync_every=sync_every, w=w, c1=c1, c2=c2,
                              d_real=d, rule=_kernel_rule(rule),
                              topology=topology, statics=st)
@@ -1238,37 +1379,48 @@ def fused_async_call(n: int, d: int, iters: int, block_n: int,
     gpc = pl.BlockSpec((dpad, 1), lambda b, c: (0, 0))
     lpc = _async_local_spec(topology, dpad, nb, lambda b, c: (0, b))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    in_specs = [smem,                                         # scal
+                mat, mat, mat, row, gpc, smem, lpc, smem] \
+        + _const_specs(consts)
+    out_specs = [mat, mat, mat, row, gpc, smem, lpc, smem]
+    out_shape = [
+        jax.ShapeDtypeStruct((dpad, n), dtype),               # pos
+        jax.ShapeDtypeStruct((dpad, n), dtype),               # vel
+        jax.ShapeDtypeStruct((dpad, n), dtype),               # pbest_pos
+        jax.ShapeDtypeStruct((1, n), dtype),                  # pbest_fit
+        jax.ShapeDtypeStruct((dpad, 1), dtype),               # gbest_pos
+        jax.ShapeDtypeStruct((1,), dtype),                    # gbest_fit
+        jax.ShapeDtypeStruct((dpad, nb), dtype),              # local_pos
+        jax.ShapeDtypeStruct((nb,), dtype),                   # local_fit
+    ]
+    aliases = {1: 0, 2: 1, 3: 2, 4: 3, 5: 4, 6: 5, 7: 6, 8: 7}
+    if telemetry:
+        in_specs.append(smem)                                 # counts in
+        out_specs.append(smem)
+        out_shape.append(jax.ShapeDtypeStruct((3,), jnp.int32))
+        aliases[9 + len(consts)] = 8
     call = pl.pallas_call(
         kern,
         grid=(nb, chunks),
-        in_specs=[smem,                                       # scal
-                  mat, mat, mat, row, gpc, smem, lpc, smem]
-                 + _const_specs(consts),
-        out_specs=[mat, mat, mat, row, gpc, smem, lpc, smem],
-        out_shape=[
-            jax.ShapeDtypeStruct((dpad, n), dtype),           # pos
-            jax.ShapeDtypeStruct((dpad, n), dtype),           # vel
-            jax.ShapeDtypeStruct((dpad, n), dtype),           # pbest_pos
-            jax.ShapeDtypeStruct((1, n), dtype),              # pbest_fit
-            jax.ShapeDtypeStruct((dpad, 1), dtype),           # gbest_pos
-            jax.ShapeDtypeStruct((1,), dtype),                # gbest_fit
-            jax.ShapeDtypeStruct((dpad, nb), dtype),          # local_pos
-            jax.ShapeDtypeStruct((nb,), dtype),               # local_fit
-        ],
-        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4, 6: 5,
-                              7: 6, 8: 7},
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY)),
         interpret=interpret,
         name="cupso_fused_queue_lock_async",
     )
+    if telemetry:
+        return lambda *args: call(*args[:-1], *consts, args[-1])
     return lambda *args: call(*args, *consts)
 
 
 def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
                            block_n: int, sync_every: int, dtype, *,
                            w, c1, c2, min_pos, max_pos, max_v, fitness,
-                           rule="pso", topology="gbest", interpret=True):
+                           rule="pso", topology="gbest", interpret=True,
+                           telemetry=False):
     """Batched async queue-lock: grid (swarms, blocks, chunks).
 
     Args (runtime): seeds[S]i32, iterations[S]i32,
@@ -1277,7 +1429,8 @@ def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
                     local_pos [Dpad, S*nb], local_fit [S*nb]
     Swarm-major then block-major: swarm s's block b runs its whole iteration
     span while resident, exactly like a standalone ``fused_async_call`` —
-    row s is bit-identical to the single-swarm async kernel.
+    row s is bit-identical to the single-swarm async kernel. ``telemetry``
+    appends an aliased counts[3*S]i32 operand.
     """
     assert n % block_n == 0, (n, block_n)
     assert iters % sync_every == 0, (iters, sync_every)
@@ -1287,7 +1440,9 @@ def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
     st, consts = lower_statics(fitness, d=d, dpad=dpad, bn=block_n,
                                dtype=dtype, min_pos=min_pos,
                                max_pos=max_pos, max_v=max_v)
-    kern = functools.partial(_fused_async_batch_kernel, nb=nb,
+    body = (_fused_async_batch_kernel_tel if telemetry
+            else _fused_async_batch_kernel)
+    kern = functools.partial(body, nb=nb,
                              sync_every=sync_every, w=w, c1=c1, c2=c2,
                              d_real=d, rule=_kernel_rule(rule),
                              topology=topology, statics=st)
@@ -1297,31 +1452,41 @@ def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
     lpc = _async_local_spec(topology, dpad, s_cnt * nb,
                             lambda s, b, c: (0, s * nb + b))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    in_specs = [smem, smem,                                   # seeds, iters
+                mat, mat, mat, row, gpc, smem, lpc, smem] \
+        + _const_specs(consts)
+    out_specs = [mat, mat, mat, row, gpc, smem, lpc, smem]
+    out_shape = [
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # pos
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # vel
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # pbest_pos
+        jax.ShapeDtypeStruct((1, s_cnt * n), dtype),          # pbest_fit
+        jax.ShapeDtypeStruct((dpad, s_cnt), dtype),           # gbest_pos
+        jax.ShapeDtypeStruct((s_cnt,), dtype),                # gbest_fit
+        jax.ShapeDtypeStruct((dpad, s_cnt * nb), dtype),      # local_pos
+        jax.ShapeDtypeStruct((s_cnt * nb,), dtype),           # local_fit
+    ]
+    aliases = {2: 0, 3: 1, 4: 2, 5: 3, 6: 4, 7: 5, 8: 6, 9: 7}
+    if telemetry:
+        in_specs.append(smem)                                 # counts in
+        out_specs.append(smem)
+        out_shape.append(jax.ShapeDtypeStruct((3 * s_cnt,), jnp.int32))
+        aliases[10 + len(consts)] = 8
     call = pl.pallas_call(
         kern,
         grid=(s_cnt, nb, chunks),
-        in_specs=[smem, smem,                                 # seeds, iters
-                  mat, mat, mat, row, gpc, smem, lpc, smem]
-                 + _const_specs(consts),
-        out_specs=[mat, mat, mat, row, gpc, smem, lpc, smem],
-        out_shape=[
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pos
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # vel
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pbest_pos
-            jax.ShapeDtypeStruct((1, s_cnt * n), dtype),      # pbest_fit
-            jax.ShapeDtypeStruct((dpad, s_cnt), dtype),       # gbest_pos
-            jax.ShapeDtypeStruct((s_cnt,), dtype),            # gbest_fit
-            jax.ShapeDtypeStruct((dpad, s_cnt * nb), dtype),  # local_pos
-            jax.ShapeDtypeStruct((s_cnt * nb,), dtype),       # local_fit
-        ],
-        input_output_aliases={2: 0, 3: 1, 4: 2, 5: 3, 6: 4, 7: 5,
-                              8: 6, 9: 7},
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY,
                                  pltpu.ARBITRARY)),
         interpret=interpret,
         name="cupso_fused_queue_lock_async_batch",
     )
+    if telemetry:
+        return lambda *args: call(*args[:-1], *consts, args[-1])
     return lambda *args: call(*args, *consts)
 
 
@@ -1335,12 +1500,14 @@ def fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
 def hetero_fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
                                   block_n: int, sync_every: int, dtype, *,
                                   w, c1, c2, members, rule="pso",
-                                  topology="gbest", interpret=True):
+                                  topology="gbest", interpret=True,
+                                  telemetry=False):
     """Batched async queue-lock with a per-swarm problem (kernel 4h).
 
     Args (runtime): seeds[S]i32, iterations[S]i32, fids[S]i32, then the
     eight state arrays of ``fused_async_batch_call``. ``members`` as in
-    ``hetero_fused_batch_call``.
+    ``hetero_fused_batch_call``. ``telemetry`` appends an aliased
+    counts[3*S]i32 operand.
     """
     assert n % block_n == 0, (n, block_n)
     assert iters % sync_every == 0, (iters, sync_every)
@@ -1349,7 +1516,9 @@ def hetero_fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
     dpad = pad_dim(d)
     branches = _hetero_branches(members, d=d, dpad=dpad, bn=block_n,
                                 dtype=dtype)
-    kern = functools.partial(_hetero_fused_async_batch_kernel, nb=nb,
+    body = (_hetero_fused_async_batch_kernel_tel if telemetry
+            else _hetero_fused_async_batch_kernel)
+    kern = functools.partial(body, nb=nb,
                              sync_every=sync_every, w=w, c1=c1, c2=c2,
                              d_real=d, rule=_kernel_rule(rule),
                              topology=topology, statics=branches)
@@ -1359,24 +1528,32 @@ def hetero_fused_async_batch_call(s_cnt: int, n: int, d: int, iters: int,
     lpc = _async_local_spec(topology, dpad, s_cnt * nb,
                             lambda s, b, c: (0, s * nb + b))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    in_specs = [smem, smem, smem,                      # seeds, iters, fids
+                mat, mat, mat, row, gpc, smem, lpc, smem]
+    out_specs = [mat, mat, mat, row, gpc, smem, lpc, smem]
+    out_shape = [
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # pos
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # vel
+        jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),       # pbest_pos
+        jax.ShapeDtypeStruct((1, s_cnt * n), dtype),          # pbest_fit
+        jax.ShapeDtypeStruct((dpad, s_cnt), dtype),           # gbest_pos
+        jax.ShapeDtypeStruct((s_cnt,), dtype),                # gbest_fit
+        jax.ShapeDtypeStruct((dpad, s_cnt * nb), dtype),      # local_pos
+        jax.ShapeDtypeStruct((s_cnt * nb,), dtype),           # local_fit
+    ]
+    aliases = {3: 0, 4: 1, 5: 2, 6: 3, 7: 4, 8: 5, 9: 6, 10: 7}
+    if telemetry:
+        in_specs.append(smem)                                 # counts in
+        out_specs.append(smem)
+        out_shape.append(jax.ShapeDtypeStruct((3 * s_cnt,), jnp.int32))
+        aliases[11] = 8
     return pl.pallas_call(
         kern,
         grid=(s_cnt, nb, chunks),
-        in_specs=[smem, smem, smem,                    # seeds, iters, fids
-                  mat, mat, mat, row, gpc, smem, lpc, smem],
-        out_specs=[mat, mat, mat, row, gpc, smem, lpc, smem],
-        out_shape=[
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pos
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # vel
-            jax.ShapeDtypeStruct((dpad, s_cnt * n), dtype),   # pbest_pos
-            jax.ShapeDtypeStruct((1, s_cnt * n), dtype),      # pbest_fit
-            jax.ShapeDtypeStruct((dpad, s_cnt), dtype),       # gbest_pos
-            jax.ShapeDtypeStruct((s_cnt,), dtype),            # gbest_fit
-            jax.ShapeDtypeStruct((dpad, s_cnt * nb), dtype),  # local_pos
-            jax.ShapeDtypeStruct((s_cnt * nb,), dtype),       # local_fit
-        ],
-        input_output_aliases={3: 0, 4: 1, 5: 2, 6: 3, 7: 4, 8: 5,
-                              9: 6, 10: 7},
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY,
                                  pltpu.ARBITRARY)),

@@ -349,11 +349,18 @@ def queue_step_oracle(seed, iteration, pos, vel, pbp, pbf, gp, gf,
 
 def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                      iters: int, block_n: int, *, w, c1, c2, min_pos,
-                     max_pos, max_v, d_real: int, fitness, rule="pso"):
+                     max_pos, max_v, d_real: int, fitness, rule="pso",
+                     counters=None):
     """The fused queue-lock kernel's exact semantics, eagerly.
 
     Sequential (t, b) loop; gbest is updated in place so later blocks of the
     same iteration see it — mirroring TPU sequential grid execution.
+
+    ``counters``: an optional dict whose ``queue_updates`` /
+    ``publications`` / ``block_improvements`` keys are incremented at the
+    same program points the telemetry kernels count — the validation
+    oracle for ``repro.telemetry`` (one conditional guards both the queue
+    fold and the publication here, so the first two move together).
     """
     dpad, n = pos.shape
     nb = n // block_n
@@ -382,8 +389,16 @@ def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
             pbp[:, sl] = np.array(jnp.where(imp, p, bp))
             pos[:, sl] = np.array(p)
             vel[:, sl] = np.array(v)
+            if counters is not None and bool(jnp.any(imp)):
+                counters["block_improvements"] = (
+                    counters.get("block_improvements", 0) + 1)
             q_mask = fit > gf
             if bool(jnp.any(q_mask)):                 # rare publication
+                if counters is not None:
+                    counters["queue_updates"] = (
+                        counters.get("queue_updates", 0) + 1)
+                    counters["publications"] = (
+                        counters.get("publications", 0) + 1)
                 q = jnp.where(q_mask, fit, -jnp.inf)
                 bf = jnp.max(q)
                 lane_row = jnp.broadcast_to(
@@ -400,7 +415,8 @@ def run_fused_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
 def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                            iters: int, block_n: int, sync_every: int, *,
                            w, c1, c2, min_pos, max_pos, max_v, d_real: int,
-                           fitness, rule="pso", topology="gbest"):
+                           fitness, rule="pso", topology="gbest",
+                           counters=None):
     """The async queue-lock kernel's exact semantics, eagerly.
 
     Block-major: block b runs its ENTIRE iteration span (all chunks of
@@ -416,6 +432,12 @@ def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
     order as the kernel's ``kernel_neighbor_ids`` loop) instead of pulling
     the shared gbest, which remains a chunk-exit flush target only —
     mirroring the kernel's block-major diffusion schedule bit-for-bit.
+
+    ``counters`` mirrors ``run_fused_oracle``: ``queue_updates`` counts
+    inner iterations with a non-empty block-local queue, ``publications``
+    counts chunk-exit shared-gbest writes, ``block_improvements`` counts
+    (iteration, block) pbest-fold events — the async telemetry kernels'
+    validation oracle.
     """
     dpad, n = pos.shape
     nb = n // block_n
@@ -465,8 +487,14 @@ def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                     pbp[:, sl] = np.array(jnp.where(imp, p, bp))
                     pos[:, sl] = np.array(p)
                     vel[:, sl] = np.array(v)
+                    if counters is not None and bool(jnp.any(imp)):
+                        counters["block_improvements"] = (
+                            counters.get("block_improvements", 0) + 1)
                     q_mask = fit > lf[b]
                     if bool(jnp.any(q_mask)):    # local publication
+                        if counters is not None:
+                            counters["queue_updates"] = (
+                                counters.get("queue_updates", 0) + 1)
                         q = jnp.where(q_mask, fit, -jnp.inf)
                         best = jnp.max(q)
                         lane_row = jnp.broadcast_to(
@@ -479,6 +507,9 @@ def run_fused_async_oracle(seed, base_iter, pos, vel, pbp, pbf, gp, gf,
                                         axis=1, keepdims=True)
                 # chunk exit: rare cross-block publication
                 if float(lf[b]) > float(gf):
+                    if counters is not None:
+                        counters["publications"] = (
+                            counters.get("publications", 0) + 1)
                     gf = lf[b]
                     gp = lp[b]
     lp_arr = jnp.concatenate(lp, axis=1)

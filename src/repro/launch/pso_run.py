@@ -84,6 +84,19 @@ def main():
                     help="how constraints are enforced (core.constraints)")
     ap.add_argument("--penalty-weight", type=float, default=1000.0,
                     help="penalty mode: weight per unit violation")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="thread the in-kernel contention counters "
+                         "through the run (requires --kernel; "
+                         "docs/observability.md)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write a Perfetto-loadable trace.json of the "
+                         "run's solve chunks here")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write a Prometheus text exposition (chunk "
+                         "latency + kernel counters) here")
+    ap.add_argument("--profile-dir", default="", metavar="DIR",
+                    help="also capture a jax.profiler trace into DIR "
+                         "(no-op when the profiler is unavailable)")
     args = ap.parse_args()
 
     if args.fitness not in list_problems():
@@ -122,6 +135,38 @@ def main():
         # async kernel + ring composition is a TPU-hardware follow-on)
         ap.error("--kernel --islands does not support --variant async; "
                  "drop --kernel (the ring uses the jnp async local loop)")
+    if args.telemetry and not args.kernel:
+        ap.error("--telemetry counts inside the fused Pallas kernels; "
+                 "add --kernel (with --variant queue_lock or async)")
+    if args.telemetry and args.islands:
+        ap.error("--telemetry is single-device; drop --islands")
+    trace = metrics = tel = None
+    if args.trace_out:
+        from repro.telemetry import TraceWriter
+        trace = TraceWriter()
+    if args.metrics_out:
+        from repro.serving import ServingMetrics
+        metrics = ServingMetrics()
+
+    def note_chunk(done, n, t_start):
+        """Record one solve chunk on the trace / metrics sinks."""
+        if trace is None and metrics is None:
+            return
+        jax.block_until_ready(state.gbest_fit)
+        dur_us = (time.perf_counter() - t_start) * 1e6
+        if trace is not None:
+            trace.complete(f"chunk @{done}", t_start * 1e6, dur_us,
+                           process="solver", thread="chunks", cat="solve",
+                           args={"iters": n, "variant": args.variant})
+        if metrics is not None:
+            metrics.observe("chunk_us", dur_us)
+            metrics.inc("chunks")
+
+    import contextlib
+    prof = contextlib.ExitStack()
+    if args.profile_dir:
+        from repro.telemetry import profiler_session
+        prof.enter_context(profiler_session(args.profile_dir))
     t0 = time.time()
     if args.islands:
         devs = jax.devices()
@@ -147,16 +192,25 @@ def main():
                                            run_queue_lock_fused_async)
             if args.variant == "async":
                 step_chunk = lambda st, k: run_queue_lock_fused_async(
-                    cfg, st, iters=k, sync_every=args.sync_every)
+                    cfg, st, iters=k, sync_every=args.sync_every,
+                    telemetry=args.telemetry)
             else:
                 step_chunk = lambda st, k: run_queue_lock_fused(
-                    cfg, st, iters=k)
+                    cfg, st, iters=k, telemetry=args.telemetry)
             chunk = args.ckpt_every or args.iters
             done = 0
             while done < args.iters:
                 n = min(chunk, args.iters - done)
-                state = step_chunk(state, n)
+                tc = time.perf_counter()
+                if args.telemetry:
+                    from repro.telemetry import KernelCounters
+                    state, cnt = step_chunk(state, n)
+                    c = KernelCounters.from_array(cnt)
+                    tel = c if tel is None else tel + c
+                else:
+                    state = step_chunk(state, n)
                 done += n
+                note_chunk(done, n, tc)
                 if args.ckpt_dir:
                     ckpt.save(args.ckpt_dir, done, gather_swarm(state))
         else:
@@ -164,11 +218,14 @@ def main():
             done = 0
             while done < args.iters:
                 n = min(chunk, args.iters - done)
+                tc = time.perf_counter()
                 state = run(cfg, state, n, args.variant,
                             sync_every=args.sync_every)
                 done += n
+                note_chunk(done, n, tc)
                 if args.ckpt_dir:
                     ckpt.save(args.ckpt_dir, done, gather_swarm(state))
+    prof.close()
     gf = float(state.gbest_fit)
     dt = time.time() - t0
     extra = ""
@@ -179,6 +236,17 @@ def main():
     print(f"gbest_fit={gf:.6g}  {extra}iters={args.iters}  "
           f"particles={args.particles}  dim={args.dim}  "
           f"wall={dt:.3f}s  ({1e6*dt/args.iters:.1f} us/iter)")
+    if tel is not None:
+        d = tel.as_dict()
+        print("telemetry: " + "  ".join(f"{k}={v}" for k, v in d.items()))
+    if trace is not None:
+        trace.write(args.trace_out)
+        print(f"trace: {args.trace_out}")
+    if metrics is not None:
+        with open(args.metrics_out, "w") as f:
+            f.write(metrics.prometheus(
+                kernel_counters=None if tel is None else tel.as_dict()))
+        print(f"metrics: {args.metrics_out}")
     return 0
 
 

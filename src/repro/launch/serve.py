@@ -151,6 +151,9 @@ class SolveResult:
     gbest_pos: np.ndarray
     batch_size: int          # padded batch the request rode in
     error: Optional[BaseException] = None  # set when the solve raised
+    history: Optional[object] = None  # repro.History: gbest-vs-iteration
+    # series sampled at the lane's chunk boundaries (continuous scheduler
+    # with record_history=True; None elsewhere)
 
     @property
     def ok(self) -> bool:
@@ -464,6 +467,20 @@ class SolveServer:
             doc["metrics"] = self.metrics.snapshot()
         return doc
 
+    def prometheus(self, *, prefix: str = "repro") -> str:
+        """This server's serving state as a Prometheus text exposition
+        (``repro.telemetry.prometheus_text``). With a metrics sink
+        attached, renders its spans and counters; without one, renders the
+        ServeStats counters and batch fill."""
+        if self.metrics is not None:
+            return self.metrics.prometheus(prefix=prefix)
+        from repro.telemetry import prometheus_text
+        counters = {k: v for k, v in self.stats.as_dict().items()
+                    if k != "batch_fill"}
+        return prometheus_text(
+            {"counters": counters, "batch_fill": self.stats.batch_fill,
+             "spans": {}}, prefix=prefix)
+
 
 def main() -> int:
     ap = argparse.ArgumentParser()
@@ -480,6 +497,9 @@ def main() -> int:
                     help="legacy per-problem content-hash grouping")
     ap.add_argument("--autotune", action="store_true",
                     help="roofline-tuned sync_every + bucket ladder")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text exposition of the "
+                         "serving metrics here after the flush")
     args = ap.parse_args()
     # A mixed workload: four built-in objectives over two solve shapes. With
     # registry coalescing each shape is ONE heterogeneous dispatch; with
@@ -495,12 +515,20 @@ def main() -> int:
                          sync_every=args.sync_every)
             for i, (f, d, n) in ((i, mix[i % len(mix)])
                                  for i in range(args.requests))]
+    metrics = None
+    if args.metrics_out:
+        from repro.serving import ServingMetrics
+        metrics = ServingMetrics()
     srv = SolveServer(max_batch=args.max_batch, backend=args.backend,
                       coalesce_registry=not args.no_coalesce,
-                      autotune=args.autotune)
+                      autotune=args.autotune, metrics=metrics)
     t0 = time.time()
     results = srv.solve_all(reqs)
     dt = time.time() - t0
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(srv.prometheus())
+        print(f"metrics -> {args.metrics_out}")
     for r in results[:4]:
         print(f"req({r.request.fitness}, dim={r.request.dim}, "
               f"seed={r.request.seed}) gbest_fit={r.gbest_fit:.6g} "

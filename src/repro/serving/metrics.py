@@ -136,6 +136,15 @@ class ServingMetrics:
             json.dump(self.snapshot(), f, indent=2, sort_keys=True)
             f.write("\n")
 
+    def prometheus(self, *, prefix: str = "repro",
+                   kernel_counters=None) -> str:
+        """This sink rendered as a Prometheus text exposition (0.0.4) —
+        see ``repro.telemetry.prometheus_text``. ``kernel_counters``
+        optionally appends the in-kernel contention counts."""
+        from repro.telemetry import prometheus_text
+        return prometheus_text(self.snapshot(), prefix=prefix,
+                               kernel_counters=kernel_counters)
+
     def merge_from(self, other: Optional["ServingMetrics"]) -> None:
         """Fold another sink's counts in (e.g. a drained worker's)."""
         if other is None:

@@ -95,6 +95,7 @@ class _Active:
     done: int = 0            # iterations applied so far
     submitted_us: float = 0.0
     admitted_us: float = 0.0
+    history: Optional[list] = None   # [(iteration, gbest_fit), ...] samples
 
 
 class _Lane:
@@ -103,6 +104,7 @@ class _Lane:
     def __init__(self, key: Tuple, cfg: PSOConfig, width: int,
                  sync_every: int, hetero: bool, table=None):
         self.key = key
+        self.uid = 0                           # display id (trace rows)
         self.cfg = cfg.resolved()
         self.width = width
         self.sync_every = sync_every
@@ -150,6 +152,13 @@ class ContinuousScheduler:
     ladder's last rung — the point where the cost model prices per-row
     gains as flattened, so admission never grows a lane past what pays.
 
+    Telemetry (``repro.telemetry``): ``trace`` (a ``TraceWriter``) records
+    the serving timeline — one Perfetto row per lane with a span per
+    dispatched chunk, admit/eject instants, a per-request span, and a
+    lane-fill counter track. ``record_history=True`` samples every lane
+    row's gbest at its chunk boundaries onto ``SolveResult.history``
+    (lane-riding async requests only; standalone fallbacks report None).
+
     Single-threaded and synchronous like ``SolveServer``: ``submit`` +
     ``step``/``drain`` (or one-shot ``run``).
     """
@@ -158,11 +167,14 @@ class ContinuousScheduler:
                  coalesce_registry: bool = True,
                  compile_cache: Optional[CompileCache] = None,
                  autotune: bool = False,
-                 metrics: Optional[ServingMetrics] = None):
+                 metrics: Optional[ServingMetrics] = None,
+                 trace=None, record_history: bool = False):
         self.lane_width = max(MIN_VALIDATED_SWARMS, lane_width)
         self.coalesce_registry = coalesce_registry
         self.autotune = autotune
         self.metrics = metrics or ServingMetrics()
+        self.trace = trace
+        self.record_history = record_history
         self.compile_cache = compile_cache
         if compile_cache is not None and compile_cache.metrics is None:
             compile_cache.metrics = self.metrics
@@ -217,6 +229,7 @@ class ContinuousScheduler:
                             update_rule=r.rule,
                             topology=r._topology_key())
         lane = _Lane(key, cfg, self._width_for(r), r.sync_every, hetero)
+        lane.uid = len(self._lanes)
         self._lanes[key] = lane
         return lane
 
@@ -291,6 +304,14 @@ class ContinuousScheduler:
         self.metrics.inc("admitted")
         if lane.chunks_dispatched:
             self.metrics.inc("row_swaps")
+        if self.record_history:
+            a.history = []
+        if self.trace is not None:
+            self.trace.instant(
+                f"admit t{a.ticket}", a.admitted_us, process="serving",
+                thread=f"lane {lane.uid}", cat="admission",
+                args={"slot": slot, "fitness": str(r.fitness),
+                      "iters": r.iters})
         lane.slots[slot] = a
 
     # -- standalone fallbacks ---------------------------------------------
@@ -300,7 +321,14 @@ class ContinuousScheduler:
         cfg = PSOConfig(dim=r.dim, particle_cnt=r.particle_cnt,
                         fitness=r.fitness, dtype=r.dtype,
                         update_rule=r.rule, topology=r._topology_key())
+        t0 = _now_us()
         st = solve(cfg, r.seed, r.iters, r.variant, r.sync_every)
+        if self.trace is not None:
+            self.trace.complete(
+                f"standalone t{a.ticket}", t0, _now_us() - t0,
+                process="serving", thread="standalone", cat="solve",
+                args={"fitness": str(r.fitness), "variant": r.variant,
+                      "iters": r.iters})
         self.metrics.inc("standalone_solves")
         self._finish(a, float(st.gbest_fit), np.asarray(st.gbest_pos),
                      batch_size=1)
@@ -320,6 +348,13 @@ class ContinuousScheduler:
                            sync_every=lane.sync_every, n_blocks=lane.nb)
         lane.slots[slot] = None
         self.metrics.inc("tail_ejections")
+        if a.history is not None:
+            a.history.append((a.request.iters, float(st.gbest_fit)))
+        if self.trace is not None:
+            self.trace.instant(
+                f"eject t{a.ticket}", _now_us(), process="serving",
+                thread=f"lane {lane.uid}", cat="admission",
+                args={"slot": slot, "remainder": rem})
         self._finish(a, float(st.gbest_fit), np.asarray(st.gbest_pos),
                      batch_size=lane.width)
 
@@ -329,9 +364,23 @@ class ContinuousScheduler:
         self.metrics.observe("solve_us", now - a.admitted_us)
         self.metrics.observe("e2e_us", now - a.submitted_us)
         self.metrics.inc("completed")
+        hist = None
+        if a.history:
+            from repro.api import History
+            its, fits = zip(*a.history)
+            hist = History(iteration=np.asarray(its, dtype=np.int64),
+                           gbest_fit=np.asarray(fits), violation=None)
+        if self.trace is not None:
+            self.trace.complete(
+                f"request t{a.ticket}", a.submitted_us,
+                now - a.submitted_us, process="requests",
+                thread=f"ticket {a.ticket}", cat="request",
+                args={"fitness": str(a.request.fitness),
+                      "iters": a.request.iters,
+                      "batch_size": batch_size, "gbest_fit": gf})
         self._results[a.ticket] = SolveResult(
             request=a.request, gbest_fit=gf, gbest_pos=gp,
-            batch_size=batch_size)
+            batch_size=batch_size, history=hist)
 
     # -- dispatch ----------------------------------------------------------
     def _lane_program(self, lane: _Lane):
@@ -366,15 +415,29 @@ class ContinuousScheduler:
         else:
             out = program(lane.batch)
         out.gbest_fit.block_until_ready()
-        self.metrics.observe("dispatch_us", _now_us() - t0)
+        dur = _now_us() - t0
+        self.metrics.observe("dispatch_us", dur)
         lane.batch = out
         lane.chunks_dispatched += 1
         self.metrics.inc("dispatches")
         self.metrics.inc("lane_slots", lane.width)
         self.metrics.inc("lane_active_slots", lane.active_count)
-        for a in lane.slots:
+        if self.trace is not None:
+            self.trace.complete(
+                f"chunk {lane.chunks_dispatched}", t0, dur,
+                process="serving", thread=f"lane {lane.uid}",
+                cat="dispatch",
+                args={"active": lane.active_count, "width": lane.width,
+                      "sync_every": lane.sync_every})
+            self.trace.counter(f"lane {lane.uid} fill", t0,
+                               {"active": lane.active_count,
+                                "idle": lane.width - lane.active_count})
+        for i, a in enumerate(lane.slots):
             if a is not None:
                 a.done += lane.sync_every
+                if a.history is not None:
+                    a.history.append((a.done,
+                                      float(lane.batch.gbest_fit[i])))
 
     # -- the loop ----------------------------------------------------------
     def step(self) -> Dict[int, SolveResult]:

@@ -1,0 +1,85 @@
+"""Kernel contention counters: layout + host-side view.
+
+The fused Pallas kernels (``repro.kernels.pso_step``) optionally carry an
+extra aliased int32 SMEM buffer of ``SLOTS_PER_SWARM`` slots per swarm:
+
+    [3*s + 0]  queue_updates       — iterations (sync) / inner iterations
+                                     x blocks (async) where at least one
+                                     particle beat the working best and a
+                                     queue fold ran
+    [3*s + 1]  publications        — writes that actually landed in the
+                                     shared gbest slot: the sync kernels'
+                                     ``pl.when(any(fit > gbest))`` body,
+                                     the async kernels' chunk-exit
+                                     ``pl.when(local_best > gbest)``
+    [3*s + 2]  block_improvements  — (iteration, block) pairs where at
+                                     least one particle improved its own
+                                     pbest (the Alg.2 fold did real work)
+
+For the sync queue-lock kernel one conditional guards both the queue fold
+and the publication, so ``queue_updates == publications`` by construction;
+the async kernel splits them (block-local updates are frequent, shared
+publications happen at most once per ``sync_every`` chunk per block) —
+their ratio is the paper's contention-avoidance story as a measured
+number. The eager oracles in ``repro.kernels.ref`` count the same events
+at the same program points; tests/test_telemetry.py asserts equality.
+
+Counts accumulate across a whole fused call (all iterations, all blocks)
+and, because the buffer is donated/aliased like the state operands, across
+chunked calls when the caller threads the array back in.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+#: Slot names, in buffer order.
+COUNTER_NAMES = ("queue_updates", "publications", "block_improvements")
+
+#: int32 slots per swarm in the kernel counter buffer.
+SLOTS_PER_SWARM = len(COUNTER_NAMES)
+
+
+def zero_counts(swarms: int = 1):
+    """Fresh kernel counter buffer: ``[SLOTS_PER_SWARM * swarms]`` int32.
+
+    Lazy jax import so the dataclass side of this module stays usable in
+    pure-host contexts (exporters, docs tooling).
+    """
+    import jax.numpy as jnp
+    return jnp.zeros((SLOTS_PER_SWARM * swarms,), jnp.int32)
+
+
+@dataclass(frozen=True)
+class KernelCounters:
+    """Host-side view of one swarm's kernel counter slots."""
+
+    queue_updates: int
+    publications: int
+    block_improvements: int
+
+    @classmethod
+    def from_array(cls, arr) -> "KernelCounters":
+        """[SLOTS_PER_SWARM] buffer -> one swarm's counters."""
+        a = np.asarray(arr).reshape(-1)
+        if a.shape[0] != SLOTS_PER_SWARM:
+            raise ValueError(
+                f"expected {SLOTS_PER_SWARM} counter slots, got {a.shape}")
+        return cls(*(int(v) for v in a))
+
+    @classmethod
+    def rows(cls, arr) -> List["KernelCounters"]:
+        """[S * SLOTS_PER_SWARM] or [S, SLOTS_PER_SWARM] -> per-swarm."""
+        a = np.asarray(arr).reshape(-1, SLOTS_PER_SWARM)
+        return [cls(*(int(v) for v in row)) for row in a]
+
+    def as_dict(self) -> Dict[str, int]:
+        return {n: getattr(self, n) for n in COUNTER_NAMES}
+
+    def __add__(self, other: "KernelCounters") -> "KernelCounters":
+        return KernelCounters(
+            self.queue_updates + other.queue_updates,
+            self.publications + other.publications,
+            self.block_improvements + other.block_improvements)

@@ -219,17 +219,21 @@ def test_record_history_restricts_auto_to_jnp(tmp_path, monkeypatch):
     assert s.backend == "jnp"
 
 
-def test_auto_history_warns_once():
-    import repro.api as api
-    api._WARNED_HISTORY_FORCES_JNP = False
+def test_auto_history_no_longer_forces_jnp():
+    # record_history used to force backend="auto" to jnp (with a one-time
+    # warning); the kernel backend now records history by chunking its
+    # launch at sync points, so auto resolves by the plain device rule and
+    # never warns.
     m = repro.Method(backend="auto", variant="queue_lock",
                      record_history=True)
-    with pytest.warns(UserWarning, match="record_history"):
-        assert m.resolve_backend() == "jnp"
     import warnings
     with warnings.catch_warnings():
-        warnings.simplefilter("error")       # second call must be silent
-        assert m.resolve_backend() == "jnp"
+        warnings.simplefilter("error")
+        assert m.resolve_backend() in ("jnp", "kernel")
+    # the explicit kernel pin is accepted now, too
+    mk = repro.Method(backend="kernel", variant="queue_lock",
+                      record_history=True)
+    assert mk.resolve_backend() == "kernel"
 
 
 # --------------------------------------------------------------------------
